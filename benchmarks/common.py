@@ -1,0 +1,232 @@
+"""Shared harness for the paper-table benchmarks.
+
+Trains a reduced BERT per synthetic-GLUE task (CPU-sized) with
+OUTLIER-SCALED INITIALIZATION: a few designated FFN-output columns start
+~40x larger, so training builds genuinely functional structured outliers in
+the residual stream — the same qualitative regime the paper diagnoses in
+pre-trained BERT (Fig. 2): per-tensor activation quantization then damages
+the task metric, and PEG / MP / QAT recover it.
+
+Checkpoints and table results are cached under benchmarks/results/.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantizationPolicy, QuantCtx, Mode
+from repro.core.pipeline import ptq
+from repro.data.synthetic import GLUE_SUITE, GLUETaskConfig, SyntheticGLUE
+from repro.models import bert
+from repro.optim import (adam_init, adam_update, apply_updates,
+                         linear_warmup_linear_decay)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+CKPT_DIR = os.path.join(RESULTS_DIR, "bert_ckpts")
+
+# Benchmark-scale BERT (CPU single-core budget).
+BENCH_CFG = dict(num_layers=3, d_model=64, num_heads=4, d_ff=256,
+                 vocab_size=1024, max_positions=64)
+OUTLIER_DIMS = (5, 21, 40, 59)          # spread over all 4 natural chunks
+OUTLIER_SCALE = 40.0
+TRAIN_STEPS = 250
+BATCH = 32
+SEQ = 32
+TRAIN_LR = 3e-3
+EVAL_EXAMPLES = 256
+
+
+def bench_cfg(task: GLUETaskConfig) -> bert.BertConfig:
+    return bert.BertConfig(num_labels=task.num_labels,
+                           regression=task.regression, **BENCH_CFG)
+
+
+def _task_src(task: GLUETaskConfig) -> SyntheticGLUE:
+    import dataclasses
+    return SyntheticGLUE(dataclasses.replace(task, seq_len=SEQ,
+                                             vocab_size=BENCH_CFG["vocab_size"]),
+                         seed=0)
+
+
+def init_with_outliers(cfg: bert.BertConfig, key):
+    params = bert.init_params(cfg, key)
+    for p in params["layers"]:
+        for j, dim in enumerate(OUTLIER_DIMS):
+            p["w_out"] = p["w_out"].at[:, dim].multiply(
+                OUTLIER_SCALE - 4.0 * j)
+    return params
+
+
+def train_task(task: GLUETaskConfig, *, steps: int = TRAIN_STEPS,
+               seed: int = 0, log=None) -> dict:
+    """Train (or load cached) tiny BERT for one task. Returns params."""
+    os.makedirs(CKPT_DIR, exist_ok=True)
+    path = os.path.join(CKPT_DIR, f"{task.name}_s{seed}.npz")
+    cfg = bench_cfg(task)
+    if os.path.exists(path):
+        raw = np.load(path, allow_pickle=True)
+        template = init_with_outliers(cfg, jax.random.PRNGKey(seed))
+        flat, treedef = jax.tree_util.tree_flatten(template)
+        leaves = [jnp.asarray(raw[f"leaf_{i}"]) for i in range(len(flat))]
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    src = _task_src(task)
+    params = init_with_outliers(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+    lr = linear_warmup_linear_decay(TRAIN_LR, steps)
+
+    @jax.jit
+    def step_fn(params, opt, batch):
+        loss, g = jax.value_and_grad(
+            lambda p: bert.loss_fn(cfg, p, batch))(params)
+        from repro.optim import clip_by_global_norm
+        g, _ = clip_by_global_norm(g, 1.0)   # outlier init needs clipping
+        upd, opt = adam_update(g, opt, params, lr=lr)
+        return apply_updates(params, upd), opt, loss
+
+    for i in range(steps):
+        b = src.batch(BATCH, i)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt, loss = step_fn(params, opt, batch)
+        if log and i % 50 == 0:
+            log(f"  [{task.name}] step {i} loss {float(loss):.4f}")
+
+    flat, _ = jax.tree_util.tree_flatten(params)
+    np.savez(path, **{f"leaf_{i}": np.asarray(x) for i, x in enumerate(flat)})
+    return params
+
+
+def eval_task(task: GLUETaskConfig, params,
+              ctx: Optional[QuantCtx] = None) -> float:
+    """Task metric (0-100) on held-out synthetic dev data."""
+    cfg = bench_cfg(task)
+    src = _task_src(task)
+    preds, labels = [], []
+    n_batches = EVAL_EXAMPLES // 64
+    for i in range(n_batches):
+        b = src.batch(64, 100_000 + i)     # disjoint index range from train
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        preds.append(np.asarray(bert.predict(cfg, params, batch, ctx=ctx)))
+        labels.append(b["labels"])
+    return src.metric(np.concatenate(preds), np.concatenate(labels))
+
+
+def calib_batches(task: GLUETaskConfig, n: int = 4, batch_size: int = 16):
+    src = _task_src(task)
+    out = []
+    for i in range(n):
+        b = src.batch(batch_size, 200_000 + i)
+        out.append({k: jnp.asarray(v) for k, v in b.items()})
+    return out
+
+
+def quantize_and_eval(task: GLUETaskConfig, params,
+                      policy: QuantizationPolicy,
+                      adaround_ffn: bool = False) -> float:
+    """Full PTQ pipeline -> dev metric."""
+    cfg = bench_cfg(task)
+    batches = calib_batches(task)
+
+    def fwd(p, b, ctx):
+        return bert.classify(cfg, p, b["tokens"],
+                             type_ids=b.get("type_ids"),
+                             pad_mask=b.get("pad_mask"), ctx=ctx)
+
+    adaround_sites = None
+    if adaround_ffn:
+        from repro.core.calibration import collect_ranges
+        states, tensors = collect_ranges(fwd, params, batches, policy)
+        adaround_sites = {}
+        for i, p in enumerate(params["layers"]):
+            x_in = tensors.get(f"layer{i}/ffn_in")
+            if x_in is not None:
+                adaround_sites[f"layer{i}/ffn/w_in"] = \
+                    (p["w_in"], x_in.reshape(-1, x_in.shape[-1]))
+
+    from repro.core.adaround import AdaRoundConfig
+    qm = ptq(fwd, params, batches, policy,
+             named_weights=bert.named_weight_sites(cfg, params),
+             adaround_sites=adaround_sites,
+             adaround_cfg=AdaRoundConfig(iterations=300, batch_size=128))
+    if qm.adarounded_weights:
+        import copy
+        params = jax.tree.map(lambda x: x, params)   # shallow copy tree
+        for site, w in qm.adarounded_weights.items():
+            i = int(site.split("/")[0].removeprefix("layer"))
+            params["layers"][i]["w_in"] = w
+            # adarounded weights are pre-quantized: drop their weight state
+            qm.weight_state.pop(site, None)
+    return eval_task(task, params, qm.ctx())
+
+
+def qat_finetune(task: GLUETaskConfig, params, policy: QuantizationPolicy,
+                 *, steps: int = 80, lr_max: float = 1e-3):
+    """Paper §4 QAT: init quant params from PTQ, fine-tune weights + ranges
+    jointly with STE. Returns (params, qat_params, states) for eval."""
+    from repro.core.calibration import build_weight_state
+    from repro.core.qat import init_qat_params
+    cfg = bench_cfg(task)
+    batches = calib_batches(task)
+
+    def fwd(p, b, ctx):
+        return bert.classify(cfg, p, b["tokens"],
+                             type_ids=b.get("type_ids"),
+                             pad_mask=b.get("pad_mask"), ctx=ctx)
+
+    qm = ptq(fwd, params, batches, policy,
+             named_weights=bert.named_weight_sites(cfg, params))
+    wstate = qm.weight_state
+    qat_p = init_qat_params(qm.act_state, wstate)
+    src = _task_src(task)
+    lr = linear_warmup_linear_decay(lr_max, steps)
+    trainable = {"model": params, "quant": qat_p}
+    opt = adam_init(trainable)
+
+    def loss(tr, batch):
+        ctx = QuantCtx(policy=policy, mode=Mode.QAT,
+                       act_state=qm.act_state, weight_state=wstate,
+                       qat_params=tr["quant"])
+        return bert.loss_fn(cfg, tr["model"], batch, ctx=ctx)
+
+    @jax.jit
+    def step_fn(tr, opt, batch):
+        l, g = jax.value_and_grad(loss)(tr, batch)
+        upd, opt = adam_update(g, opt, tr, lr=lr)
+        return apply_updates(tr, upd), opt, l
+
+    for i in range(steps):
+        b = src.batch(BATCH, 300_000 + i)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        trainable, opt, _ = step_fn(trainable, opt, batch)
+
+    def ctx_factory():
+        return QuantCtx(policy=policy, mode=Mode.QAT,
+                        act_state=qm.act_state, weight_state=wstate,
+                        qat_params=trainable["quant"])
+    return trainable["model"], ctx_factory
+
+
+def eval_qat(task, params, ctx_factory) -> float:
+    return eval_task(task, params, ctx_factory())
+
+
+def cached_table(name: str, compute):
+    """JSON-cache a table computation under benchmarks/results/."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    result = compute()
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def glue_average(scores: Dict[str, float]) -> float:
+    return float(np.mean(list(scores.values())))

@@ -1,0 +1,82 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode, so wall
+times are NOT TPU-representative; we therefore report (a) interpret-mode
+correctness timings for regression tracking and (b) the analytically derived
+TPU-roofline time per call (bytes / HBM bw for the memory-bound quant
+kernels; max(flops/peak, bytes/bw) for the matmuls) — the number a v5e
+deployment would be judged against.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6     # us
+
+
+def bench():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # PEG fake-quant: (4096 tokens, 4096 dims, K=8)
+    t, d, k = 4096, 4096, 8
+    x = jax.random.normal(key, (t, d), jnp.float32)
+    s = jnp.full((k,), 0.05)
+    z = jnp.full((k,), 128.0)
+    us = _time(lambda a: ops.peg_fake_quant(a, s, z), x)
+    bytes_moved = t * d * 4 * 2
+    rows.append(("peg_fake_quant_4kx4k", us,
+                 f"tpu_roofline_us={bytes_moved / HBM_BW * 1e6:.1f}"))
+
+    # int8 matmul per-tensor: 1024x4096x4096
+    m, kk, n = 1024, 4096, 4096
+    a = jax.random.randint(key, (m, kk), -127, 128, jnp.int8)
+    w = jax.random.randint(key, (kk, n), -127, 128, jnp.int8)
+    us = _time(lambda a_: ops.int8_matmul(a_, w, s_a=0.02, s_w=0.01,
+                                          block_m=256, block_n=256,
+                                          block_k=512), a)
+    flops = 2 * m * kk * n
+    bytes_moved = m * kk + kk * n + m * n * 4
+    tpu_us = max(flops / (2 * PEAK_FLOPS),        # int8 ~2x bf16 MXU rate
+                 bytes_moved / HBM_BW) * 1e6
+    rows.append(("int8_matmul_1kx4kx4k", us, f"tpu_roofline_us={tpu_us:.1f}"))
+
+    # PEG int8 matmul (K=8 groups fused rescale)
+    g = 8
+    sg = jax.random.uniform(key, (g,), minval=0.01, maxval=0.05)
+    zg = jnp.zeros((g,))
+    us = _time(lambda a_: ops.int8_matmul_peg(a_, w, sg, zg, w_scale=0.01,
+                                              block_m=256, block_n=256), a)
+    rows.append(("int8_matmul_peg_k8", us, f"tpu_roofline_us={tpu_us:.1f}"))
+
+    # fused LN+quant: 4096 x 4096
+    gma = jnp.ones((d,))
+    beta = jnp.zeros((d,))
+    us = _time(lambda a_: ops.ln_fake_quant(a_, gma, beta, 0.05, 128.0), x)
+    bytes_moved = t * d * 4 * 2
+    rows.append(("fused_ln_quant_4kx4k", us,
+                 f"tpu_roofline_us={bytes_moved / HBM_BW * 1e6:.1f}"))
+    return rows
+
+
+def report(rows):
+    return "\n".join(f"{n},{us:.1f},{d}" for n, us, d in rows)
+
+
+if __name__ == "__main__":
+    print(report(bench()))

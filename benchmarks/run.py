@@ -1,0 +1,65 @@
+"""Benchmark orchestrator — one section per paper table plus the kernel
+micro-bench and the roofline table from the dry-run artifacts.
+
+Prints ``name,us_per_call,derived`` style CSV per section. Heavy sections
+(model training, QAT) cache under benchmarks/results/ — a re-run with warm
+caches completes in seconds.
+
+  PYTHONPATH=src python -m benchmarks.run [--sections t1,t5,kernels,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SECTIONS = ["t1", "t2", "t4", "t5", "t6", "t7", "kernels", "roofline"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sections", default=",".join(SECTIONS))
+    args = ap.parse_args(argv)
+    want = args.sections.split(",")
+
+    def section(name, title, fn):
+        if name not in want:
+            return
+        t0 = time.time()
+        print(f"\n### {title}")
+        try:
+            print(fn())
+        except FileNotFoundError as e:
+            print(f"(skipped: missing artifact {e})")
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            print(f"(section {name} FAILED: {e})")
+        print(f"# section {name} took {time.time() - t0:.1f}s", flush=True)
+
+    from benchmarks import (kernel_bench, roofline, table1_ptq,
+                            table2_ablation, table4_mixed_precision,
+                            table5_peg, table6_methods, table7_lowbit)
+
+    section("t1", "Table 1 — standard 8-bit PTQ (paper Table 1)",
+            lambda: table1_ptq.report(table1_ptq.run()))
+    section("t2", "Table 2 — leave-one-out activation ablation",
+            lambda: table2_ablation.report(table2_ablation.run()))
+    section("t4", "Table 4 — mixed-precision PTQ",
+            lambda: table4_mixed_precision.report(
+                table4_mixed_precision.run()))
+    section("t5", "Table 5 — per-embedding-group PTQ (K sweep, ±P)",
+            lambda: table5_peg.report(table5_peg.run()))
+    section("t6", "Table 6 — method comparison incl. QAT",
+            lambda: table6_methods.report(table6_methods.run()))
+    section("t7", "Table 7 — low-bit weights & embeddings",
+            lambda: table7_lowbit.report(table7_lowbit.run()))
+    section("kernels", "Pallas kernel micro-bench (interpret mode + "
+            "TPU roofline)",
+            lambda: kernel_bench.report(kernel_bench.bench()))
+    section("roofline", "Roofline terms per dry-run cell "
+            "(EXPERIMENTS.md §Roofline)", roofline.report)
+
+
+if __name__ == "__main__":
+    main()

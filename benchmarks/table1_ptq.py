@@ -1,0 +1,54 @@
+"""Paper Table 1: standard 8-bit post-training quantization.
+
+Rows: FP32 / W8A8 / W32A8 / W8A32 on every synthetic-GLUE task + average.
+Expected qualitative reproduction: W8A32 ~ FP32 (weights are robust),
+W8A8 and W32A8 degrade (activations are the bottleneck).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import (cached_table, eval_task, glue_average,
+                               quantize_and_eval, train_task)
+from repro.core import FP32, QuantizationPolicy, w8a8_policy
+from repro.data.synthetic import GLUE_SUITE
+
+
+def policies():
+    return {
+        "W8A8": w8a8_policy(),
+        "W32A8": QuantizationPolicy(weight_default=FP32),
+        "W8A32": QuantizationPolicy(act_default=FP32),
+    }
+
+
+def compute():
+    rows = {"FP32": {}}
+    for name in policies():
+        rows[name] = {}
+    for task in GLUE_SUITE:
+        params = train_task(task)
+        rows["FP32"][task.name] = eval_task(task, params)
+        for name, pol in policies().items():
+            rows[name][task.name] = quantize_and_eval(task, params, pol)
+    for name in rows:
+        rows[name]["GLUE"] = glue_average(
+            {k: v for k, v in rows[name].items() if k != "GLUE"})
+    return rows
+
+
+def run():
+    return cached_table("table1_ptq", compute)
+
+
+def report(rows):
+    tasks = [t.name for t in GLUE_SUITE] + ["GLUE"]
+    lines = ["config," + ",".join(tasks)]
+    for cfg_name, scores in rows.items():
+        lines.append(cfg_name + "," +
+                     ",".join(f"{scores[t]:.2f}" for t in tasks))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report(run()))

@@ -1,0 +1,46 @@
+"""Paper Table 6: comparison of all proposed methods on the full suite —
+W8A8 PTQ baseline vs MP-PTQ vs PEG-PTQ (K + permutation) vs per-tensor QAT."""
+from __future__ import annotations
+
+from benchmarks.common import (cached_table, eval_qat, eval_task,
+                               glue_average, qat_finetune, quantize_and_eval,
+                               train_task)
+from repro.core import (mixed_precision_policy, peg_policy, w8a8_policy)
+from repro.data.synthetic import GLUE_SUITE
+
+
+def compute():
+    rows = {"FP32": {}, "W8A8 PTQ": {}, "W8A{8,16} MP-PTQ": {},
+            "W8A8 PEG-PTQ (K=4+P)": {}, "W8A8 QAT": {}}
+    for task in GLUE_SUITE:
+        params = train_task(task)
+        rows["FP32"][task.name] = eval_task(task, params)
+        rows["W8A8 PTQ"][task.name] = \
+            quantize_and_eval(task, params, w8a8_policy())
+        rows["W8A{8,16} MP-PTQ"][task.name] = \
+            quantize_and_eval(task, params, mixed_precision_policy())
+        rows["W8A8 PEG-PTQ (K=4+P)"][task.name] = \
+            quantize_and_eval(task, params, peg_policy(4))
+        qat_params, ctx_factory = qat_finetune(task, params, w8a8_policy())
+        rows["W8A8 QAT"][task.name] = eval_qat(task, qat_params, ctx_factory)
+    for name in rows:
+        rows[name]["GLUE"] = glue_average(
+            {k: v for k, v in rows[name].items() if k != "GLUE"})
+    return rows
+
+
+def run():
+    return cached_table("table6_methods", compute)
+
+
+def report(rows):
+    tasks = [t.name for t in GLUE_SUITE] + ["GLUE"]
+    lines = ["method," + ",".join(tasks)]
+    for label, scores in rows.items():
+        lines.append(f"\"{label}\"," +
+                     ",".join(f"{scores[t]:.2f}" for t in tasks))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report(run()))

@@ -1,0 +1,90 @@
+"""End-to-end serving driver (the paper-kind e2e example): serve a small
+decoder LM with batched requests through prefill + KV-cache decode, FP32 vs
+W8A8-PEG-quantized, and compare outputs + timings.
+
+Run:  PYTHONPATH=src python examples/serve_quantized.py
+      (add --arch gemma2-2b etc. to switch the reduced family)
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import Mode, QuantCtx, peg_policy
+from repro.core.pipeline import ptq
+from repro.models import transformer as tfm
+from repro.runtime import Request, serve_batch
+from repro.runtime.steps import make_decode_step, make_prefill_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube3-4b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch).reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+
+    # --- W8A8 + PEG PTQ, calibrated on synthetic prompts -------------------
+    pol = peg_policy(4)
+    flat_params = tfm.init_params(cfg, jax.random.PRNGKey(0), stacked=False,
+                                  dtype=jnp.float32)
+    calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(10 + i),
+                                           (2, args.prompt_len), 0,
+                                           cfg.vocab_size)}
+             for i in range(2)]
+
+    def fwd(p, b, ctx):
+        logits, _ = tfm.forward(cfg, p, b["tokens"], ctx=ctx)
+        return logits
+
+    qm = ptq(fwd, flat_params, calib, pol)
+    shared = {}
+    for site, qp in qm.act_state.items():
+        base = ("layer/" + site.split("/", 1)[1]
+                if site.startswith("layer") else site)
+        shared.setdefault(base, qp)
+
+    def quant_ctx():
+        return QuantCtx(policy=pol, mode=Mode.APPLY, act_state=dict(shared))
+
+    rng = np.random.RandomState(0)
+    def make_requests():
+        return [Request(rid=i, prompt=rng.randint(10, cfg.vocab_size,
+                                                  size=args.prompt_len),
+                        max_new_tokens=args.new_tokens)
+                for i in range(args.requests)]
+
+    def run(label, ctx_factory):
+        prefill = jax.jit(make_prefill_step(cfg, ctx_factory=ctx_factory))
+        decode = jax.jit(make_decode_step(cfg, ctx_factory=ctx_factory),
+                         donate_argnums=(3,))
+        reqs = make_requests()
+        stats = serve_batch(
+            lambda t, c: prefill(params, t, c),
+            lambda t, p, c: decode(params, t, p, c),
+            lambda b: tfm.init_cache(cfg, b, 64, dtype=jnp.float32),
+            reqs, batch_slots=4)
+        tok_s = stats.tokens_generated / max(stats.wall_s, 1e-9)
+        print(f"{label:<18s} {stats.tokens_generated} tokens in "
+              f"{stats.wall_s:.2f}s ({tok_s:.1f} tok/s)")
+        return [r.tokens_out for r in reqs]
+
+    out_fp = run("FP32", None)
+    out_q = run("W8A8 PEG (K=4+P)", quant_ctx)
+    agree = np.mean([np.mean(np.asarray(a) == np.asarray(b))
+                     for a, b in zip(out_fp, out_q)])
+    print(f"\ngreedy-token agreement FP32 vs quantized: {agree * 100:.1f}% "
+          "(an untrained model's logits are near-uniform, so small "
+          "quantization noise can flip argmax — trained models agree far "
+          "more; see benchmarks tables for task-metric impact)")
+
+
+if __name__ == "__main__":
+    main()

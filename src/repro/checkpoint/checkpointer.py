@@ -1,0 +1,139 @@
+"""Sharded checkpointing with async save, step housekeeping, and
+mesh-shape-agnostic layout (arrays are saved in logical form and resharded on
+restore, so a 16x16 run can resume on an 8x16 mesh — elastic scaling,
+DESIGN.md §4).
+
+Format: one .npz per step (flattened pytree paths as keys) + a JSON metadata
+sidecar (step, data-iterator state, mesh shape at save time). No external
+checkpoint libraries are available offline, so this is self-contained.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+_SEP = "||"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_order(tree):
+    return [
+        _SEP.join(str(p) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
+    ]
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree, *, extra: Optional[dict] = None,
+             block: bool = False):
+        """Snapshot the pytree at ``step``. With async_save the host copy is
+        taken synchronously (cheap) and the disk write happens in a
+        background thread — training continues."""
+        self.wait()                       # at most one outstanding write
+        host_flat = {}
+        dtypes = {}
+        for k, v in _flatten(tree).items():
+            arr = np.asarray(v)
+            if arr.dtype.kind == "V":     # bfloat16 etc: store raw bits
+                dtypes[k] = str(jax.numpy.asarray(v).dtype)
+                arr = arr.view(np.uint16)
+            host_flat[k] = arr
+        meta = {"step": int(step), "time": time.time(), "dtypes": dtypes,
+                **(extra or {})}
+
+        def _write():
+            tmp = os.path.join(self.directory, f".tmp-{step}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **host_flat)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            final = os.path.join(self.directory, f"step_{step:08d}")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)         # atomic publish
+            self._gc()
+
+        if self.async_save and not block:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.directory, name,
+                                                 "meta.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None,
+                shardings=None):
+        """Restore into the structure of ``template``. ``shardings`` (same
+        pytree structure, NamedSharding leaves) reshards on load — the saved
+        mesh shape does not need to match the current one."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        arrays = np.load(os.path.join(d, "arrays.npz"))
+        order = _path_order(template)
+        leaves = []
+        treedef = jax.tree_util.tree_structure(template)
+        shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                        if shardings is not None else [None] * len(order))
+        meta = json.load(open(os.path.join(d, "meta.json")))
+        dtypes = meta.get("dtypes", {})
+        for key, shard in zip(order, shard_leaves):
+            arr = arrays[key]
+            if key in dtypes:             # restore raw-bit dtypes (bf16)
+                import ml_dtypes
+                arr = arr.view(np.dtype(dtypes[key]))
+            if shard is not None:
+                leaves.append(jax.device_put(arr, shard))
+            else:
+                leaves.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves), meta

@@ -1,0 +1,2 @@
+from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, all_configs,
+                                get_config, input_specs, shape_cells)

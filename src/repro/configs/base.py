@@ -1,0 +1,233 @@
+"""Architecture config schema + registry.
+
+Every assigned architecture is a ``ModelConfig`` instance in its own module
+(``repro/configs/<id>.py``), selectable via ``--arch <id>`` in the launchers.
+``reduced()`` produces the small same-family variant used by CPU smoke tests;
+``input_specs(shape)`` produces ShapeDtypeStruct stand-ins for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.moe import MoEConfig
+
+# The four assigned input shapes (LM-family): (seq_len, global_batch).
+SHAPES: Dict[str, dict] = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    # attention variants
+    window: Optional[int] = None             # sliding-window size (all layers)
+    attn_logit_softcap: Optional[float] = None
+    final_logit_softcap: Optional[float] = None
+    rope_theta: Optional[float] = 10000.0
+    norm: str = "rmsnorm"                    # rmsnorm | layernorm
+    act: str = "silu"
+    ffn_type: str = "glu"                    # glu | mlp
+    post_norm: bool = False                  # gemma-2 sandwich norms
+    qk_norm: bool = False                    # qwen3
+    embed_scale: bool = False                # gemma: x *= sqrt(d)
+    tie_embeddings: bool = True
+    # block pattern, repeated; tail appended at the end.
+    # entries: "attn" | "local_attn" | "rec" | "rwkv"
+    block_pattern: Tuple[str, ...] = ("attn",)
+    tail_pattern: Tuple[str, ...] = ()
+    local_window: int = 4096                 # window for "local_attn" blocks
+    d_rnn: Optional[int] = None              # RG-LRU width
+    rwkv_head_size: int = 64
+    # MoE
+    moe: Optional[MoEConfig] = None
+    # encoder-decoder (seamless): encoder_layers > 0
+    encoder_layers: int = 0
+    # modality frontend stub
+    frontend: Optional[str] = None           # audio | vision
+    num_frontend_tokens: int = 0
+    max_seq_len: int = 1 << 20
+    sub_quadratic: bool = False              # eligible for long_500k
+    skip_decode: bool = False                # encoder-only archs
+    # source provenance (from the assignment table)
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def layer_plan(self) -> Tuple[str, ...]:
+        """Full per-layer block-type sequence of length num_layers."""
+        n = self.num_layers - len(self.tail_pattern)
+        reps, rem = divmod(n, len(self.block_pattern))
+        if rem:
+            raise ValueError(f"{self.name}: {n} layers not divisible by "
+                             f"pattern {self.block_pattern}")
+        return self.block_pattern * reps + self.tail_pattern
+
+    @property
+    def num_params(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, hd = self.d_model, self.hd
+        n = self.vocab_size * d                      # embeddings
+        if not self.tie_embeddings:
+            n += self.vocab_size * d
+        for kind in self.layer_plan:
+            if kind in ("attn", "local_attn"):
+                n += d * hd * (self.num_heads + 2 * self.num_kv_heads) \
+                    + self.num_heads * hd * d
+                if self.moe is not None:
+                    n += d * self.moe.num_experts + self.moe.num_experts * \
+                        3 * d * self.moe.d_ff
+                elif self.ffn_type == "glu":
+                    n += 3 * d * self.d_ff
+                else:
+                    n += 2 * d * self.d_ff
+            elif kind == "rec":
+                dr = self.d_rnn or d
+                n += 2 * d * dr + dr * d + 2 * dr * dr
+                n += 3 * d * self.d_ff if self.ffn_type == "glu" else 2 * d * self.d_ff
+            elif kind == "rwkv":
+                n += 5 * d * d + 2 * d * self.d_ff + d * d
+        if self.encoder_layers:
+            # encoder layers + decoder cross-attention
+            n += self.encoder_layers * (4 * d * d + 2 * d * self.d_ff)
+            n += self.num_layers * 4 * d * d
+        return n
+
+    def active_params(self) -> int:
+        """Activated parameters per token (MoE: top-k of the experts)."""
+        if self.moe is None:
+            return self.num_params
+        d = self.d_model
+        total = self.num_params
+        expert_p = self.moe.num_experts * 3 * d * self.moe.d_ff
+        active_p = self.moe.top_k * 3 * d * self.moe.d_ff
+        return total - len(self.layer_plan) * expert_p \
+            + len(self.layer_plan) * active_p
+
+    def with_supers(self, n_super: int) -> "ModelConfig":
+        """Same config with ``n_super`` block-pattern repeats (+ tail) — used
+        by the dry-run's cost-extrapolation lowerings (scan bodies are
+        counted once by XLA cost analysis; we lower at 1 and 2 repeats and
+        extrapolate linearly in n_super)."""
+        n_layers = n_super * len(self.block_pattern) + len(self.tail_pattern)
+        return dataclasses.replace(
+            self, num_layers=n_layers,
+            encoder_layers=n_super if self.encoder_layers else 0)
+
+    @property
+    def n_super(self) -> int:
+        return (self.num_layers - len(self.tail_pattern)) // \
+            len(self.block_pattern)
+
+    def reduced(self) -> "ModelConfig":
+        """Small same-family config for CPU smoke tests."""
+        pat = len(self.block_pattern)
+        tail = len(self.tail_pattern)
+        moe = None
+        if self.moe is not None:
+            # capacity_factor 4.0: an untrained router's skew must not drop
+            # tokens in smoke tests (drops are legitimate at scale, but make
+            # decode-vs-dense consistency checks flaky).
+            moe = dataclasses.replace(self.moe, num_experts=4,
+                                      top_k=min(self.moe.top_k, 2), d_ff=64,
+                                      capacity_factor=4.0)
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            num_layers=2 * pat + tail,
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=max(1, min(self.num_kv_heads, 2)),
+            head_dim=16,
+            d_ff=128,
+            vocab_size=128,
+            d_rnn=64 if self.d_rnn else None,
+            rwkv_head_size=16,
+            window=min(self.window, 16) if self.window else None,
+            local_window=16,
+            encoder_layers=2 if self.encoder_layers else 0,
+            num_frontend_tokens=8 if self.frontend else 0,
+            max_seq_len=256,
+            moe=moe,
+        )
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, *,
+                microbatch: Optional[int] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell.
+
+    train: {tokens, labels [, embeds]}   (B, T) int32
+    prefill: {tokens [, embeds]}
+    decode: {tokens (B, 1), pos (B, 1)} — the KV cache / state is built
+      separately by the launcher (init fns) because its layout is
+      arch-specific.
+    """
+    sh = SHAPES[shape_name]
+    B, T = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    i32 = jnp.int32
+    if kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, T), i32),
+                 "labels": jax.ShapeDtypeStruct((B, T), i32)}
+    elif kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, T), i32)}
+    else:  # decode: one new token against a T-long cache
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                 "pos": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.frontend and kind != "decode":
+        specs["embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_frontend_tokens, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+_REGISTRY = [
+    "h2o_danube3_4b", "internlm2_20b", "gemma2_2b", "granite_20b",
+    "qwen3_moe_235b", "grok1_314b", "recurrentgemma_2b", "rwkv6_1p6b",
+    "seamless_m4t_medium", "phi3_vision_4p2b", "bert_base",
+]
+
+# --arch ids use dashes; module names use underscores.
+ARCH_IDS = [m.replace("_", "-") for m in _REGISTRY]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod_name = arch_id.replace("-", "_")
+    if mod_name not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def shape_cells(cfg: ModelConfig):
+    """The shape names this arch runs (with assignment-mandated skips)."""
+    cells = []
+    for name, sh in SHAPES.items():
+        if sh["kind"] == "decode" and cfg.skip_decode:
+            continue
+        if name == "long_500k" and not cfg.sub_quadratic:
+            continue
+        cells.append(name)
+    return cells

@@ -1,0 +1,33 @@
+"""The paper's contribution: transformer quantization as a composable library.
+
+Public API:
+  quant_config  — QuantizerConfig / QuantizationPolicy + the paper's recipes
+  quantizer     — uniform affine fake-quant with STE/LSQ gradients
+  range_estimation — current/running min-max, MSE estimators
+  peg           — per-embedding-group scheme + range-based permutation
+  calibration   — QuantCtx threading + static range calibration
+  qat           — learnable-range quantization-aware training
+  adaround      — adaptive rounding PTQ refinement
+  mixed_precision — Table-2/4 sensitivity + census helpers
+  pipeline      — end-to-end PTQ driver
+  grad_compression — PEG-int8 cross-pod gradient all-reduce
+"""
+from repro.core.quant_config import (A8_DEFAULT, A16_DEFAULT, FP32, W8_DEFAULT,
+                                     Granularity, QuantizationPolicy,
+                                     QuantizerConfig, RangeEstimator,
+                                     fp32_policy, low_bit_weight_policy,
+                                     mixed_precision_policy, peg_config,
+                                     peg_policy, w8a8_policy)
+from repro.core.quantizer import (QuantParams, dequantize, fake_quant,
+                                  params_from_range, quant_error, quantize,
+                                  reduce_range)
+from repro.core.range_estimation import (RangeState, estimate_weight_params,
+                                         finalize, init_range_state,
+                                         mse_search, observe)
+from repro.core.peg import (PEGSpec, build_groups, fold_permutation_into_ffn,
+                            group_index_natural_layout, overhead_params,
+                            split_linear_for_per_tensor_hw)
+from repro.core.calibration import (Mode, QuantCtx, QuantState,
+                                    build_act_state, build_weight_state,
+                                    collect_ranges, fp32_ctx)
+from repro.core.pipeline import QuantizedModel, ptq

@@ -1,0 +1,113 @@
+"""AdaRound — adaptive rounding for post-training quantization
+(Nagel et al. 2020; paper Table 7 "W4A32 AdaRound").
+
+Per linear layer: instead of round-to-nearest, learn a per-weight rounding
+direction by optimizing the layer-wise reconstruction loss
+
+    L(V) = || X W - X W_q(V) ||_F^2 + lam * sum(1 - |2 h(V) - 1|^beta)
+
+where h(V) = clip(sigmoid(V) * (zeta - gamma) + gamma, 0, 1) is the rectified
+sigmoid and beta is annealed high -> low so the regularizer first lets h move
+freely, then forces it to {0, 1}. Final weights use hard rounding
+floor(W/s) + (h(V) > 0.5).
+
+The paper uses 1024 random sequences, 1e4 iterations, default hyper-params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant_config import QuantizerConfig
+from repro.core.quantizer import QuantParams, _expand
+from repro.optim.adam import adam_init, adam_update, apply_updates
+
+ZETA, GAMMA = 1.1, -0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaRoundConfig:
+    iterations: int = 10_000
+    lr: float = 1e-2
+    reg_lambda: float = 0.01
+    beta_start: float = 20.0
+    beta_end: float = 2.0
+    warmup_frac: float = 0.2     # no regularization for the first 20%
+    batch_size: int = 256
+
+
+def _rectified_sigmoid(v):
+    return jnp.clip(jax.nn.sigmoid(v) * (ZETA - GAMMA) + GAMMA, 0.0, 1.0)
+
+
+def _soft_quant(w, v, qp: QuantParams, cfg: QuantizerConfig):
+    s, z = _expand(qp, w.ndim, cfg.channel_axis)
+    wq = jnp.floor(w / s) + _rectified_sigmoid(v) + z
+    return (jnp.clip(wq, cfg.qmin, cfg.qmax) - z) * s
+
+
+def init_v(w, qp: QuantParams, cfg: QuantizerConfig):
+    """Initialize V so that h(V) equals the float rounding residual, i.e. the
+    soft-quantized weight starts at the real-valued weight."""
+    s, _ = _expand(qp, w.ndim, cfg.channel_axis)
+    rest = w / s - jnp.floor(w / s)
+    rest = jnp.clip(rest, 1e-4, 1.0 - 1e-4)
+    p = (rest - GAMMA) / (ZETA - GAMMA)
+    return -jnp.log(1.0 / p - 1.0)                   # logit
+
+
+def optimize_rounding(w: jnp.ndarray, x_calib: jnp.ndarray,
+                      qp: QuantParams, cfg: QuantizerConfig,
+                      ar_cfg: AdaRoundConfig = AdaRoundConfig(),
+                      seed: int = 0):
+    """Run AdaRound for one linear layer  y = x @ w  (w: [d_in, d_out]).
+
+    x_calib: (N, d_in) calibration inputs to this layer (FP32 activations).
+    Returns QuantParams-compatible hard-rounded weight (dequantized) plus the
+    learned rounding mask for inspection.
+    """
+    v0 = init_v(w, qp, cfg)
+    total = ar_cfg.iterations
+    warm = int(total * ar_cfg.warmup_frac)
+
+    def beta_at(i):
+        t = jnp.clip((i - warm) / jnp.maximum(total - warm, 1), 0.0, 1.0)
+        return ar_cfg.beta_end + (ar_cfg.beta_start - ar_cfg.beta_end) * \
+            0.5 * (1 + jnp.cos(jnp.pi * t))
+
+    y_ref_full = x_calib @ w
+
+    def loss_fn(v, xb, yb, i):
+        wq = _soft_quant(w, v, qp, cfg)
+        rec = jnp.mean(jnp.square(xb @ wq - yb))
+        h = _rectified_sigmoid(v)
+        reg = jnp.sum(1.0 - jnp.abs(2.0 * h - 1.0) ** beta_at(i))
+        reg = jnp.where(i < warm, 0.0, reg)
+        return rec + ar_cfg.reg_lambda * reg
+
+    opt_state = adam_init(v0)
+    n = x_calib.shape[0]
+    bs = min(ar_cfg.batch_size, n)
+
+    @jax.jit
+    def step(v, opt_state, key, i):
+        idx = jax.random.randint(key, (bs,), 0, n)
+        xb, yb = x_calib[idx], y_ref_full[idx]
+        g = jax.grad(loss_fn)(v, xb, yb, i)
+        upd, opt_state = adam_update(g, opt_state, v, lr=ar_cfg.lr)
+        return apply_updates(v, upd), opt_state
+
+    key = jax.random.PRNGKey(seed)
+    v = v0
+    for i in range(total):
+        key, sub = jax.random.split(key)
+        v, opt_state = step(v, opt_state, sub, jnp.asarray(i, jnp.float32))
+
+    # Hard rounding.
+    s, z = _expand(qp, w.ndim, cfg.channel_axis)
+    hard = jnp.floor(w / s) + (_rectified_sigmoid(v) > 0.5).astype(w.dtype) + z
+    w_hard = (jnp.clip(hard, cfg.qmin, cfg.qmax) - z) * s
+    return w_hard.astype(w.dtype), _rectified_sigmoid(v)

@@ -1,0 +1,170 @@
+"""Quantization context + static-range calibration (paper §2 "static range
+estimation", §5 experimental setup).
+
+Models thread a ``QuantCtx`` through their forward pass and call
+``ctx.act(site, x)`` at every activation-quantization site and
+``ctx.weight(site, w)`` on every weight read. The ctx has four modes:
+
+  OFF      — passthrough (FP32 baseline);
+  COLLECT  — record range statistics (and, for MSE/PEG, the calibration
+             tensors) per site; returns x unchanged;
+  APPLY    — simulated quantization with the frozen ``QuantState``;
+  QAT      — simulated quantization with *learnable* scale/offset taken from a
+             trainable pytree (see qat.py).
+
+This is a functional design: COLLECT mutates only the Python-side dict of the
+ctx object created inside the calling function, whose values are returned as
+jit outputs — safe under tracing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, Dict, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import peg as peg_lib
+from repro.core.quant_config import (Granularity, QuantizationPolicy,
+                                     QuantizerConfig, RangeEstimator)
+from repro.core.quantizer import QuantParams, fake_quant
+from repro.core.range_estimation import (RangeState, estimate_weight_params,
+                                         finalize, init_range_state, observe)
+
+
+class Mode(enum.Enum):
+    OFF = "off"
+    COLLECT = "collect"
+    APPLY = "apply"
+    QAT = "qat"
+
+
+# QuantState: site name -> QuantParams (a pytree usable inside jit).
+QuantState = Dict[str, QuantParams]
+
+
+@dataclasses.dataclass
+class QuantCtx:
+    policy: QuantizationPolicy
+    mode: Mode = Mode.OFF
+    act_state: Optional[QuantState] = None       # APPLY/QAT
+    weight_state: Optional[QuantState] = None    # APPLY (PTQ-frozen weights)
+    qat_params: Optional[dict] = None            # QAT learnable (see qat.py)
+    # COLLECT outputs:
+    range_states: Dict[str, RangeState] = dataclasses.field(default_factory=dict)
+    calib_tensors: Dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
+    keep_tensors: bool = True                    # needed for MSE / PEG finalize
+    # PEG group assignment per site (natural layout), set by the pipeline:
+    group_indices: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    # -- model-facing API ---------------------------------------------------
+
+    def act(self, site: str, x: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.policy.act_config(site)
+        if self.mode == Mode.OFF or not cfg.enabled:
+            return x
+        if self.mode == Mode.COLLECT:
+            prev = self.range_states.get(site, init_range_state())
+            self.range_states[site] = observe(prev, x, cfg)
+            if self.keep_tensors:
+                self.calib_tensors[site] = x
+            return x
+        if self.mode == Mode.APPLY:
+            qp = self.act_state.get(site) if self.act_state else None
+            if qp is None:
+                return x
+            return fake_quant(x, qp, cfg)
+        if self.mode == Mode.QAT:
+            from repro.core import qat as qat_lib
+            return qat_lib.apply_act(self, site, x, cfg)
+        raise ValueError(self.mode)
+
+    def weight(self, site: str, w: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.policy.weight_config(site)
+        if self.mode in (Mode.OFF, Mode.COLLECT) or not cfg.enabled:
+            return w
+        if self.mode == Mode.APPLY:
+            qp = (self.weight_state or {}).get(site)
+            if qp is None:
+                # Estimate on the fly from the (static) weight values. Cheap
+                # under jit: constant-folded per compilation.
+                qp = estimate_weight_params(w, cfg)
+            return fake_quant(w, qp, cfg)
+        if self.mode == Mode.QAT:
+            from repro.core import qat as qat_lib
+            return qat_lib.apply_weight(self, site, w, cfg)
+        raise ValueError(self.mode)
+
+
+def fp32_ctx() -> QuantCtx:
+    from repro.core.quant_config import fp32_policy
+    return QuantCtx(policy=fp32_policy(), mode=Mode.OFF)
+
+
+# ---------------------------------------------------------------------------
+# Calibration driver
+# ---------------------------------------------------------------------------
+
+def collect_ranges(forward: Callable, params, batches, policy: QuantizationPolicy,
+                   *, keep_tensors: bool = True):
+    """Run ``forward(params, batch, ctx)`` over calibration batches, return
+    (range_states, calib_tensors). ``forward`` must call ctx.act at its sites.
+
+    Runs un-jitted so the EMA threading across batches stays simple; batches
+    are small calibration samples (paper: 1-16 batches).
+    """
+    range_states: Dict[str, RangeState] = {}
+    calib_tensors: Dict[str, jnp.ndarray] = {}
+    for batch in batches:
+        ctx = QuantCtx(policy=policy, mode=Mode.COLLECT,
+                       range_states=dict(range_states),
+                       keep_tensors=keep_tensors)
+        forward(params, batch, ctx)
+        range_states = ctx.range_states
+        calib_tensors.update(ctx.calib_tensors)   # keep the last batch's tensor
+    return range_states, calib_tensors
+
+
+def build_act_state(range_states, calib_tensors, policy: QuantizationPolicy,
+                    *, tp_shards: int = 1):
+    """Finalize collected statistics into a frozen activation QuantState.
+
+    For PEG sites this also builds the group spec (range-based permutation)
+    from the per-dim ranges — the "sorting and grouping happens only once
+    before the range estimation phase" step of the paper.
+    Returns (act_state, peg_specs).
+    """
+    act_state: QuantState = {}
+    peg_specs: Dict[str, peg_lib.PEGSpec] = {}
+    for site, state in range_states.items():
+        cfg = policy.act_config(site)
+        if not cfg.enabled:
+            continue
+        if cfg.granularity == Granularity.PER_EMBEDDING_GROUP:
+            ranges = np.asarray(state.x_max - state.x_min)
+            spec = peg_lib.build_groups(ranges, cfg.num_groups,
+                                        use_permutation=cfg.use_permutation,
+                                        tp_shards=tp_shards)
+            peg_specs[site] = spec
+            gi = jnp.asarray(peg_lib.group_index_natural_layout(spec))
+            qp = finalize(state, cfg, calib_tensors.get(site), group_index=gi)
+        else:
+            qp = finalize(state, cfg, calib_tensors.get(site))
+        act_state[site] = qp
+    return act_state, peg_specs
+
+
+def build_weight_state(params_named, policy: QuantizationPolicy,
+                       rounding_offsets: Optional[dict] = None) -> QuantState:
+    """Quantization params for every named weight. ``params_named`` is a dict
+    site -> array (use models.quantized.named_weight_sites to build it).
+    ``rounding_offsets`` come from AdaRound (adaround.py)."""
+    state: QuantState = {}
+    for site, w in params_named.items():
+        cfg = policy.weight_config(site)
+        if not cfg.enabled or cfg.bits >= 32:
+            continue
+        state[site] = estimate_weight_params(jnp.asarray(w), cfg)
+    return state

@@ -1,0 +1,70 @@
+"""End-to-end post-training-quantization pipeline (paper §5 setup).
+
+    fp32 model + calibration batches + policy
+        -> collect activation ranges (static range estimation)
+        -> build PEG groups (range-based permutation) where the policy asks
+        -> finalize activation QuantParams
+        -> estimate weight QuantParams (MSE for <8-bit per §5)
+        -> optional AdaRound refinement of selected weights
+        -> frozen QuantState ready for Mode.APPLY inference / QAT init.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.adaround import AdaRoundConfig, optimize_rounding
+from repro.core.calibration import (Mode, QuantCtx, build_act_state,
+                                    build_weight_state, collect_ranges)
+from repro.core.quant_config import QuantizationPolicy
+
+
+@dataclasses.dataclass
+class QuantizedModel:
+    """Frozen PTQ artifact: everything needed to run quantized inference."""
+    policy: QuantizationPolicy
+    act_state: dict
+    weight_state: dict
+    peg_specs: dict
+    adarounded_weights: dict          # site -> hard-rounded weight tensor
+
+    def ctx(self) -> QuantCtx:
+        return QuantCtx(policy=self.policy, mode=Mode.APPLY,
+                        act_state=self.act_state,
+                        weight_state=self.weight_state)
+
+
+def ptq(forward: Callable, params, calib_batches: Sequence,
+        policy: QuantizationPolicy, *,
+        named_weights: Optional[Dict[str, jnp.ndarray]] = None,
+        tp_shards: int = 1,
+        adaround_sites: Optional[Dict[str, tuple]] = None,
+        adaround_cfg: AdaRoundConfig = AdaRoundConfig()) -> QuantizedModel:
+    """Run the full PTQ pipeline.
+
+    forward(params, batch, ctx) -> model output, calling ctx.act()/ctx.weight()
+    named_weights: site -> weight array for weight-state precomputation.
+    adaround_sites: site -> (weight, calib_inputs) for AdaRound refinement.
+    """
+    range_states, calib_tensors = collect_ranges(
+        forward, params, calib_batches, policy)
+    act_state, peg_specs = build_act_state(
+        range_states, calib_tensors, policy, tp_shards=tp_shards)
+    weight_state = build_weight_state(named_weights or {}, policy)
+
+    adarounded = {}
+    if adaround_sites:
+        for site, (w, x_in) in adaround_sites.items():
+            cfg = policy.weight_config(site)
+            qp = weight_state.get(site)
+            if qp is None:
+                from repro.core.range_estimation import estimate_weight_params
+                qp = estimate_weight_params(w, cfg)
+            w_hard, _ = optimize_rounding(w, x_in, qp, cfg, adaround_cfg)
+            adarounded[site] = w_hard
+
+    return QuantizedModel(policy=policy, act_state=act_state,
+                          weight_state=weight_state, peg_specs=peg_specs,
+                          adarounded_weights=adarounded)

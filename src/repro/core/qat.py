@@ -1,0 +1,77 @@
+"""Quantization-aware training with learnable ranges (paper §4 "QAT").
+
+Adapts LSQ (Esser et al. 2019) / trained uniform quantization (Jain et al.
+2019) to BERT-like models: every quantizer's scale (and, for asymmetric
+activations, offset) is a trainable parameter initialized from the PTQ
+estimate, optimized jointly with the weights via the STE gradients that
+``repro.core.quantizer.fake_quant`` already exposes.
+
+Parameterization: scale is stored as log(s) for positivity; the asymmetric
+zero-point is stored as a continuous offset (LSQ+-style) and rounded with STE
+when used.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant_config import QuantizerConfig
+from repro.core.quantizer import QuantParams, fake_quant, _round_ste
+
+
+def init_qat_params(act_state: Dict[str, QuantParams],
+                    weight_state: Dict[str, QuantParams]) -> dict:
+    """Trainable pytree initialized from PTQ quantization parameters."""
+    def to_learnable(qp: QuantParams):
+        return {"log_scale": jnp.log(jnp.maximum(qp.scale, 1e-8)),
+                "offset": qp.zero_point.astype(jnp.float32)}
+    return {
+        "act": {site: to_learnable(qp) for site, qp in act_state.items()},
+        "weight": {site: to_learnable(qp) for site, qp in weight_state.items()},
+    }
+
+
+def _materialize(learnable: dict, template: QuantParams,
+                 cfg: QuantizerConfig, grad_scale: jnp.ndarray) -> QuantParams:
+    # LSQ gradient scaling: multiply the learnable leaf by g inside
+    # stop_grad-compensated identity so the forward value is unchanged but the
+    # gradient is scaled by g (Esser et al. 2019, eq. 5).
+    def gscale(v):
+        return v * grad_scale + jax.lax.stop_gradient(v * (1.0 - grad_scale))
+    scale = jnp.exp(gscale(learnable["log_scale"]))
+    if cfg.symmetric:
+        zp = jnp.zeros_like(scale)
+    else:
+        zp = jnp.clip(_round_ste(gscale(learnable["offset"])), cfg.qmin, cfg.qmax)
+    return QuantParams(scale=scale, zero_point=zp,
+                       group_index=template.group_index)
+
+
+def _lsq_grad_scale(x: jnp.ndarray, cfg: QuantizerConfig) -> jnp.ndarray:
+    return jax.lax.rsqrt(jnp.asarray(x.size * max(cfg.qmax, 1), jnp.float32))
+
+
+def apply_act(ctx, site: str, x: jnp.ndarray, cfg: QuantizerConfig):
+    learnable = (ctx.qat_params or {}).get("act", {}).get(site)
+    template = (ctx.act_state or {}).get(site)
+    if learnable is None or template is None:
+        return x
+    qp = _materialize(learnable, template, cfg, _lsq_grad_scale(x, cfg))
+    return fake_quant(x, qp, cfg)
+
+
+def apply_weight(ctx, site: str, w: jnp.ndarray, cfg: QuantizerConfig):
+    learnable = (ctx.qat_params or {}).get("weight", {}).get(site)
+    template = (ctx.weight_state or {}).get(site)
+    if learnable is None or template is None:
+        # Weight sites not present in the PTQ state fall back to on-the-fly
+        # min-max fake-quant so QAT still sees quantization noise everywhere.
+        from repro.core.range_estimation import estimate_weight_params
+        import dataclasses as _dc
+        from repro.core.quant_config import RangeEstimator
+        cheap = _dc.replace(cfg, estimator=RangeEstimator.CURRENT_MINMAX)
+        return fake_quant(w, estimate_weight_params(w, cheap), cheap)
+    qp = _materialize(learnable, template, cfg, _lsq_grad_scale(w, cfg))
+    return fake_quant(w, qp, cfg)

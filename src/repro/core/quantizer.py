@@ -1,0 +1,121 @@
+"""Uniform affine quantization (paper eq. 1-2) with straight-through gradients.
+
+The simulated-quantization forward is written so that plain ``jax.grad`` yields
+the STE gradient for the input *and* the LSQ-style gradients for learnable
+scale / zero-point (Esser et al. 2019; Jain et al. 2019) — no custom_vjp
+needed: ``round`` is wrapped with a stop-gradient identity, while the
+surrounding ``clip`` and de-quantization stay differentiable.
+
+``QuantParams`` is a pytree so parameter sets can live inside jitted train
+steps, be sharded with the model, and be learned during QAT.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant_config import Granularity, QuantizerConfig
+
+
+class QuantParams(NamedTuple):
+    """Pytree of quantization parameters for one tensor site.
+
+    scale / zero_point shapes by granularity:
+      PER_TENSOR           -> scalar ()
+      PER_CHANNEL          -> (C,) along ``channel_axis``
+      PER_EMBEDDING        -> (d,) along ``channel_axis``
+      PER_EMBEDDING_GROUP  -> (K,), expanded through ``group_index`` (d,)
+
+    ``group_index[j]`` = group id of embedding dim j (identity layout after the
+    range-based permutation has been folded into the weights — see peg.py).
+    """
+    scale: jnp.ndarray
+    zero_point: jnp.ndarray
+    group_index: Optional[jnp.ndarray] = None
+
+
+def _round_ste(x: jnp.ndarray) -> jnp.ndarray:
+    """round-to-nearest with identity gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def _expand(qp: QuantParams, ndim: int, channel_axis: int):
+    """Broadcast scale/zp to the tensor rank along channel_axis."""
+    s, z = qp.scale, qp.zero_point
+    if qp.group_index is not None:        # PEG: (K,) -> (d,)
+        s = s[qp.group_index]
+        z = z[qp.group_index]
+    if s.ndim == 0:
+        return s, z
+    axis = channel_axis % ndim
+    shape = [1] * ndim
+    shape[axis] = s.shape[0]
+    return s.reshape(shape), z.reshape(shape)
+
+
+def fake_quant(x: jnp.ndarray, qp: QuantParams, cfg: QuantizerConfig) -> jnp.ndarray:
+    """Simulated quantization: eq. (1) then eq. (2) of the paper.
+
+    Differentiable in ``x`` (STE through round, zero outside the clip range)
+    and in ``qp.scale`` / ``qp.zero_point`` (LSQ gradients).
+    """
+    if not cfg.enabled:
+        return x
+    s, z = _expand(qp, x.ndim, cfg.channel_axis)
+    s = jnp.maximum(s, jnp.finfo(jnp.float32).tiny).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    q = _round_ste(xf / s) + z                       # eq. (1) before clipping
+    q = jnp.clip(q, cfg.qmin, cfg.qmax)
+    out = (q - z) * s                                # eq. (2)
+    return out.astype(x.dtype)
+
+
+def quantize(x: jnp.ndarray, qp: QuantParams, cfg: QuantizerConfig) -> jnp.ndarray:
+    """To the integer grid (eq. 1). Returns int32 in [qmin, qmax]."""
+    s, z = _expand(qp, x.ndim, cfg.channel_axis)
+    s = jnp.maximum(s, jnp.finfo(jnp.float32).tiny)
+    q = jnp.round(x.astype(jnp.float32) / s) + z
+    return jnp.clip(q, cfg.qmin, cfg.qmax).astype(jnp.int32)
+
+
+def dequantize(q: jnp.ndarray, qp: QuantParams, cfg: QuantizerConfig) -> jnp.ndarray:
+    """eq. (2)."""
+    s, z = _expand(qp, q.ndim, cfg.channel_axis)
+    return ((q.astype(jnp.float32) - z) * s)
+
+
+def params_from_range(x_min: jnp.ndarray, x_max: jnp.ndarray,
+                      cfg: QuantizerConfig,
+                      group_index: Optional[jnp.ndarray] = None) -> QuantParams:
+    """Scale / zero-point from an estimated real-valued range.
+
+    Symmetric: grid symmetric around 0 (paper uses this for weights).
+    Asymmetric: affine grid covering [min, max] with an integer zero-point.
+    """
+    x_min = jnp.minimum(x_min.astype(jnp.float32), 0.0)   # grid must contain 0
+    x_max = jnp.maximum(x_max.astype(jnp.float32), 0.0)
+    if cfg.symmetric:
+        amax = jnp.maximum(jnp.abs(x_min), jnp.abs(x_max))
+        scale = jnp.maximum(amax / cfg.qmax, jnp.finfo(jnp.float32).tiny)
+        zp = jnp.zeros_like(scale)
+    else:
+        scale = jnp.maximum((x_max - x_min) / cfg.num_levels,
+                            jnp.finfo(jnp.float32).tiny)
+        zp = jnp.clip(jnp.round(-x_min / scale), cfg.qmin, cfg.qmax)
+    return QuantParams(scale=scale, zero_point=zp, group_index=group_index)
+
+
+def reduce_range(x: jnp.ndarray, cfg: QuantizerConfig):
+    """(min, max) reduced over all axes except the channel axis (if any)."""
+    if cfg.granularity == Granularity.PER_TENSOR:
+        return jnp.min(x), jnp.max(x)
+    axis = cfg.channel_axis % x.ndim
+    red = tuple(a for a in range(x.ndim) if a != axis)
+    return jnp.min(x, axis=red), jnp.max(x, axis=red)
+
+
+def quant_error(x: jnp.ndarray, qp: QuantParams, cfg: QuantizerConfig) -> jnp.ndarray:
+    """Mean squared quantization error — the MSE-estimator objective."""
+    return jnp.mean(jnp.square(x - fake_quant(x, qp, cfg)))

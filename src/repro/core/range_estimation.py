@@ -1,0 +1,139 @@
+"""Static range estimators (paper §2, App. B.2).
+
+Three estimators, matching the paper's search space:
+  * current min-max  — full dynamic range of a single calibration batch;
+  * running min-max  — EMA (momentum 0.9) of per-batch min/max;
+  * MSE              — clipping range that minimizes ||x - q(x)||² via a grid
+                       search over symmetric shrink ratios (Choukroun 2019,
+                       Banner 2018).
+
+All estimators are granularity-aware: reductions keep the channel/embedding
+axis when the config asks for per-channel / per-embedding / PEG parameters.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant_config import Granularity, QuantizerConfig, RangeEstimator
+from repro.core.quantizer import (QuantParams, fake_quant, params_from_range,
+                                  reduce_range)
+
+
+class RangeState(NamedTuple):
+    """Accumulated range statistics across calibration batches (a pytree)."""
+    x_min: jnp.ndarray
+    x_max: jnp.ndarray
+    initialized: jnp.ndarray          # scalar bool
+
+
+def init_range_state(shape=()) -> RangeState:
+    return RangeState(x_min=jnp.zeros(shape), x_max=jnp.zeros(shape),
+                      initialized=jnp.asarray(False))
+
+
+def _group_reduce(mn: jnp.ndarray, mx: jnp.ndarray,
+                  group_index: jnp.ndarray, num_groups: int):
+    """Per-dim (d,) ranges -> per-group (K,) ranges (min of mins, max of maxs)."""
+    gmin = jnp.full((num_groups,), jnp.inf).at[group_index].min(mn)
+    gmax = jnp.full((num_groups,), -jnp.inf).at[group_index].max(mx)
+    return gmin, gmax
+
+
+def observe(state: RangeState, x: jnp.ndarray, cfg: QuantizerConfig) -> RangeState:
+    """Update range statistics with one calibration batch."""
+    if cfg.granularity == Granularity.PER_EMBEDDING_GROUP:
+        # Collect per-dim stats; grouping happens in finalize (needs the
+        # permutation, which itself is derived from the collected ranges).
+        per_dim_cfg = QuantizerConfig(bits=cfg.bits, symmetric=cfg.symmetric,
+                                      granularity=Granularity.PER_EMBEDDING,
+                                      channel_axis=cfg.channel_axis)
+        mn, mx = reduce_range(x, per_dim_cfg)
+    else:
+        mn, mx = reduce_range(x, cfg)
+    mn, mx = mn.astype(jnp.float32), mx.astype(jnp.float32)
+
+    if cfg.estimator == RangeEstimator.RUNNING_MINMAX:
+        m = cfg.ema_momentum
+        new_min = jnp.where(state.initialized, m * state.x_min + (1 - m) * mn, mn)
+        new_max = jnp.where(state.initialized, m * state.x_max + (1 - m) * mx, mx)
+    else:
+        # current min-max (single batch) and MSE both track the envelope;
+        # MSE then shrinks it in finalize().
+        new_min = jnp.where(state.initialized, jnp.minimum(state.x_min, mn), mn)
+        new_max = jnp.where(state.initialized, jnp.maximum(state.x_max, mx), mx)
+    return RangeState(new_min, new_max, jnp.asarray(True))
+
+
+def mse_search(x: jnp.ndarray, x_min: jnp.ndarray, x_max: jnp.ndarray,
+               cfg: QuantizerConfig,
+               group_index: Optional[jnp.ndarray] = None) -> QuantParams:
+    """Grid search over symmetric shrink ratios of [x_min, x_max].
+
+    Vectorized with vmap over the candidate grid; picks argmin of the
+    squared quantization error on the calibration tensor ``x``.
+    """
+    ratios = jnp.linspace(1.0 / cfg.mse_grid_points, 1.0, cfg.mse_grid_points)
+
+    def err_for(ratio):
+        qp = params_from_range(x_min * ratio, x_max * ratio, cfg,
+                               group_index=group_index)
+        e = jnp.square(x - fake_quant(x, qp, cfg))
+        if cfg.granularity == Granularity.PER_TENSOR:
+            return jnp.mean(e)                       # scalar
+        axis = cfg.channel_axis % x.ndim
+        red = tuple(a for a in range(x.ndim) if a != axis)
+        per_dim = jnp.mean(e, axis=red)              # (d,) or (C,)
+        if group_index is not None:                  # PEG: (d,) -> (K,)
+            k = int(qp.scale.shape[0])
+            return jnp.zeros((k,)).at[group_index].add(per_dim)
+        return per_dim
+
+    errs = jax.vmap(err_for)(ratios)                 # (G,) or (G, C)
+    best = jnp.argmin(errs, axis=0)                  # per-channel best ratio
+    best_ratio = ratios[best]
+    if group_index is not None:
+        gmin, gmax = _group_reduce(x_min, x_max, group_index,
+                                   int(best_ratio.shape[0]))
+        return params_from_range(gmin * best_ratio, gmax * best_ratio, cfg,
+                                 group_index=group_index)
+    return params_from_range(x_min * best_ratio, x_max * best_ratio, cfg,
+                             group_index=group_index)
+
+
+def finalize(state: RangeState, cfg: QuantizerConfig,
+             calib_tensor: Optional[jnp.ndarray] = None,
+             group_index: Optional[jnp.ndarray] = None) -> QuantParams:
+    """Turn accumulated statistics into QuantParams.
+
+    For PEG, ``group_index`` maps embedding dims to groups (built by
+    peg.build_groups from these very statistics). For the MSE estimator a
+    representative ``calib_tensor`` must be provided.
+    """
+    x_min, x_max = state.x_min, state.x_max
+    if cfg.granularity == Granularity.PER_EMBEDDING_GROUP:
+        if group_index is None:
+            raise ValueError("PEG finalize requires group_index")
+        if cfg.estimator == RangeEstimator.MSE:
+            if calib_tensor is None:
+                raise ValueError("MSE estimator needs a calibration tensor")
+            return mse_search(calib_tensor, x_min, x_max, cfg, group_index)
+        gmin, gmax = _group_reduce(x_min, x_max, group_index,
+                                   int(jnp.max(group_index)) + 1)
+        return params_from_range(gmin, gmax, cfg, group_index=group_index)
+
+    if cfg.estimator == RangeEstimator.MSE:
+        if calib_tensor is None:
+            raise ValueError("MSE estimator needs a calibration tensor")
+        return mse_search(calib_tensor, x_min, x_max, cfg)
+    return params_from_range(x_min, x_max, cfg)
+
+
+def estimate_weight_params(w: jnp.ndarray, cfg: QuantizerConfig) -> QuantParams:
+    """One-shot range estimation for a static weight tensor."""
+    mn, mx = reduce_range(w, cfg)
+    if cfg.estimator == RangeEstimator.MSE:
+        return mse_search(w, mn, mx, cfg)
+    return params_from_range(mn, mx, cfg)

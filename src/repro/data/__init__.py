@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataPipeline, IteratorState, shard_batch
+from repro.data.synthetic import (GLUE_SUITE, GLUETaskConfig, LMTaskConfig,
+                                  SyntheticGLUE, SyntheticLM)

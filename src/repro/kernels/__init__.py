@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's quantization hot-spots:
+
+  peg_quant      — fused per-embedding-group quantize(-dequantize)
+  int8_matmul    — s8xs8->s32 MXU matmul; PEG variant fuses the per-group
+                   accumulator re-scalings of paper eq. (4)->(5)
+  fused_ln_quant — LayerNorm + quantize in one VPU pass (Fig.-4 hot path)
+
+ops.py exposes jit'd wrappers (interpret mode on CPU, Mosaic on TPU);
+ref.py holds the pure-jnp oracles used by tests/test_kernels.py."""
+from repro.kernels import ops, ref

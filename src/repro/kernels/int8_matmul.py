@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: s8 x s8 -> s32 matmul with fused PEG re-scaling.
+
+Realizes the paper's eq. (4)->(5) on the MXU: with per-embedding-group
+activation scales, the accumulator must be re-scaled once per GROUP rather
+than once per element. We align the K-grid of the matmul to the PEG group
+boundaries, so each k-step contributes  s_g * (A_g @ W_g)  into an f32 VMEM
+scratch accumulator — exactly K re-scalings per output tile, fused with the
+matmul (no extra HBM traffic).
+
+Grid: (M/bm, N/bn, K/bk) with bk == group_size (lane-aligned multiple of 128).
+Weights are symmetric per-tensor int8 (paper setup), activations asymmetric
+per-group int8: A_hat = s_g (A_q - z_g), W_hat = s_w W_q, so
+
+  out = s_w * sum_g s_g [ (A_q,g @ W_q,g) - z_g * colsum(W_q,g) ]
+
+The zero-point correction term colsum(W_q,g) is precomputed by the wrapper
+(ops.py) and added per group — the standard fixed-point trick.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _vmem_scratch(shape, dtype):
+    """VMEM scratch accumulator (TPU target; interpret mode emulates it)."""
+    return pltpu.VMEM(shape, dtype)
+
+
+def _int8_matmul_kernel(sa_ref, za_ref, wcs_ref, a_ref, w_ref, o_ref,
+                        acc_ref, *, n_k: int, s_w: float):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    w = w_ref[...]
+    part = jax.lax.dot_general(a, w, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+    s_g = sa_ref[0]
+    z_g = za_ref[0]
+    # zero-point correction: z_g * colsum(W_q,g), precomputed per (group, n)
+    corr = wcs_ref[0, :].astype(jnp.float32)
+    acc_ref[...] += s_g * (part.astype(jnp.float32) - z_g * corr[None, :])
+
+    @pl.when(k_idx == n_k - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] * s_w).astype(o_ref.dtype)
+
+
+def int8_matmul_peg(a_q: jnp.ndarray, w_q: jnp.ndarray,
+                    act_scales: jnp.ndarray, act_zps: jnp.ndarray,
+                    w_scale: float, w_colsum_g: jnp.ndarray, *,
+                    out_dtype=jnp.float32, block_m: int = 256,
+                    block_n: int = 256, interpret: bool = False
+                    ) -> jnp.ndarray:
+    """a_q: (M, K) int8 group-sorted; w_q: (K, N) int8; act_scales/zps: (G,);
+    w_colsum_g: (G, N) int32 = per-group column sums of w_q.
+    K % G == 0 and group_size = K // G (the k-block)."""
+    m, k = a_q.shape
+    k2, n = w_q.shape
+    assert k == k2
+    g = act_scales.shape[0]
+    assert k % g == 0
+    bk = k // g
+    bm, bn = min(block_m, m), min(block_n, n)
+    assert m % bm == 0 and n % bn == 0
+
+    kernel = functools.partial(_int8_matmul_kernel, n_k=g, s_w=float(w_scale))
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        grid=(m // bm, n // bn, g),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j, kk: (kk,)),        # s_g
+            pl.BlockSpec((1,), lambda i, j, kk: (kk,)),        # z_g
+            pl.BlockSpec((1, bn), lambda i, j, kk: (kk, j)),   # colsum slice
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),  # A tile
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),  # W tile
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        scratch_shapes=[_vmem_scratch((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(act_scales.astype(jnp.float32), act_zps.astype(jnp.float32),
+      w_colsum_g, a_q, w_q)
+
+
+def _int8_matmul_pertensor_kernel(a_ref, w_ref, o_ref, acc_ref, *,
+                                  n_k: int, s_out: float):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...].astype(jnp.float32) * s_out
+                      ).astype(o_ref.dtype)
+
+
+def int8_matmul(a_q: jnp.ndarray, w_q: jnp.ndarray, s_a: float, s_w: float,
+                *, out_dtype=jnp.float32, block_m: int = 256,
+                block_n: int = 256, block_k: int = 512,
+                interpret: bool = False) -> jnp.ndarray:
+    """Per-tensor symmetric path (paper eq. 3): one rescale at the end.
+    a_q: (M, K) int8, w_q: (K, N) int8."""
+    m, k = a_q.shape
+    _, n = w_q.shape
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+
+    kernel = functools.partial(_int8_matmul_pertensor_kernel,
+                               n_k=k // bk, s_out=float(s_a) * float(s_w))
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        scratch_shapes=[_vmem_scratch((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(a_q, w_q)

@@ -1,0 +1,85 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode — the kernel body
+executes in Python for correctness validation; on TPU the same call lowers to
+Mosaic. ``interpret=None`` auto-detects.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_ln_quant as _lnq
+from repro.kernels import int8_matmul as _imm
+from repro.kernels import peg_quant as _peg
+from repro.kernels import ref as _ref
+
+
+def _interp(flag: Optional[bool]) -> bool:
+    if flag is None:
+        return jax.default_backend() != "tpu"
+    return flag
+
+
+@functools.partial(jax.jit, static_argnames=("qmin", "qmax", "block_t",
+                                             "interpret"))
+def peg_fake_quant(x, scales, zps, *, qmin: int = 0, qmax: int = 255,
+                   block_t: int = 256, interpret: Optional[bool] = None):
+    return _peg.peg_fake_quant(x, scales, zps, qmin=qmin, qmax=qmax,
+                               block_t=block_t, interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("qmin", "qmax", "block_t",
+                                             "interpret"))
+def peg_quantize(x, scales, zps, *, qmin: int = 0, qmax: int = 255,
+                 block_t: int = 256, interpret: Optional[bool] = None):
+    return _peg.peg_quantize(x, scales, zps, qmin=qmin, qmax=qmax,
+                             block_t=block_t, interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("s_a", "s_w", "block_m",
+                                             "block_n", "block_k",
+                                             "interpret"))
+def int8_matmul(a_q, w_q, *, s_a: float, s_w: float, block_m: int = 256,
+                block_n: int = 256, block_k: int = 512,
+                interpret: Optional[bool] = None):
+    return _imm.int8_matmul(a_q, w_q, s_a, s_w, block_m=block_m,
+                            block_n=block_n, block_k=block_k,
+                            interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("w_scale", "block_m", "block_n",
+                                             "interpret"))
+def int8_matmul_peg(a_q, w_q, act_scales, act_zps, *, w_scale: float,
+                    block_m: int = 256, block_n: int = 256,
+                    interpret: Optional[bool] = None):
+    """PEG fixed-point matmul: K re-scalings fused into the MXU k-loop.
+    Computes the zero-point correction internally."""
+    g = act_scales.shape[0]
+    w_colsum = _ref.w_colsum_groups(w_q, g)
+    return _imm.int8_matmul_peg(a_q, w_q, act_scales, act_zps, w_scale,
+                                w_colsum, block_m=block_m, block_n=block_n,
+                                interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("qmin", "qmax", "eps", "block_t",
+                                             "interpret"))
+def ln_fake_quant(x, gamma, beta, scale, zp, *, qmin: int = 0,
+                  qmax: int = 255, eps: float = 1e-6, block_t: int = 256,
+                  interpret: Optional[bool] = None):
+    return _lnq.ln_fake_quant(x, gamma, beta, scale, zp, qmin=qmin, qmax=qmax,
+                              eps=eps, block_t=block_t,
+                              interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("qmin", "qmax", "eps", "block_t",
+                                             "interpret"))
+def ln_quantize(x, gamma, beta, scale, zp, *, qmin: int = 0, qmax: int = 255,
+                eps: float = 1e-6, block_t: int = 256,
+                interpret: Optional[bool] = None):
+    return _lnq.ln_quantize(x, gamma, beta, scale, zp, qmin=qmin, qmax=qmax,
+                            eps=eps, block_t=block_t,
+                            interpret=_interp(interpret))

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: fused per-embedding-group quantize-dequantize.
+
+The paper's PEG scheme (eq. 5) on TPU: the range-based permutation is folded
+into the weights (DESIGN.md §3), so at runtime the embedding axis is already
+group-sorted and groups are contiguous, 128-lane-aligned spans. The kernel
+tiles (tokens x one group) per program: the group's scalar (scale, zero-point)
+lives in SMEM, the block in VMEM, and quant->clip->dequant fuses into one
+VPU pass — no HBM round-trip for the integer intermediate.
+
+Grid: (T / block_t, K). Block: (block_t, group_size).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _peg_fakequant_kernel(s_ref, z_ref, x_ref, o_ref, *, qmin, qmax):
+    s = s_ref[0]
+    z = z_ref[0]
+    x = x_ref[...].astype(jnp.float32)
+    q = jnp.round(x / s) + z
+    q = jnp.clip(q, qmin, qmax)
+    o_ref[...] = ((q - z) * s).astype(o_ref.dtype)
+
+
+def _peg_quantize_kernel(s_ref, z_ref, x_ref, o_ref, *, qmin, qmax):
+    s = s_ref[0]
+    z = z_ref[0]
+    x = x_ref[...].astype(jnp.float32)
+    q = jnp.round(x / s) + z
+    o_ref[...] = jnp.clip(q, qmin, qmax).astype(o_ref.dtype)
+
+
+def peg_fake_quant(x: jnp.ndarray, scales: jnp.ndarray, zps: jnp.ndarray,
+                   *, qmin: int, qmax: int, block_t: int = 256,
+                   interpret: bool = False) -> jnp.ndarray:
+    """x: (T, d) group-sorted activations; scales/zps: (K,) with d % K == 0.
+
+    Returns fake-quantized x (same shape/dtype).
+    """
+    t, d = x.shape
+    k = scales.shape[0]
+    assert d % k == 0, "PEG kernel requires uniform (lane-aligned) groups"
+    gs = d // k
+    bt = min(block_t, t)
+    assert t % bt == 0, f"token count {t} not divisible by block {bt}"
+
+    kernel = functools.partial(_peg_fakequant_kernel, qmin=qmin, qmax=qmax)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        grid=(t // bt, k),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (j,)),            # scale (SMEM-able)
+            pl.BlockSpec((1,), lambda i, j: (j,)),            # zero point
+            pl.BlockSpec((bt, gs), lambda i, j: (i, j)),      # activations
+        ],
+        out_specs=pl.BlockSpec((bt, gs), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(scales.astype(jnp.float32), zps.astype(jnp.float32), x)
+
+
+def peg_quantize(x: jnp.ndarray, scales: jnp.ndarray, zps: jnp.ndarray,
+                 *, qmin: int, qmax: int, out_dtype=jnp.int8,
+                 block_t: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """Emit the integer tensor (deployment path). Same layout rules."""
+    t, d = x.shape
+    k = scales.shape[0]
+    assert d % k == 0
+    gs = d // k
+    bt = min(block_t, t)
+    assert t % bt == 0
+
+    kernel = functools.partial(_peg_quantize_kernel, qmin=qmin, qmax=qmax)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((t, d), out_dtype),
+        grid=(t // bt, k),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (j,)),
+            pl.BlockSpec((bt, gs), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, gs), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(scales.astype(jnp.float32), zps.astype(jnp.float32), x)

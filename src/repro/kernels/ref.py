@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def peg_fake_quant_ref(x, scales, zps, *, qmin, qmax):
+    """x: (T, d) group-sorted; scales/zps: (K,), uniform groups."""
+    t, d = x.shape
+    k = scales.shape[0]
+    gs = d // k
+    s = jnp.repeat(scales.astype(jnp.float32), gs)[None, :]
+    z = jnp.repeat(zps.astype(jnp.float32), gs)[None, :]
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s) + z, qmin, qmax)
+    return ((q - z) * s).astype(x.dtype)
+
+
+def peg_quantize_ref(x, scales, zps, *, qmin, qmax, out_dtype=jnp.int8):
+    t, d = x.shape
+    k = scales.shape[0]
+    gs = d // k
+    s = jnp.repeat(scales.astype(jnp.float32), gs)[None, :]
+    z = jnp.repeat(zps.astype(jnp.float32), gs)[None, :]
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / s) + z, qmin,
+                    qmax).astype(out_dtype)
+
+
+def int8_matmul_ref(a_q, w_q, s_a, s_w, out_dtype=jnp.float32):
+    acc = jnp.einsum("mk,kn->mn", a_q.astype(jnp.int32),
+                     w_q.astype(jnp.int32))
+    return (acc.astype(jnp.float32) * (s_a * s_w)).astype(out_dtype)
+
+
+def int8_matmul_peg_ref(a_q, w_q, act_scales, act_zps, w_scale,
+                        out_dtype=jnp.float32):
+    """Dequantize-then-matmul oracle for the PEG fixed-point path."""
+    m, k = a_q.shape
+    g = act_scales.shape[0]
+    gs = k // g
+    s = jnp.repeat(act_scales.astype(jnp.float32), gs)[None, :]
+    z = jnp.repeat(act_zps.astype(jnp.float32), gs)[None, :]
+    a_hat = (a_q.astype(jnp.float32) - z) * s
+    w_hat = w_q.astype(jnp.float32) * w_scale
+    return (a_hat @ w_hat).astype(out_dtype)
+
+
+def w_colsum_groups(w_q, num_groups):
+    """(G, N) per-group column sums of int8 weights (zero-point correction)."""
+    k, n = w_q.shape
+    gs = k // num_groups
+    return jnp.sum(w_q.reshape(num_groups, gs, n).astype(jnp.int32), axis=1)
+
+
+def ln_fake_quant_ref(x, gamma, beta, scale, zp, *, qmin, qmax, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+    q = jnp.clip(jnp.round(y / scale) + zp, qmin, qmax)
+    return ((q - zp) * scale).astype(x.dtype)
+
+
+def ln_quantize_ref(x, gamma, beta, scale, zp, *, qmin, qmax, eps=1e-6,
+                    out_dtype=jnp.int8):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+    return jnp.clip(jnp.round(y / scale) + zp, qmin, qmax).astype(out_dtype)

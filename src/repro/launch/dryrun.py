@@ -1,0 +1,468 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent without real
+hardware.
+
+For every (architecture x input-shape) cell and mesh (single-pod 16x16,
+multi-pod 2x16x16):  build ShapeDtypeStruct stand-ins (no allocation), lower
+the train/prefill/serve step with pjit shardings, ``.compile()``, and record:
+
+  * memory_analysis()  — bytes per device (proves it fits 16 GB HBM)
+  * cost_analysis()    — per-device HLO FLOPs / bytes for the roofline
+  * collective bytes   — parsed from the post-SPMD HLO (all-gather,
+    all-reduce, reduce-scatter, all-to-all, collective-permute)
+
+Results land in benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json;
+EXPERIMENTS.md §Dry-run and §Roofline are generated from them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-20b \
+      --shape train_4k [--multi-pod] [--all] [--out DIR]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config, input_specs, shape_cells
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tfm
+from repro.optim import linear_warmup_linear_decay
+from repro.parallel import (make_batch_shardings, make_cache_shardings,
+                            make_dist, make_param_shardings)
+from repro.runtime.steps import (make_decode_step, make_prefill_step,
+                                 make_train_step)
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*\(")
+SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|s8|u8|u32|pred|s64|u64|f64)"
+                      r"\[([0-9,]*)\]")
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8}
+
+
+def microbatches_for(cfg: ModelConfig, shape_name: str, dp: int) -> int:
+    """Gradient-accumulation factor so per-device activations fit 16 GB.
+    Heuristic by model size; validated against memory_analysis()."""
+    if SHAPES[shape_name]["kind"] != "train":
+        return 1
+    B = SHAPES[shape_name]["global_batch"]
+    per_dev = B // dp
+    n = cfg.num_params
+    if n > 1e10:
+        want = 16          # B_local = 1 at dp=16
+    elif n > 2e9:
+        want = 8
+    else:
+        want = 4
+    # M must divide B with B/M still divisible by dp
+    m = min(want, per_dev)
+    while B % m or (B // m) % dp:
+        m -= 1
+    return max(m, 1)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes of every collective op in the (post-SPMD,
+    per-device) HLO. The result type sits between '=' and the op name, so we
+    parse shapes in line[:op_match.start()]. For all-reduce /
+    reduce-scatter / collective-permute result size == wire payload; for
+    all-gather the result is the gathered tensor (a ~1x upper bound on
+    per-device ring traffic) — a standard approximation, noted in
+    EXPERIMENTS.md. NOTE: ops inside scan bodies appear once; the roofline
+    uses the cost-extrapolation variants to scale them by trip count."""
+    totals: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        nbytes = 0
+        for dt, dims in SHAPE_RE.findall(line[:m.start()]):
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            nbytes += n * DTYPE_BYTES[dt]
+        totals[kind] = totals.get(kind, 0) + nbytes
+    totals["total"] = sum(v for k, v in totals.items() if k != "total")
+    return totals
+
+
+def _sds_like(tree, shardings):
+    return jax.tree.map(
+        lambda leaf, sh: jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                              sharding=sh), tree, shardings)
+
+
+WEIGHT_NAMES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_in", "w_out",
+                "embed", "lm_head", "w_r", "w_k", "w_v", "w_g", "w_o",
+                "w_ck", "w_cv", "w_cr", "w_rnn_in", "w_gate_in")
+
+
+def _int8_param_sds(params_sds):
+    """W8 serving variant: big weight leaves become {"q": int8, "s": f32}
+    (repro.models.common.resolve_weight dequantizes at the use site, fused
+    into the consuming matmul -> HBM reads 2x fewer weight bytes)."""
+    flat = jax.tree_util.tree_flatten_with_path(params_sds)
+    out = []
+    for path, leaf in flat[0]:
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        big = int(np.prod(leaf.shape)) >= (1 << 20)
+        if name in WEIGHT_NAMES and big and leaf.ndim >= 2:
+            s_shape = leaf.shape[:-2] + (1,) + leaf.shape[-1:]
+            out.append({
+                "q": jax.ShapeDtypeStruct(leaf.shape, jnp.int8,
+                                          sharding=leaf.sharding),
+                "s": jax.ShapeDtypeStruct(s_shape, jnp.float32),
+            })
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(flat[1], out)
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh, *,
+               microbatches: Optional[int] = None, remat: bool = True,
+               chunked=None, stacked: bool = True,
+               weights_int8: bool = False, onehot_embed: bool = False,
+               quantized_gathers: bool = False):
+    """Returns (step_fn, arg_sds tuple) ready to lower. ``stacked=False``
+    builds the UNROLLED layout (cost variants: no scan -> every layer's
+    work visible to cost_analysis)."""
+    dist = make_dist(mesh)
+    if onehot_embed or quantized_gathers:
+        import dataclasses as _dc
+        dist = _dc.replace(dist, onehot_embed=onehot_embed,
+                           quantized_gathers=quantized_gathers)
+    dp = int(np.prod([mesh.shape[a] for a in dist.dp_axes]))
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    B, T = sh["global_batch"], sh["seq_len"]
+    dtype = jnp.bfloat16
+
+    if cfg.encoder_layers:
+        params_shape = jax.eval_shape(
+            lambda: encdec_lib.init_params(cfg, jax.random.PRNGKey(0),
+                                           dtype=dtype))
+    else:
+        params_shape = jax.eval_shape(
+            lambda: tfm.init_params(cfg, jax.random.PRNGKey(0),
+                                    stacked=stacked, dtype=dtype))
+    p_shard = make_param_shardings(params_shape, dist)
+    params_sds = _sds_like(params_shape, p_shard)
+    if weights_int8:
+        params_sds = _int8_param_sds(params_sds)
+
+    if kind == "train":
+        m = microbatches if microbatches is not None \
+            else microbatches_for(cfg, shape_name, dp)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        # 8-bit Adam (int8 moments, row scales) for the 100B+ models — the
+        # paper's grouped quantization applied to optimizer state; without
+        # it their moments alone overflow 16 GB/chip (DESIGN.md §4).
+        use_8bit = cfg.num_params > 1e11
+        if use_8bit:
+            from repro.optim.quantized_adam import (QAdamState, qadam_init,
+                                                    qadam_shardings)
+            opt_shape = jax.eval_shape(qadam_init, params_shape)
+            for_leaf = qadam_shardings(p_shard)
+
+            def _m_shard(sh, m):
+                if isinstance(m, dict):
+                    return for_leaf(sh)
+                return sh
+            opt_sharding = QAdamState(
+                step=NamedSharding(mesh, P()),
+                mu=jax.tree.map(_m_shard, p_shard, opt_shape.mu),
+                nu=jax.tree.map(_m_shard, p_shard, opt_shape.nu))
+        else:
+            from repro.optim.adam import AdamState, adam_init
+            opt_shape = jax.eval_shape(adam_init, params_shape)
+            opt_sharding = AdamState(
+                step=NamedSharding(mesh, P()),
+                mu=p_shard, nu=jax.tree.map(lambda s: s, p_shard))
+        opt_sds = _sds_like(opt_shape, opt_sharding)
+        batch = _train_batch_sds(cfg, B, T, mesh, dist)
+        lr = linear_warmup_linear_decay(1e-4, 10_000)
+        step = make_train_step(cfg, lr_schedule=lr, microbatches=m,
+                               dist=dist, remat=remat, chunked=chunked,
+                               optimizer="adam8bit" if use_8bit else "adam",
+                               accum_dtype=jnp.bfloat16 if use_8bit
+                               else jnp.float32)
+        # donate params+opt: the optimizer update reuses their buffers
+        # in-place instead of double-buffering the Adam moments
+        return step, (params_sds, opt_sds, batch), {"microbatches": m,
+                                                    "donate": (0, 1)}
+
+    if kind == "prefill":
+        if cfg.encoder_layers:
+            frames = jax.ShapeDtypeStruct((B, T, cfg.d_model), dtype)
+            bos = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+            fr_sh = make_batch_shardings({"f": jnp.zeros((B, 1))}, dist)["f"]
+            frames = jax.ShapeDtypeStruct((B, T, cfg.d_model), dtype,
+                                          sharding=fr_sh)
+            from repro.runtime.steps import make_encoder_forward
+            step = make_encoder_forward(cfg, dist=dist)
+            return step, (params_sds, frames, bos), {}
+        cache_shape = jax.eval_shape(
+            lambda: tfm.init_cache(cfg, B, T, stacked=stacked, dtype=dtype))
+        c_shard = make_cache_shardings(cache_shape, dist)
+        cache_sds = _sds_like(cache_shape, c_shard)
+        toks = _tokens_sds(cfg, B, T, dist, with_embeds=bool(cfg.frontend))
+        step = make_prefill_step(cfg, dist=dist, chunked=chunked)
+        if cfg.frontend:
+            def step_fe(params, tokens, cache, embeds):
+                return step(params, tokens, cache, embeds=embeds)
+            return step_fe, (params_sds, toks["tokens"], cache_sds,
+                             toks["embeds"]), {"donate": (2,)}
+        return step, (params_sds, toks["tokens"], cache_sds), {"donate": (2,)}
+
+    # decode
+    if cfg.encoder_layers:
+        cache_shape = jax.eval_shape(
+            lambda: encdec_lib.init_decoder_cache(cfg, B, T, T, dtype))
+        c_shard = make_cache_shardings(cache_shape, dist)
+        cache_sds = _sds_like(cache_shape, c_shard)
+    else:
+        cache_shape = jax.eval_shape(
+            lambda: tfm.init_cache(cfg, B, T, stacked=stacked, dtype=dtype))
+        c_shard = make_cache_shardings(cache_shape, dist)
+        cache_sds = _sds_like(cache_shape, c_shard)
+    tok_sh = make_batch_shardings(
+        {"t": jnp.zeros((B, 1), jnp.int32)}, dist)["t"]
+    toks = jax.ShapeDtypeStruct((B, 1), jnp.int32, sharding=tok_sh)
+    pos = jax.ShapeDtypeStruct((B, 1), jnp.int32, sharding=tok_sh)
+    step = make_decode_step(cfg, dist=dist)
+    # donate the cache: the decode step updates it in place
+    return step, (params_sds, toks, pos, cache_sds), {"donate": (3,)}
+
+
+def _train_batch_sds(cfg, B, T, mesh, dist):
+    from jax.sharding import NamedSharding
+    batch = {}
+    host = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    sh = make_batch_shardings(host, dist)["tokens"]
+    if cfg.encoder_layers:
+        # enc-dec train: frames take half the cell's seq budget, tokens half
+        S = T // 2
+        batch["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               jnp.bfloat16, sharding=sh)
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=sh)
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=sh)
+        return batch
+    T_text = T - cfg.num_frontend_tokens if cfg.frontend else T
+    batch["tokens"] = jax.ShapeDtypeStruct((B, T_text), jnp.int32,
+                                           sharding=sh)
+    batch["labels"] = jax.ShapeDtypeStruct((B, T_text), jnp.int32,
+                                           sharding=sh)
+    if cfg.frontend:
+        batch["embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_frontend_tokens, cfg.d_model), jnp.bfloat16,
+            sharding=sh)
+    return batch
+
+
+def _tokens_sds(cfg, B, T, dist, with_embeds=False):
+    sh = make_batch_shardings({"t": jnp.zeros((B, 1), jnp.int32)}, dist)["t"]
+    T_text = T - cfg.num_frontend_tokens if with_embeds else T
+    out = {"tokens": jax.ShapeDtypeStruct((B, T_text), jnp.int32,
+                                          sharding=sh)}
+    if with_embeds:
+        out["embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_frontend_tokens, cfg.d_model), jnp.bfloat16,
+            sharding=sh)
+    return out
+
+
+def _lower_compile(cfg, shape_name, mesh, **kw):
+    t0 = time.time()
+    step, args, info = build_cell(cfg, shape_name, mesh, **kw)
+    donate = info.pop("donate", ())
+    with mesh:
+        lowered = jax.jit(step, donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": collective_bytes(hlo),
+        "mem": mem, "lower_s": t_lower, "compile_s": t_compile,
+        "info": info,
+    }
+
+
+def _extrapolate(c1: dict, c2: dict, n_super: int, keys=("flops", "bytes")):
+    """Linear-in-layers extrapolation: f(L) = A + B*L from samples at 1, 2.
+
+    cost_analysis counts scan bodies ONCE; the cost variants are lowered
+    with 1 and 2 pattern repeats + NO grad accumulation + dense (loop-free)
+    attention so every layer's work is visible, then scaled to the real
+    depth. (rwkv's small inter-chunk state scan remains undercounted —
+    <~10% of its wkv flops — noted in EXPERIMENTS.md.)"""
+    out = {}
+    for k in keys:
+        b = c2[k] - c1[k]
+        a = c1[k] - b
+        out[k] = a + b * n_super
+    coll = {}
+    for kind in set(c1["coll"]) | set(c2["coll"]):
+        b = c2["coll"].get(kind, 0) - c1["coll"].get(kind, 0)
+        a = c1["coll"].get(kind, 0) - b
+        coll[kind] = max(a + b * n_super, 0)
+    out["coll"] = coll
+    return out
+
+
+VARIANT_FLAGS = {
+    "baseline": {},
+    "banded": {"chunked": "banded"},          # O(T*W) sliding-window attn
+    "w8": {"weights_int8": True},             # int8 weight storage (serve)
+    "w8_banded": {"weights_int8": True, "chunked": "banded"},
+    "ohembed": {"onehot_embed": True},        # vocab-sharded decode lookup
+    "serve8": {"weights_int8": True, "onehot_embed": True},
+    "q8gather": {"quantized_gathers": True},  # int8 FSDP weight gathers
+}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str = "benchmarks/results/dryrun",
+             microbatches: Optional[int] = None,
+             variant: str = "baseline", with_cost: bool = True) -> dict:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    vflags = VARIANT_FLAGS[variant]
+
+    # 1) EXEC lowering: the real config — proves it compiles and fits.
+    ex = _lower_compile(cfg, shape_name, mesh, microbatches=microbatches,
+                        **vflags)
+    mem = ex["mem"]
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant,
+        "kind": SHAPES[shape_name]["kind"],
+        "num_params": cfg.num_params,
+        "active_params": cfg.active_params(),
+        "exec_raw": {"flops_per_device": ex["flops"],
+                     "bytes_per_device": ex["bytes"],
+                     "collective_bytes_per_device": ex["coll"],
+                     "note": "scan bodies counted once (see *_extrapolated)"},
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_hbm_estimate": mem.argument_size_in_bytes +
+            mem.output_size_in_bytes + mem.temp_size_in_bytes -
+            mem.alias_size_in_bytes,
+        },
+        "lower_s": round(ex["lower_s"], 1),
+        "compile_s": round(ex["compile_s"], 1),
+        **ex["info"],
+    }
+
+    # 2) COST lowerings at 1 and 2 pattern repeats -> per-device totals.
+    if with_cost:
+        cost_flags = dict(vflags)
+        if cost_flags.get("chunked") != "banded":
+            cost_flags["chunked"] = False
+        c1 = _lower_compile(cfg.with_supers(1), shape_name, mesh,
+                            microbatches=1, stacked=False, **cost_flags)
+        c2 = _lower_compile(cfg.with_supers(2), shape_name, mesh,
+                            microbatches=1, stacked=False, **cost_flags)
+        ext = _extrapolate(c1, c2, cfg.n_super)
+        result["flops_per_device"] = ext["flops"]
+        result["bytes_per_device"] = ext["bytes"]
+        result["collective_bytes_per_device"] = ext["coll"]
+        result["cost_samples"] = {
+            "n1": {"flops": c1["flops"], "bytes": c1["bytes"],
+                   "coll_total": c1["coll"].get("total", 0)},
+            "n2": {"flops": c2["flops"], "bytes": c2["bytes"],
+                   "coll_total": c2["coll"].get("total", 0)},
+            "n_super": cfg.n_super,
+        }
+
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    path = os.path.join(out_dir,
+                        f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) for the chosen mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--variant", default="baseline",
+                    choices=list(VARIANT_FLAGS))
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_IDS
+    archs = [args.arch] if args.arch else \
+        [a for a in ARCH_IDS if a != "bert-base"]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = [args.shape] if args.shape else shape_cells(cfg)
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                sfx = "" if args.variant == "baseline" else \
+                    f"__{args.variant}"
+                path = os.path.join(
+                    args.out, f"{arch}__{shape}__{mesh_name}{sfx}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {arch} {shape} {mesh_name}")
+                    continue
+                try:
+                    r = run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                                 microbatches=args.microbatches,
+                                 variant=args.variant)
+                    print(f"[ok] {arch} {shape} {mesh_name}: "
+                          f"{r.get('flops_per_device', 0):.3e} flops/dev, "
+                          f"{r['memory']['peak_hbm_estimate']/2**30:.2f} GiB,"
+                          f" compile {r['compile_s']}s", flush=True)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape, mesh_name, str(e)[:200]))
+                    print(f"[FAIL] {arch} {shape} {mesh_name}: {e}",
+                          file=sys.stderr)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    print("\nall dry-run cells compiled")
+
+
+if __name__ == "__main__":
+    main()

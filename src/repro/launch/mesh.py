@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — required for the smoke tests, which must see
+one CPU device, while the dry-run sets xla_force_host_platform_device_count
+before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2x16x16 = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_from_spec(spec: str):
+    """e.g. "8x16" -> (data=8, model=16); "2x8x16" -> (pod, data, model).
+    Used by elastic-resume (--mesh) in the launchers."""
+    dims = tuple(int(x) for x in spec.split("x"))
+    if len(dims) == 2:
+        axes = ("data", "model")
+    elif len(dims) == 3:
+        axes = ("pod", "data", "model")
+    else:
+        raise ValueError(f"bad mesh spec {spec!r}")
+    return jax.make_mesh(dims, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(dims))

@@ -1,0 +1,102 @@
+"""Production training launcher.
+
+Examples (real cluster; on this CPU container use reduced configs):
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b \
+      --shape train_4k --steps 1000 --checkpoint-dir /ckpt/gemma2 \
+      [--mesh 16x16] [--multi-pod] [--grad-compression] [--resume]
+
+  # CPU smoke (reduced config, tiny mesh):
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --reduced \
+      --steps 5 --batch 4 --seq 32
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.data import DataPipeline, LMTaskConfig, SyntheticLM, shard_batch
+from repro.launch.mesh import make_mesh_from_spec, make_production_mesh
+from repro.models import transformer as tfm
+from repro.optim import linear_warmup_linear_decay
+from repro.optim.adam import adam_init
+from repro.parallel import (make_batch_shardings, make_dist,
+                            make_param_shardings)
+from repro.runtime import TrainLoopConfig, make_train_step, run_train_loop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--lr", type=float, default=1e-4)
+    ap.add_argument("--mesh", default=None, help="e.g. 16x16 or 2x16x16")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config on the local device (CPU smoke)")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=100)
+    ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+        mesh = None
+        dist = None
+        B = args.batch or 4
+        T = args.seq or 32
+        dtype = jnp.float32
+    else:
+        mesh = (make_mesh_from_spec(args.mesh) if args.mesh
+                else make_production_mesh(multi_pod=args.multi_pod))
+        dist = make_dist(mesh)
+        B = args.batch or SHAPES[args.shape]["global_batch"]
+        T = args.seq or SHAPES[args.shape]["seq_len"]
+        dtype = jnp.bfloat16
+
+    key = jax.random.PRNGKey(args.seed)
+    params = tfm.init_params(cfg, key, stacked=True, dtype=dtype)
+    if dist is not None:
+        shardings = make_param_shardings(params, dist)
+        params = jax.tree.map(jax.device_put, params, shardings)
+    opt_state = adam_init(params)
+
+    lr = linear_warmup_linear_decay(args.lr, args.steps)
+    step = make_train_step(cfg, lr_schedule=lr,
+                           microbatches=args.microbatches, dist=dist)
+    jit_step = jax.jit(step, donate_argnums=(0, 1))
+
+    src = SyntheticLM(LMTaskConfig(vocab_size=cfg.vocab_size, seq_len=T),
+                      seed=args.seed)
+    pipe = DataPipeline(src, batch_size=B, seed=args.seed)
+
+    def put(batch):
+        batch = {"tokens": batch["tokens"], "labels": batch["labels"]}
+        if dist is not None:
+            return shard_batch(batch, mesh, dist.dp_axes)
+        return jax.tree.map(jnp.asarray, batch)
+
+    loop_cfg = TrainLoopConfig(
+        total_steps=args.steps,
+        checkpoint_every=args.checkpoint_every,
+        checkpoint_dir=args.checkpoint_dir,
+        resume=not args.no_resume)
+    out = run_train_loop(jit_step, params, opt_state, pipe, loop_cfg,
+                         put_batch=put)
+    print(f"[train] finished at step {out['step']}; "
+          f"{len(out['straggler_events'])} straggler events")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Model substrate: pure-JAX transformer families (dense/GQA/SWA, MoE,
+RG-LRU hybrid, RWKV6, encoder-decoder, BERT) with the paper's quantization
+sites threaded throughout.
+
+Submodules are imported directly (``from repro.models import transformer``)
+rather than re-exported here, to keep config <-> model imports acyclic."""

@@ -1,0 +1,293 @@
+"""Multi-head attention: MHA / GQA / MQA, sliding-window, local+global,
+logit soft-capping, RoPE, KV cache (full + ring-buffer windowed), and a
+flash-style chunked path (online softmax over KV chunks via lax.scan) so long
+contexts never materialize the (T, S) score matrix.
+
+Quantization sites (paper Fig. 1 naming) are threaded via QuantCtx:
+  {prefix}/q, {prefix}/k, {prefix}/v       — linear outputs
+  {prefix}/softmax_in, {prefix}/softmax_out
+  {prefix}/ctx_out                          — self-attention output (after Wo)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, softcap
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    causal: bool = True
+    window: Optional[int] = None          # sliding-window size (None = global)
+    logit_softcap: Optional[float] = None # gemma-2 style
+    rope_theta: Optional[float] = 10000.0 # None = no RoPE (e.g. BERT)
+    query_scale: Optional[float] = None   # default 1/sqrt(head_dim)
+
+    @property
+    def q_groups(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    @property
+    def scale(self) -> float:
+        return (self.query_scale if self.query_scale is not None
+                else 1.0 / math.sqrt(self.head_dim))
+
+
+class KVCache(NamedTuple):
+    """k/v: (B, S, KV, hd); pos: (B, S) absolute positions (-1 = empty).
+    S = max_len for global attention, window size for sliding-window."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+    pos: jnp.ndarray
+
+
+def init_kv_cache(batch: int, max_len: int, cfg: AttnConfig,
+                  dtype=jnp.bfloat16) -> KVCache:
+    size = min(max_len, cfg.window) if cfg.window else max_len
+    return KVCache(
+        k=jnp.zeros((batch, size, cfg.num_kv_heads, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, size, cfg.num_kv_heads, cfg.head_dim), dtype),
+        pos=jnp.full((batch, size), -1, jnp.int32))
+
+
+def _mask(q_pos, k_pos, cfg: AttnConfig):
+    """Boolean validity mask (..., T, S) from absolute positions."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    valid = kp >= 0
+    if cfg.causal:
+        valid &= kp <= qp
+    if cfg.window is not None:
+        valid &= kp > qp - cfg.window
+    return valid
+
+
+def _dense_attend(q, k, v, q_pos, k_pos, cfg: AttnConfig, ctx=None, prefix=""):
+    """q: (B,T,H,hd), k/v: (B,S,KV,hd). Returns (B,T,H,hd)."""
+    B, T, H, hd = q.shape
+    S = k.shape[1]
+    KV, G = cfg.num_kv_heads, cfg.q_groups
+    qg = q.reshape(B, T, KV, G, hd)
+    logits = jnp.einsum("btkgd,bskd->bkgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * cfg.scale
+    logits = softcap(logits, cfg.logit_softcap)
+    if ctx is not None:
+        logits = ctx.act(f"{prefix}/softmax_in", logits)
+    valid = _mask(q_pos, k_pos, cfg)[:, None, None]     # (B,1,1,T,S)
+    logits = jnp.where(valid, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if ctx is not None:
+        probs = ctx.act(f"{prefix}/softmax_out", probs)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs.astype(jnp.float32),
+                     v.astype(jnp.float32))
+    return out.reshape(B, T, H, hd).astype(q.dtype)
+
+
+def _chunked_attend(q, k, v, q_pos, k_pos, cfg: AttnConfig,
+                    kv_chunk: int = 1024):
+    """Flash-style online-softmax scan over KV chunks; never materializes
+    the full (T, S) score matrix. Numerically matches _dense_attend."""
+    B, T, H, hd = q.shape
+    S = k.shape[1]
+    KV, G = cfg.num_kv_heads, cfg.q_groups
+    qg = q.reshape(B, T, KV, G, hd).astype(jnp.float32) * cfg.scale
+
+    n_chunks = -(-S // kv_chunk)
+    pad = n_chunks * kv_chunk - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+
+    ks = k.reshape(B, n_chunks, kv_chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, n_chunks, kv_chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    ps = k_pos.reshape(B, n_chunks, kv_chunk).transpose(1, 0, 2)
+
+    def step(carry, chunk):
+        m, l, acc = carry                       # running max / denom / numer
+        kc, vc, pc = chunk                      # (B,C,KV,hd), (B,C)
+        s = jnp.einsum("btkgd,bckd->bkgtc", qg, kc.astype(jnp.float32))
+        s = softcap(s, cfg.logit_softcap)
+        valid = _mask(q_pos, pc, cfg)[:, None, None]
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows: keep m finite
+        m_new = jnp.maximum(m_new, -1e30)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgtc,bckd->bkgtd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, T), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, T), jnp.float32)
+    acc0 = jnp.zeros((B, KV, G, T, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (ks, vs, ps))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, T, H, hd).astype(q.dtype)
+
+
+def _banded_attend(q, k, v, q_pos, k_pos, cfg: AttnConfig,
+                   block: int = 1024):
+    """Sliding-window attention that COMPUTES only the band (perf variant):
+    queries are processed in blocks of ``block``; each block attends only to
+    the kv blocks that can intersect its window — O(T·W) flops/bytes instead
+    of O(T²). Requires aligned q/k (self-attention layout, q_pos == k_pos ==
+    arange) and cfg.window set.
+    """
+    B, T, H, hd = q.shape
+    W = cfg.window
+    assert W is not None
+    nq = -(-T // block)
+    pad = nq * block - T
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-10**9)
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    Tp = nq * block
+    nband = -(-W // block) + 1            # kv blocks a q block can reach
+    KV = cfg.num_kv_heads
+
+    qb = q.reshape(B, nq, block, H, hd)
+    kb = k.reshape(B, nq, block, KV, hd)
+    vb = v.reshape(B, nq, block, KV, hd)
+    qp = q_pos.reshape(B, nq, block)
+    kp = k_pos.reshape(B, nq, block)
+
+    # band gather: for q block i, kv blocks [i-nband+1 .. i] (causal window)
+    idx = jnp.arange(nq)[:, None] - (nband - 1) + jnp.arange(nband)[None, :]
+    valid_blk = idx >= 0
+    idx_c = jnp.clip(idx, 0, nq - 1)
+    k_band = kb[:, idx_c].reshape(B, nq, nband * block, KV, hd)
+    v_band = vb[:, idx_c].reshape(B, nq, nband * block, KV, hd)
+    kp_band = jnp.where(valid_blk[None, :, :, None], kp[:, idx_c], -1)
+    kp_band = kp_band.reshape(B, nq, nband * block)
+
+    # fold (B, nq) into the batch dim and reuse the dense kernel per band
+    q2 = qb.reshape(B * nq, block, H, hd)
+    k2 = k_band.reshape(B * nq, nband * block, KV, hd)
+    v2 = v_band.reshape(B * nq, nband * block, KV, hd)
+    qp2 = qp.reshape(B * nq, block)
+    kp2 = kp_band.reshape(B * nq, nband * block)
+    out = _dense_attend(q2, k2, v2, qp2, kp2, cfg)
+    return out.reshape(B, Tp, H, hd)[:, :T]
+
+
+def attend(q, k, v, q_pos, k_pos, cfg: AttnConfig, *, ctx=None, prefix="",
+           chunked: Optional[bool] = None, kv_chunk: int = 1024,
+           banded: bool = False):
+    """Dispatch dense vs chunked vs banded. Dense supports quant sites;
+    chunked is the long-context path (online softmax, no (T,S)
+    materialization); banded computes only the sliding-window band
+    (perf variant, requires cfg.window and self-attention layout)."""
+    T, S = q.shape[1], k.shape[1]
+    if (banded or chunked == "banded") and cfg.window is not None \
+            and T == S and T > cfg.window:
+        return _banded_attend(q, k, v, q_pos, k_pos, cfg)
+    if chunked is None or chunked == "banded":
+        chunked = (T * S > 4096 * 4096)
+    if chunked:
+        return _chunked_attend(q, k, v, q_pos, k_pos, cfg, kv_chunk)
+    return _dense_attend(q, k, v, q_pos, k_pos, cfg, ctx, prefix)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block with projections + cache handling
+# ---------------------------------------------------------------------------
+
+def attention_block(p, x, positions, cfg: AttnConfig, *, ctx=None,
+                    prefix="attn", cache: Optional[KVCache] = None,
+                    chunked: Optional[bool] = None
+                    ) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    """x: (B, T, D). p: dict with wq (D,H*hd), wk/wv (D,KV*hd), wo (H*hd,D).
+
+    Training/prefill: cache=None or empty cache to fill.
+    Decode: T == 1 (or small), cache holds past KV; returns updated cache.
+    """
+    B, T, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    def w(name):
+        from repro.models.common import resolve_weight
+        wmat = resolve_weight(p[name])
+        return ctx.weight(f"{prefix}/{name}", wmat) if ctx is not None else wmat
+
+    q = (x @ w("wq")).reshape(B, T, H, hd)
+    k = (x @ w("wk")).reshape(B, T, KV, hd)
+    v = (x @ w("wv")).reshape(B, T, KV, hd)
+    if "q_norm" in p:   # qwen3-style per-head QK norm
+        from repro.models.common import rms_norm
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if cfg.rope_theta is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if ctx is not None:
+        q = ctx.act(f"{prefix}/q", q)
+        k = ctx.act(f"{prefix}/k", k)
+        v = ctx.act(f"{prefix}/v", v)
+
+    new_cache = None
+    positions = jnp.broadcast_to(positions, (B, T))
+    if cache is not None:
+        S = cache.k.shape[1]
+        if T > 1:
+            # Prefill: attend over the fresh K/V (window enforced by mask),
+            # then write the last min(T, S) tokens into the cache.
+            keep = min(T, S)
+            kw, vw, pw = k[:, -keep:], v[:, -keep:], positions[:, -keep:]
+            slots = pw % S if cfg.window else pw
+            bidx = jnp.arange(B)[:, None]
+            new_cache = KVCache(
+                k=cache.k.at[bidx, slots].set(kw.astype(cache.k.dtype)),
+                v=cache.v.at[bidx, slots].set(vw.astype(cache.v.dtype)),
+                pos=cache.pos.at[bidx, slots].set(pw))
+            k_att, v_att, kpos_att = k, v, positions
+        else:
+            # Decode: write the new token, attend over the cache.
+            slots = positions % S if cfg.window else positions
+            bidx = jnp.arange(B)[:, None]
+            k_upd = cache.k.at[bidx, slots].set(k.astype(cache.k.dtype))
+            v_upd = cache.v.at[bidx, slots].set(v.astype(cache.v.dtype))
+            pos_upd = cache.pos.at[bidx, slots].set(positions)
+            new_cache = KVCache(k=k_upd, v=v_upd, pos=pos_upd)
+            k_att, v_att, kpos_att = k_upd, v_upd, pos_upd
+    else:
+        k_att, v_att = k, v
+        kpos_att = positions
+
+    out = attend(q, k_att.astype(q.dtype), v_att.astype(q.dtype),
+                 jnp.broadcast_to(positions, (B, T)), kpos_att, cfg,
+                 ctx=ctx, prefix=prefix, chunked=chunked)
+    out = out.reshape(B, T, H * hd) @ w("wo")
+    if ctx is not None:
+        out = ctx.act(f"{prefix}/ctx_out", out)
+    return out, new_cache
+
+
+def init_attention_params(key, d_model: int, cfg: AttnConfig,
+                          dtype=jnp.float32, qk_norm: bool = False):
+    from repro.models.common import dense_init, split_keys
+    k1, k2, k3, k4 = split_keys(key, 4)
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {"wq": dense_init(k1, d_model, H * hd, dtype),
+         "wk": dense_init(k2, d_model, KV * hd, dtype),
+         "wv": dense_init(k3, d_model, KV * hd, dtype),
+         "wo": dense_init(k4, H * hd, d_model, dtype)}
+    if qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p

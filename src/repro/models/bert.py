@@ -1,0 +1,234 @@
+"""BERT encoder — the paper's model, with every quantization site of the
+paper's Fig. 1 threaded through QuantCtx (post-LN blocks, learned positions,
+token-type embeddings, pooler + classification/regression head).
+
+Sites (per layer i):
+  layer{i}/attn/{q,k,v,softmax_in,softmax_out,ctx_out}
+  layer{i}/residual_attn           — sum x + attn_out (input of LN_attn)
+  layer{i}/ln_attn                 — LN output (= FFN input path)
+  layer{i}/ffn_in                  — FFN input (paper "FFN's input")
+  layer{i}/ffn/hidden              — GELU hidden
+  layer{i}/ffn_out                 — FFN output (paper "FFN's output")
+  layer{i}/residual_ffn            — THE bottleneck: sum after FFN
+  layer{i}/ln_ffn                  — LN output feeding the next layer
+Global: embed/sum, head/pooled, head/logits.
+Weight sites: layer{i}/attn/{wq,wk,wv,wo}, layer{i}/ffn/{w_in,w_out},
+embed/tokens, head/w_pool, head/w_cls.
+
+For BERT-base (12 layers) this yields 8 + 12*13 = 161-ish activation
+quantizers, matching the paper's "36 of 161" accounting granularity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import AttnConfig, _dense_attend
+from repro.models.common import (cross_entropy, dense_init, embed_init, gelu,
+                                 layer_norm, split_keys)
+
+
+@dataclasses.dataclass(frozen=True)
+class BertConfig:
+    num_layers: int = 12
+    d_model: int = 768
+    num_heads: int = 12
+    d_ff: int = 3072
+    vocab_size: int = 30522
+    type_vocab: int = 2
+    max_positions: int = 512
+    num_labels: int = 2
+    regression: bool = False      # STS-B-style
+
+    @property
+    def hd(self):
+        return self.d_model // self.num_heads
+
+
+def tiny(num_labels=2, regression=False, **kw) -> BertConfig:
+    """The reduced BERT used by the reproduction benchmarks."""
+    defaults = dict(num_layers=4, d_model=128, num_heads=4, d_ff=512,
+                    vocab_size=1024, max_positions=128,
+                    num_labels=num_labels, regression=regression)
+    defaults.update(kw)
+    return BertConfig(**defaults)
+
+
+def init_params(cfg: BertConfig, key, dtype=jnp.float32):
+    ks = split_keys(key, cfg.num_layers + 6)
+    params: Dict[str, Any] = {
+        "tok_embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "pos_embed": embed_init(ks[1], cfg.max_positions, cfg.d_model, dtype),
+        "type_embed": embed_init(ks[2], cfg.type_vocab, cfg.d_model, dtype),
+        "embed_ln_g": jnp.ones((cfg.d_model,), dtype),
+        "embed_ln_b": jnp.zeros((cfg.d_model,), dtype),
+        "w_pool": dense_init(ks[3], cfg.d_model, cfg.d_model, dtype),
+        "b_pool": jnp.zeros((cfg.d_model,), dtype),
+        "w_cls": dense_init(ks[4], cfg.d_model, cfg.num_labels, dtype),
+        "b_cls": jnp.zeros((cfg.num_labels,), dtype),
+        "layers": [],
+    }
+    for i in range(cfg.num_layers):
+        lk = split_keys(ks[5 + i], 6)
+        params["layers"].append({
+            "wq": dense_init(lk[0], cfg.d_model, cfg.d_model, dtype),
+            "wk": dense_init(lk[1], cfg.d_model, cfg.d_model, dtype),
+            "wv": dense_init(lk[2], cfg.d_model, cfg.d_model, dtype),
+            "wo": dense_init(lk[3], cfg.d_model, cfg.d_model, dtype),
+            "bq": jnp.zeros((cfg.d_model,), dtype),
+            "bk": jnp.zeros((cfg.d_model,), dtype),
+            "bv": jnp.zeros((cfg.d_model,), dtype),
+            "bo": jnp.zeros((cfg.d_model,), dtype),
+            "ln_attn_g": jnp.ones((cfg.d_model,), dtype),
+            "ln_attn_b": jnp.zeros((cfg.d_model,), dtype),
+            "w_in": dense_init(lk[4], cfg.d_model, cfg.d_ff, dtype),
+            "b_in": jnp.zeros((cfg.d_ff,), dtype),
+            "w_out": dense_init(lk[5], cfg.d_ff, cfg.d_model, dtype),
+            "b_out": jnp.zeros((cfg.d_model,), dtype),
+            "ln_ffn_g": jnp.ones((cfg.d_model,), dtype),
+            "ln_ffn_b": jnp.zeros((cfg.d_model,), dtype),
+        })
+    return params
+
+
+def _self_attention(cfg: BertConfig, p, x, pad_mask, ctx, prefix):
+    B, T, D = x.shape
+    H, hd = cfg.num_heads, cfg.hd
+
+    def w(name):
+        return ctx.weight(f"{prefix}/{name}", p[name]) if ctx is not None else p[name]
+
+    q = (x @ w("wq") + p["bq"]).reshape(B, T, H, hd)
+    k = (x @ w("wk") + p["bk"]).reshape(B, T, H, hd)
+    v = (x @ w("wv") + p["bv"]).reshape(B, T, H, hd)
+    if ctx is not None:
+        q = ctx.act(f"{prefix}/q", q)
+        k = ctx.act(f"{prefix}/k", k)
+        v = ctx.act(f"{prefix}/v", v)
+    acfg = AttnConfig(num_heads=H, num_kv_heads=H, head_dim=hd, causal=False,
+                      rope_theta=None)
+    # positions encode padding: valid tokens >= 0, padded -> -1 (masked out)
+    pos = jnp.where(pad_mask, jnp.arange(T, dtype=jnp.int32)[None], -1)
+    out = _dense_attend(q, k, v, jnp.zeros((B, T), jnp.int32), pos, acfg,
+                        ctx=ctx, prefix=prefix)
+    out = out.reshape(B, T, D) @ w("wo") + p["bo"]
+    if ctx is not None:
+        out = ctx.act(f"{prefix}/ctx_out", out)
+    return out
+
+
+def encode(cfg: BertConfig, params, tokens, *, type_ids=None, pad_mask=None,
+           ctx=None):
+    """tokens: (B, T) -> hidden states (B, T, D)."""
+    B, T = tokens.shape
+    if pad_mask is None:
+        pad_mask = jnp.ones((B, T), bool)
+    if type_ids is None:
+        type_ids = jnp.zeros((B, T), jnp.int32)
+
+    def wsite(site, w):
+        return ctx.weight(site, w) if ctx is not None else w
+
+    x = jnp.take(wsite("embed/tokens", params["tok_embed"]), tokens, axis=0)
+    x = x + params["pos_embed"][None, :T]
+    x = x + jnp.take(params["type_embed"], type_ids, axis=0)
+    if ctx is not None:
+        x = ctx.act("embed/sum", x)       # paper: "sum of embeddings"
+    x = layer_norm(x, params["embed_ln_g"], params["embed_ln_b"])
+    if ctx is not None:
+        x = ctx.act("embed/ln", x)
+
+    for i, p in enumerate(params["layers"]):
+        pre = f"layer{i}"
+        attn_out = _self_attention(cfg, p, x, pad_mask, ctx, f"{pre}/attn")
+        s = x + attn_out
+        if ctx is not None:
+            s = ctx.act(f"{pre}/residual_attn", s)
+        x = layer_norm(s, p["ln_attn_g"], p["ln_attn_b"])
+        if ctx is not None:
+            x = ctx.act(f"{pre}/ln_attn", x)
+
+        f_in = x
+        if ctx is not None:
+            f_in = ctx.act(f"{pre}/ffn_in", f_in)
+        h = f_in @ (ctx.weight(f"{pre}/ffn/w_in", p["w_in"])
+                    if ctx is not None else p["w_in"]) + p["b_in"]
+        h = gelu(h)
+        if ctx is not None:
+            h = ctx.act(f"{pre}/ffn/hidden", h)
+        f_out = h @ (ctx.weight(f"{pre}/ffn/w_out", p["w_out"])
+                     if ctx is not None else p["w_out"]) + p["b_out"]
+        if ctx is not None:
+            f_out = ctx.act(f"{pre}/ffn_out", f_out)
+        s = x + f_out
+        if ctx is not None:
+            s = ctx.act(f"{pre}/residual_ffn", s)   # THE paper bottleneck
+        x = layer_norm(s, p["ln_ffn_g"], p["ln_ffn_b"])
+        if ctx is not None:
+            x = ctx.act(f"{pre}/ln_ffn", x)
+    return x
+
+
+def classify(cfg: BertConfig, params, tokens, *, type_ids=None,
+             pad_mask=None, ctx=None):
+    """Sequence classification/regression head on [CLS] (position 0)."""
+    h = encode(cfg, params, tokens, type_ids=type_ids, pad_mask=pad_mask,
+               ctx=ctx)
+    cls = h[:, 0]
+    pooled = jnp.tanh(cls @ (ctx.weight("head/w_pool", params["w_pool"])
+                             if ctx is not None else params["w_pool"])
+                      + params["b_pool"])
+    if ctx is not None:
+        pooled = ctx.act("head/pooled", pooled)
+    logits = pooled @ (ctx.weight("head/w_cls", params["w_cls"])
+                       if ctx is not None else params["w_cls"]) + params["b_cls"]
+    if ctx is not None:
+        logits = ctx.act("head/logits", logits)
+    return logits
+
+
+def loss_fn(cfg: BertConfig, params, batch, ctx=None):
+    logits = classify(cfg, params, batch["tokens"],
+                      type_ids=batch.get("type_ids"),
+                      pad_mask=batch.get("pad_mask"), ctx=ctx)
+    if cfg.regression:
+        return jnp.mean(jnp.square(logits[:, 0] - batch["labels"]))
+    onehot_ce = cross_entropy(logits, batch["labels"])
+    return onehot_ce
+
+
+def predict(cfg: BertConfig, params, batch, ctx=None):
+    logits = classify(cfg, params, batch["tokens"],
+                      type_ids=batch.get("type_ids"),
+                      pad_mask=batch.get("pad_mask"), ctx=ctx)
+    if cfg.regression:
+        return logits[:, 0]
+    return jnp.argmax(logits, axis=-1)
+
+
+def named_weight_sites(cfg: BertConfig, params) -> Dict[str, jnp.ndarray]:
+    """site -> weight array, for PTQ weight-state building / AdaRound."""
+    out = {"embed/tokens": params["tok_embed"],
+           "head/w_pool": params["w_pool"], "head/w_cls": params["w_cls"]}
+    for i, p in enumerate(params["layers"]):
+        for nm in ("wq", "wk", "wv", "wo"):
+            out[f"layer{i}/attn/{nm}"] = p[nm]
+        out[f"layer{i}/ffn/w_in"] = p["w_in"]
+        out[f"layer{i}/ffn/w_out"] = p["w_out"]
+    return out
+
+
+def activation_sites(cfg: BertConfig) -> list:
+    """All activation site names (for the paper's '161 quantizers' census)."""
+    sites = ["embed/sum", "embed/ln", "head/pooled", "head/logits"]
+    for i in range(cfg.num_layers):
+        pre = f"layer{i}"
+        sites += [f"{pre}/attn/q", f"{pre}/attn/k", f"{pre}/attn/v",
+                  f"{pre}/attn/softmax_in", f"{pre}/attn/softmax_out",
+                  f"{pre}/attn/ctx_out", f"{pre}/residual_attn",
+                  f"{pre}/ln_attn", f"{pre}/ffn_in", f"{pre}/ffn/hidden",
+                  f"{pre}/ffn_out", f"{pre}/residual_ffn", f"{pre}/ln_ffn"]
+    return sites

@@ -1,0 +1,116 @@
+"""Shared model building blocks (pure JAX, functional)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-6):
+    mu = jnp.mean(x.astype(jnp.float32), axis=-1, keepdims=True)
+    var = jnp.var(x.astype(jnp.float32), axis=-1, keepdims=True)
+    out = (x.astype(jnp.float32) - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma + beta).astype(x.dtype)
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def softcap(x, cap: Optional[float]):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x):
+    return jax.nn.silu(x)
+
+
+ACTIVATIONS = {"gelu": gelu, "silu": silu, "relu": jax.nn.relu}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., T, hd/2)
+    angles = angles[..., None, :]                       # (..., T, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# Losses / metrics
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Token-level CE. logits (..., V), labels (...) int32. mask optional."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# int8 weight storage (W8 serving variant)
+# ---------------------------------------------------------------------------
+
+def resolve_weight(w):
+    """Weights may be stored quantized: {"q": int8, "s": f32 per-out-channel}.
+    Dequantization happens at the use site so XLA fuses the convert into the
+    consuming matmul — HBM reads the int8 payload (2x fewer bytes than bf16,
+    the serving win the paper targets)."""
+    if isinstance(w, dict) and "q" in w:
+        return (w["q"].astype(jnp.bfloat16) * w["s"].astype(jnp.bfloat16))
+    return w
+
+
+def quantize_weight_int8(w, axis: int = -1):
+    """Symmetric per-out-channel int8 storage for a weight matrix."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0, keepdims=True)
+    s = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / s), -127, 127)
+    return {"q": q.astype(jnp.int8), "s": s.astype(jnp.float32)}

@@ -1,0 +1,248 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+Encoder consumes precomputed frame embeddings (the audio frontend is a stub
+per the assignment); decoder is a standard causal transformer with
+cross-attention into the encoder memory. Learned absolute positions,
+LayerNorm, pre-norm blocks. Layers are scanned (stacked params).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ffn as ffn_lib
+from repro.models.attention import (AttnConfig, KVCache, attend,
+                                    attention_block, init_attention_params,
+                                    init_kv_cache)
+from repro.models.common import (cross_entropy, embed_init, layer_norm,
+                                 split_keys)
+
+
+def _acfg(cfg: ModelConfig, causal: bool) -> AttnConfig:
+    return AttnConfig(num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                      head_dim=cfg.hd, causal=causal, rope_theta=None)
+
+
+def _ln(p, x):
+    return layer_norm(x, p["g"], p["b"])
+
+
+def _init_ln(d, dtype):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _init_layer(cfg: ModelConfig, key, dtype, cross: bool):
+    ks = split_keys(key, 3)
+    p = {"ln1": _init_ln(cfg.d_model, dtype),
+         "attn": init_attention_params(ks[0], cfg.d_model, _acfg(cfg, True),
+                                       dtype),
+         "ln2": _init_ln(cfg.d_model, dtype),
+         "ffn": ffn_lib.init_mlp_params(ks[1], cfg.d_model, cfg.d_ff, dtype)}
+    if cross:
+        p["ln_x"] = _init_ln(cfg.d_model, dtype)
+        p["xattn"] = init_attention_params(ks[2], cfg.d_model,
+                                           _acfg(cfg, False), dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key, *, dtype=jnp.bfloat16):
+    ks = split_keys(key, cfg.encoder_layers + cfg.num_layers + 4)
+    enc = [_init_layer(cfg, ks[i], dtype, cross=False)
+           for i in range(cfg.encoder_layers)]
+    dec = [_init_layer(cfg, ks[cfg.encoder_layers + i], dtype, cross=True)
+           for i in range(cfg.num_layers)]
+    return {
+        "embed": embed_init(ks[-1], cfg.vocab_size, cfg.d_model, dtype),
+        "enc_pos": embed_init(ks[-2], cfg.max_seq_len, cfg.d_model, dtype),
+        "dec_pos": embed_init(ks[-3], cfg.max_seq_len, cfg.d_model, dtype),
+        "enc_scan": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "dec_scan": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "enc_norm": _init_ln(cfg.d_model, dtype),
+        "final_norm": _init_ln(cfg.d_model, dtype),
+    }
+
+
+def _cross_attention(p, x, memory, mem_pos, cfg: ModelConfig, ctx=None,
+                     prefix="xattn", cached_kv: Optional[Tuple] = None):
+    """x: (B,T,D) queries; memory: (B,S,D) encoder output (or None if
+    cached_kv given)."""
+    B, T, D = x.shape
+    acfg = _acfg(cfg, causal=False)
+    H, KV, hd = acfg.num_heads, acfg.num_kv_heads, acfg.head_dim
+
+    def w(name):
+        return ctx.weight(f"{prefix}/{name}", p[name]) if ctx is not None else p[name]
+
+    q = (x @ w("wq")).reshape(B, T, H, hd)
+    if cached_kv is not None:
+        k, v = cached_kv
+    else:
+        k = (memory @ w("wk")).reshape(B, -1, KV, hd)
+        v = (memory @ w("wv")).reshape(B, -1, KV, hd)
+    q_pos = jnp.zeros((B, T), jnp.int32)       # non-causal: positions unused
+    out = attend(q, k.astype(q.dtype), v.astype(q.dtype), q_pos, mem_pos,
+                 acfg, ctx=ctx, prefix=prefix)
+    return out.reshape(B, T, H * hd) @ w("wo"), (k, v)
+
+
+def encode(cfg: ModelConfig, params, frames, *, ctx=None):
+    """frames: (B, S, D) stub frontend embeddings -> encoder memory."""
+    B, S, D = frames.shape
+    pos = jnp.arange(S, dtype=jnp.int32)
+    x = frames.astype(params["enc_pos"].dtype) + params["enc_pos"][pos][None]
+    if ctx is not None:
+        x = ctx.act("embed/sum", x)
+    positions = jnp.broadcast_to(pos, (B, S))
+    acfg = _acfg(cfg, causal=False)
+
+    def layer(x, p):
+        h = _ln(p["ln1"], x)
+        a, _ = attention_block(p["attn"], h, positions, acfg, ctx=ctx,
+                               prefix="enc/attn")
+        x = x + a
+        h = _ln(p["ln2"], x)
+        if ctx is not None:
+            h = ctx.act("enc/ffn_in", h)
+        f = ffn_lib.mlp(p["ffn"], h, activation=cfg.act, ctx=ctx,
+                        prefix="enc/ffn")
+        if ctx is not None:
+            f = ctx.act("enc/ffn_out", f)
+        x = x + f
+        if ctx is not None:
+            x = ctx.act("enc/residual_ffn", x)
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, params["enc_scan"])
+    return _ln(params["enc_norm"], x)
+
+
+class DecoderCache(NamedTuple):
+    self_kv: Any                  # stacked KVCache (L leading)
+    cross_k: jnp.ndarray          # (L, B, S, KV, hd)
+    cross_v: jnp.ndarray
+    mem_pos: jnp.ndarray          # (B, S)
+
+
+def init_decoder_cache(cfg: ModelConfig, batch: int, max_len: int,
+                       mem_len: int, dtype=jnp.bfloat16) -> DecoderCache:
+    L = cfg.num_layers
+    kv = [init_kv_cache(batch, max_len, _acfg(cfg, True), dtype)
+          for _ in range(L)]
+    return DecoderCache(
+        self_kv=jax.tree.map(lambda *xs: jnp.stack(xs), *kv),
+        cross_k=jnp.zeros((L, batch, mem_len, cfg.num_kv_heads, cfg.hd), dtype),
+        cross_v=jnp.zeros((L, batch, mem_len, cfg.num_kv_heads, cfg.hd), dtype),
+        mem_pos=jnp.zeros((batch, mem_len), jnp.int32))
+
+
+def decode(cfg: ModelConfig, params, tokens, memory=None, *, positions=None,
+           cache: Optional[DecoderCache] = None, ctx=None):
+    """Decoder forward. Training: memory given, cache None, full teacher
+    forcing. Serving: cache carries self-KV + projected cross-KV."""
+    B, T = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    x = jnp.take(params["embed"], tokens, axis=0) + \
+        jnp.take(params["dec_pos"], positions, axis=0)
+    if ctx is not None:
+        x = ctx.act("dec/embed_sum", x)
+    acfg = _acfg(cfg, causal=True)
+    if memory is not None:
+        S = memory.shape[1]
+        mem_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    else:
+        mem_pos = cache.mem_pos
+
+    def layer(x, slices):
+        p, self_c, xk, xv = slices
+        h = _ln(p["ln1"], x)
+        a, new_self = attention_block(p["attn"], h, positions, acfg, ctx=ctx,
+                                      prefix="dec/attn", cache=self_c)
+        x = x + a
+        if ctx is not None:
+            x = ctx.act("dec/residual_attn", x)
+        h = _ln(p["ln_x"], x)
+        if memory is not None:
+            a, (xk, xv) = _cross_attention(p["xattn"], h, memory, mem_pos,
+                                           cfg, ctx=ctx)
+        else:
+            a, _ = _cross_attention(p["xattn"], h, None, mem_pos, cfg,
+                                    ctx=ctx, cached_kv=(xk, xv))
+        x = x + a
+        h = _ln(p["ln2"], x)
+        if ctx is not None:
+            h = ctx.act("dec/ffn_in", h)
+        f = ffn_lib.mlp(p["ffn"], h, activation=cfg.act, ctx=ctx,
+                        prefix="dec/ffn")
+        if ctx is not None:
+            f = ctx.act("dec/ffn_out", f)
+        x = x + f
+        if ctx is not None:
+            x = ctx.act("dec/residual_ffn", x)
+        return x, (new_self, xk, xv)
+
+    L = cfg.num_layers
+    if cache is not None:
+        xs = (params["dec_scan"], cache.self_kv, cache.cross_k, cache.cross_v)
+    else:
+        dummy_k = jnp.zeros((L, B, 1, cfg.num_kv_heads, cfg.hd), x.dtype)
+        xs = (params["dec_scan"],
+              jax.tree.map(lambda t: t, _none_cache(cfg, L, B, x.dtype)),
+              dummy_k, dummy_k)
+
+    def scan_fn(x, sl):
+        p, self_c, xk, xv = sl
+        self_c = self_c if cache is not None else None
+        x, (new_self, nxk, nxv) = layer(x, (p, self_c, xk, xv))
+        if cache is None:
+            new_self = _dummy_kv(cfg, B, x.dtype)
+        return x, (new_self, nxk, nxv)
+
+    x, (new_self, new_xk, new_xv) = jax.lax.scan(scan_fn, x, xs)
+    logits = _ln(params["final_norm"], x) @ params["embed"].T.astype(x.dtype)
+    if ctx is not None:
+        logits = ctx.act("head/logits", logits)
+    new_cache = None
+    if cache is not None:
+        new_cache = DecoderCache(self_kv=new_self, cross_k=new_xk,
+                                 cross_v=new_xv, mem_pos=mem_pos)
+    return logits, new_cache
+
+
+def _dummy_kv(cfg, B, dtype):
+    return init_kv_cache(B, 1, _acfg(cfg, True), dtype)
+
+
+def _none_cache(cfg, L, B, dtype):
+    kv = [_dummy_kv(cfg, B, dtype) for _ in range(L)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *kv)
+
+
+def train_loss(cfg: ModelConfig, params, batch, *, ctx=None, dist=None,
+               remat: bool = True):
+    """batch: {frames (B,S,D), tokens (B,T), labels (B,T)}."""
+    memory = encode(cfg, params, batch["frames"], ctx=ctx)
+    logits, _ = decode(cfg, params, batch["tokens"], memory, ctx=ctx)
+    return cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+
+def prefill_from_encoder(cfg: ModelConfig, params, frames, bos_tokens,
+                         max_decode_len: int, *, ctx=None):
+    """Encode + project cross-KV + first decoder step."""
+    memory = encode(cfg, params, frames, ctx=ctx)
+    B, S, _ = memory.shape
+    cache = init_decoder_cache(cfg, B, max_decode_len, S, memory.dtype)
+    cache = cache._replace(
+        mem_pos=jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S)))
+    pos0 = jnp.zeros((B, 1), jnp.int32)
+    logits, cache = decode(cfg, params, bos_tokens, memory=memory,
+                           positions=pos0, cache=cache, ctx=ctx)
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, tokens, pos,
+                cache: DecoderCache, *, ctx=None, dist=None):
+    return decode(cfg, params, tokens, positions=pos, cache=cache, ctx=ctx)

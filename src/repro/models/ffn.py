@@ -1,0 +1,69 @@
+"""Feed-forward blocks with the paper's quantization sites.
+
+The residual connection *after* the FFN is the paper's headline bottleneck
+(Table 2); the transformer block in transformer.py therefore taps
+``{prefix}/ffn_in`` (FFN input = LN output feeding the residual),
+``{prefix}/ffn_out`` (FFN output before the residual add) and
+``{prefix}/residual_ffn`` (the sum) — the three tensors PEG-PTQ targets.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.models.common import ACTIVATIONS, dense_init, split_keys
+
+
+def mlp(p, x, *, activation: str = "gelu", ctx=None, prefix: str = "ffn"):
+    """Classic 2-layer MLP (BERT-style). p: w_in (D,F), b_in, w_out (F,D), b_out."""
+    act = ACTIVATIONS[activation]
+
+    def w(name):
+        from repro.models.common import resolve_weight
+        wm = resolve_weight(p[name])
+        return ctx.weight(f"{prefix}/{name}", wm) if ctx is not None else wm
+
+    h = x @ w("w_in")
+    if "b_in" in p:
+        h = h + p["b_in"]
+    h = act(h)
+    if ctx is not None:
+        h = ctx.act(f"{prefix}/hidden", h)
+    out = h @ w("w_out")
+    if "b_out" in p:
+        out = out + p["b_out"]
+    return out
+
+
+def glu_mlp(p, x, *, activation: str = "silu", ctx=None, prefix: str = "ffn"):
+    """Gated MLP (SwiGLU/GeGLU). p: w_gate (D,F), w_up (D,F), w_out (F,D)."""
+    act = ACTIVATIONS[activation]
+
+    def w(name):
+        from repro.models.common import resolve_weight
+        wm = resolve_weight(p[name])
+        return ctx.weight(f"{prefix}/{name}", wm) if ctx is not None else wm
+
+    g = act(x @ w("w_gate")) * (x @ w("w_up"))
+    if ctx is not None:
+        g = ctx.act(f"{prefix}/hidden", g)
+    return g @ w("w_out")
+
+
+def init_mlp_params(key, d_model: int, d_ff: int, dtype=jnp.float32,
+                    bias: bool = True):
+    k1, k2 = split_keys(key, 2)
+    p = {"w_in": dense_init(k1, d_model, d_ff, dtype),
+         "w_out": dense_init(k2, d_ff, d_model, dtype)}
+    if bias:
+        p["b_in"] = jnp.zeros((d_ff,), dtype)
+        p["b_out"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def init_glu_params(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = split_keys(key, 3)
+    return {"w_gate": dense_init(k1, d_model, d_ff, dtype),
+            "w_up": dense_init(k2, d_model, d_ff, dtype),
+            "w_out": dense_init(k3, d_ff, d_model, dtype)}

@@ -1,0 +1,24 @@
+"""Modality frontend STUBS (per the assignment: the transformer backbone is
+specified; the audio/vision frontend provides precomputed frame/patch
+embeddings via input_specs()).
+
+These helpers synthesize deterministic embeddings for smoke tests and
+examples; production inputs arrive as (B, N, d_model) arrays."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def synth_patch_embeddings(key, batch: int, num_tokens: int, d_model: int,
+                           dtype=jnp.bfloat16):
+    """Stand-in for a CLIP vision tower output (phi-3-vision)."""
+    return (jax.random.normal(key, (batch, num_tokens, d_model)) * 0.02
+            ).astype(dtype)
+
+
+def synth_frame_embeddings(key, batch: int, num_frames: int, d_model: int,
+                           dtype=jnp.bfloat16):
+    """Stand-in for a speech feature encoder output (seamless-m4t)."""
+    return (jax.random.normal(key, (batch, num_frames, d_model)) * 0.02
+            ).astype(dtype)

@@ -1,0 +1,184 @@
+"""Mixture-of-Experts with top-k routing and capacity-based, sort-ordered
+dispatch.
+
+Two execution paths share the routing math:
+
+  * ``moe_apply`` — single-device path (smoke tests, calibration, quant
+    integration). Sort-based dispatch into an (E, C, D) buffer, batched
+    expert matmuls, weighted combine.
+  * ``moe_apply_sharded`` — expert-parallel production path, to be called
+    INSIDE ``shard_map``: activations are data-sharded and replicated over the
+    ``model`` axis; each model shard owns E/ep experts and processes all local
+    tokens routed to them, so NO all-to-all is required — the only collective
+    is the psum over ``model`` that TP needs anyway (DESIGN.md §4).
+
+Router logits are range-sensitive (softmax input — mirrors the paper's
+Table-2 finding); the quant policy keeps them ≥16-bit via site
+``{prefix}/router_logits``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ACTIVATIONS, dense_init, split_keys
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden size
+    capacity_factor: float = 1.25
+    activation: str = "silu"
+    norm_topk: bool = True         # qwen3 normalizes top-k probs
+    min_capacity: int = 8          # decode-time floor (no drops at tiny t)
+
+
+def _capacity(t: int, cfg: MoEConfig) -> int:
+    """Per-expert slot count: capacity-factor based, floored for tiny token
+    counts (decode must never drop), never above t (an expert can receive at
+    most one row per token)."""
+    cap = int(t * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(1, min(t, max(cap, cfg.min_capacity)))
+
+
+def router_probs(p, x, cfg: MoEConfig, ctx=None, prefix="moe"):
+    """x: (t, D) -> (probs (t, E), top_p (t, k), top_e (t, k))."""
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    if ctx is not None:
+        logits = ctx.act(f"{prefix}/router_logits", logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.norm_topk:
+        top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+    return probs, top_p, top_e
+
+
+def _dispatch_indices(top_e: jnp.ndarray, num_experts: int, capacity: int,
+                      e_lo: int = 0, e_hi: Optional[int] = None):
+    """Sort-based dispatch bookkeeping.
+
+    top_e: (t, k) expert ids. Returns (order, slot, keep, token_of_row) where
+    rows are the t*k (token, choice) pairs in expert-sorted order; ``slot`` is
+    the destination row in the local (E_local*C) buffer (overflow -> trash).
+    """
+    t, k = top_e.shape
+    e_hi = num_experts if e_hi is None else e_hi
+    flat_e = top_e.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)                 # (t*k,)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(num_experts))
+    pos = jnp.arange(t * k) - starts[sorted_e]               # rank within expert
+    local_e = sorted_e - e_lo
+    keep = (sorted_e >= e_lo) & (sorted_e < e_hi) & (pos < capacity)
+    trash = (e_hi - e_lo) * capacity
+    slot = jnp.where(keep, local_e * capacity + pos, trash)
+    token_of_row = order // k
+    return order, slot, keep, token_of_row
+
+
+def _expert_ffn(p, buf, cfg: MoEConfig):
+    """buf: (E_local, C, D) -> (E_local, C, D) through per-expert gated MLP."""
+    from repro.models.common import resolve_weight
+    act = ACTIVATIONS[cfg.activation]
+    wg = resolve_weight(p["w_gate"])
+    wu = resolve_weight(p["w_up"])
+    wo = resolve_weight(p["w_out"])
+    h = act(jnp.einsum("ecd,edf->ecf", buf, wg)) * \
+        jnp.einsum("ecd,edf->ecf", buf, wu)
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def _dispatch_compute_combine(p, x, top_p, top_e, cfg: MoEConfig,
+                              capacity: int, e_lo: int, e_hi: int):
+    t, d = x.shape
+    e_local = e_hi - e_lo
+    order, slot, keep, token_of_row = _dispatch_indices(
+        top_e, cfg.num_experts, capacity, e_lo, e_hi)
+    # Scatter token rows into the expert buffer (+1 trash row).
+    buf = jnp.zeros((e_local * capacity + 1, d), x.dtype)
+    buf = buf.at[slot].set(x[token_of_row] * keep[:, None].astype(x.dtype))
+    y = _expert_ffn(p, buf[:-1].reshape(e_local, capacity, d), cfg)
+    # Gather each routed row's output and combine weighted by router prob.
+    y_rows = y.reshape(e_local * capacity, d)
+    y_rows = jnp.concatenate([y_rows, jnp.zeros((1, d), y.dtype)], 0)
+    contrib = y_rows[slot] * top_p.reshape(-1)[order][:, None].astype(y.dtype)
+    out = jnp.zeros((t, d), x.dtype).at[token_of_row].add(
+        jnp.where(keep[:, None], contrib, 0).astype(x.dtype))
+    return out
+
+
+def moe_apply(p, x, cfg: MoEConfig, *, ctx=None, prefix="moe"):
+    """Single-shard MoE. x: (t, D) flattened tokens."""
+    t = x.shape[0]
+    capacity = _capacity(t, cfg)
+    _, top_p, top_e = router_probs(p, x, cfg, ctx, prefix)
+    return _dispatch_compute_combine(p, x, top_p, top_e, cfg, capacity,
+                                     0, cfg.num_experts)
+
+
+def moe_apply_sharded(p, x, cfg: MoEConfig, *, ep_axis: str, ep_size: int,
+                      expert_parallel: bool = True):
+    """Expert-parallel MoE body — call inside shard_map.
+
+    x: (t_local, D) tokens of this data shard, replicated over ``ep_axis``.
+    expert_parallel=True: p carries E/ep experts per shard (EP); the psum
+    combines disjoint expert outputs.
+    expert_parallel=False (hybrid, for E < ep_size e.g. grok-1's 8 experts
+    on 16 TP shards): every shard carries ALL experts but only a d_ff slice;
+    the SAME psum then reduces the partial-F contributions (TP inside
+    experts) — the nonlinearity is elementwise over F so slicing F is exact.
+    """
+    t = x.shape[0]
+    e_local = cfg.num_experts // ep_size if expert_parallel \
+        else cfg.num_experts
+    idx = jax.lax.axis_index(ep_axis) if expert_parallel else 0
+    capacity = _capacity(t, cfg)
+    _, top_p, top_e = router_probs(p, x, cfg)
+    # Static shard ranges differ per device; use dynamic offset via where.
+    e_lo = idx * e_local
+    order, slot, keep, token_of_row = _dispatch_indices(
+        top_e, cfg.num_experts, capacity, 0, cfg.num_experts)
+    # re-localize: keep only experts in [e_lo, e_lo + e_local)
+    sorted_e = top_e.reshape(-1)[order]
+    local = (sorted_e >= e_lo) & (sorted_e < e_lo + e_local) & keep
+    local_slot = jnp.where(local, (sorted_e - e_lo) * capacity +
+                           (slot % capacity), e_local * capacity)
+    d = x.shape[1]
+    buf = jnp.zeros((e_local * capacity + 1, d), x.dtype)
+    buf = buf.at[local_slot].set(x[token_of_row] * local[:, None].astype(x.dtype))
+    y = _expert_ffn(p, buf[:-1].reshape(e_local, capacity, d), cfg)
+    y_rows = jnp.concatenate([y.reshape(e_local * capacity, d),
+                              jnp.zeros((1, d), y.dtype)], 0)
+    contrib = y_rows[local_slot] * top_p.reshape(-1)[order][:, None].astype(y.dtype)
+    out = jnp.zeros((t, d), x.dtype).at[token_of_row].add(
+        jnp.where(local[:, None], contrib, 0).astype(x.dtype))
+    return jax.lax.psum(out, ep_axis)
+
+
+def aux_load_balance_loss(probs: jnp.ndarray, top_e: jnp.ndarray,
+                          cfg: MoEConfig) -> jnp.ndarray:
+    """Switch-style load-balancing auxiliary loss."""
+    t = probs.shape[0]
+    me = jnp.mean(probs, axis=0)                                   # (E,)
+    counts = jnp.zeros((cfg.num_experts,)).at[top_e.reshape(-1)].add(1.0)
+    ce = counts / jnp.maximum(t * cfg.top_k, 1)
+    return cfg.num_experts * jnp.sum(me * ce)
+
+
+def init_moe_params(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32,
+                    num_local_experts: Optional[int] = None):
+    e = num_local_experts or cfg.num_experts
+    k1, k2, k3, k4 = split_keys(key, 4)
+    std = 1.0 / jnp.sqrt(d_model)
+    return {
+        "router": dense_init(k1, d_model, cfg.num_experts, dtype),
+        "w_gate": (jax.random.normal(k2, (e, d_model, cfg.d_ff)) * std).astype(dtype),
+        "w_up": (jax.random.normal(k3, (e, d_model, cfg.d_ff)) * std).astype(dtype),
+        "w_out": (jax.random.normal(k4, (e, cfg.d_ff, d_model)) *
+                  (1.0 / jnp.sqrt(cfg.d_ff))).astype(dtype),
+    }

@@ -1,0 +1,122 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)                  (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)                  (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+TPU adaptation: training/prefill uses jax.lax.associative_scan (parallel
+prefix over T — log-depth on the VPU) instead of a sequential loop; decode is
+the O(1) single-step update. The full Griffin recurrent block wraps the LRU
+with a linear in-projection, a short causal temporal conv (width 4), a gated
+GeLU branch and a linear out-projection.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, gelu, split_keys
+
+LRU_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray        # (B, D_rnn) recurrent state
+    conv: jnp.ndarray     # (B, W-1, D_rnn) last conv inputs
+
+
+def _gates(p, x):
+    r = jax.nn.sigmoid(x @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(x @ p["w_x"] + p["b_x"])
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r          # log decay <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i * x)
+    return a, gated
+
+
+def rg_lru_scan(p, x, h0: Optional[jnp.ndarray] = None):
+    """x: (B, T, D_rnn) -> (y (B,T,D_rnn), h_T). Parallel associative scan."""
+    a, b = _gates(p, x.astype(jnp.float32))
+    if h0 is not None:
+        # fold the initial state in as a virtual step 0
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0[:, None].astype(jnp.float32), b], axis=1)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    acc_a, acc_b = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = acc_b if h0 is None else acc_b[:, 1:]
+    return y.astype(x.dtype), acc_b[:, -1].astype(jnp.float32)
+
+
+def rg_lru_step(p, x_t, h):
+    """Single decode step. x_t: (B, D_rnn), h: (B, D_rnn)."""
+    a, b = _gates(p, x_t.astype(jnp.float32)[:, None])
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new.astype(x_t.dtype), h_new
+
+
+def _causal_conv(p, x, conv_state=None):
+    """Width-4 causal depthwise conv. x: (B, T, D)."""
+    w = p["conv_w"]                    # (4, D)
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1):].astype(jnp.float32)
+    return out + p["conv_b"], new_state
+
+
+def recurrent_block(p, x, *, state: Optional[RGLRUState] = None, ctx=None,
+                    prefix="rec") -> Tuple[jnp.ndarray, Optional[RGLRUState]]:
+    """Griffin recurrent block. x: (B, T, D_model)."""
+    def w(name):
+        return ctx.weight(f"{prefix}/{name}", p[name]) if ctx is not None else p[name]
+
+    rnn_in = x @ w("w_rnn_in")                      # (B, T, D_rnn)
+    gate = gelu(x @ w("w_gate_in"))                 # (B, T, D_rnn)
+    conv_state = state.conv if state is not None else None
+    rnn_in, new_conv = _causal_conv(p, rnn_in, conv_state)
+    if x.shape[1] == 1 and state is not None:
+        y, h_new = rg_lru_step(p, rnn_in[:, 0], state.h)
+        y = y[:, None]
+    else:
+        h0 = state.h if state is not None else None
+        y, h_new = rg_lru_scan(p, rnn_in, h0)
+    if ctx is not None:
+        y = ctx.act(f"{prefix}/lru_out", y)
+    out = (y * gate) @ w("w_out")
+    new_state = RGLRUState(h=h_new, conv=new_conv) if state is not None else None
+    return out, new_state
+
+
+def init_rglru_state(batch: int, d_rnn: int, conv_width: int = 4) -> RGLRUState:
+    return RGLRUState(h=jnp.zeros((batch, d_rnn), jnp.float32),
+                      conv=jnp.zeros((batch, conv_width - 1, d_rnn), jnp.float32))
+
+
+def init_recurrent_params(key, d_model: int, d_rnn: int, dtype=jnp.float32,
+                          conv_width: int = 4):
+    ks = split_keys(key, 6)
+    return {
+        "w_rnn_in": dense_init(ks[0], d_model, d_rnn, dtype),
+        "w_gate_in": dense_init(ks[1], d_model, d_rnn, dtype),
+        "w_out": dense_init(ks[2], d_rnn, d_model, dtype),
+        "conv_w": (jax.random.normal(ks[3], (conv_width, d_rnn)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_rnn,), dtype),
+        "w_a": dense_init(ks[4], d_rnn, d_rnn, dtype),
+        "b_a": jnp.zeros((d_rnn,), dtype),
+        "w_x": dense_init(ks[5], d_rnn, d_rnn, dtype),
+        "b_x": jnp.zeros((d_rnn,), dtype),
+        "lam": jnp.linspace(0.5, 4.0, d_rnn).astype(dtype),   # per-channel Λ
+    }

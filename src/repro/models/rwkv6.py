@@ -1,0 +1,252 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892) — attention-free time-mix with
+data-dependent per-channel decay + squared-ReLU channel-mix.
+
+Recurrence per head (dk = dv = head_size):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+TPU adaptation (DESIGN.md §3): training/prefill uses a *chunked* gated-
+linear-attention formulation — intra-chunk pairwise decays via a masked
+einsum (stable: exponents are differences of a non-increasing cumulative
+log-decay, always <= 0), inter-chunk via the carried state — giving
+matmul-dominated compute instead of a length-T sequential loop. The
+sequential scan (`wkv_sequential`) is kept as the numerical oracle; decode
+uses the O(1) single-step update.
+
+Simplification vs the reference implementation (noted in DESIGN.md): the five
+token-shift interpolations use static learned mu (the low-rank data-dependent
+delta is applied to the decay w only), and the decay LoRA uses a single
+down/up pair.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_keys
+
+MIN_LOG_W = -8.0     # clamp per-step log-decay for numerical safety
+
+
+class RWKVState(NamedTuple):
+    s: jnp.ndarray          # (B, H, dk, dv) wkv state
+    x_tm: jnp.ndarray       # (B, D) last input of time-mix (token shift)
+    x_cm: jnp.ndarray       # (B, D) last input of channel-mix
+
+
+def _token_shift(x, x_last, mu):
+    """x: (B,T,D); returns mu-interpolated [x_{t-1}, x_t]."""
+    prev = jnp.concatenate([x_last[:, None].astype(x.dtype), x[:, :-1]],
+                           axis=1)
+    return (x + (prev - x) * mu.astype(x.dtype)).astype(x.dtype)
+
+
+def _decay(p, xw):
+    """Data-dependent per-channel log-decay, clamped <= 0."""
+    lora = jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    logw = -jnp.exp(jnp.clip(p["w_base"] + lora, -20.0, 4.0))
+    return jnp.clip(logw, MIN_LOG_W, 0.0)            # (B, T, D)
+
+
+def wkv_sequential(r, k, v, logw, u, s0=None):
+    """Oracle: step-by-step recurrence.
+    r/k: (B,H,T,dk), v: (B,H,T,dv), logw: (B,H,T,dk), u: (H,dk)."""
+    B, H, T, dk = k.shape
+    dv = v.shape[-1]
+    s = jnp.zeros((B, H, dk, dv), jnp.float32) if s0 is None else s0
+
+    def step(s, inputs):
+        r_t, k_t, v_t, lw_t = inputs
+        w_t = jnp.exp(lw_t)                                    # (B,H,dk)
+        kv = k_t[..., :, None] * v_t[..., None, :]             # (B,H,dk,dv)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       s + u[None, :, :, None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, o
+
+    xs = (r.transpose(2, 0, 1, 3), k.transpose(2, 0, 1, 3),
+          v.transpose(2, 0, 1, 3), logw.transpose(2, 0, 1, 3))
+    s, os_ = jax.lax.scan(step, s, xs)
+    return os_.transpose(1, 2, 0, 3), s                        # (B,H,T,dv), state
+
+
+def wkv_chunked(r, k, v, logw, u, s0=None, chunk: int = 32):
+    """Chunked GLA form; matches wkv_sequential.
+    Shapes as in wkv_sequential. T must be a multiple of ``chunk``
+    (callers pad)."""
+    B, H, T, dk = k.shape
+    dv = v.shape[-1]
+    n = T // chunk
+    rc = r.reshape(B, H, n, chunk, dk).astype(jnp.float32)
+    kc = k.reshape(B, H, n, chunk, dk).astype(jnp.float32)
+    vc = v.reshape(B, H, n, chunk, dv).astype(jnp.float32)
+    lw = logw.reshape(B, H, n, chunk, dk).astype(jnp.float32)
+
+    # cumulative log decay *inclusive* of step t: cl_t = sum_{s<=t} logw_s
+    cl = jnp.cumsum(lw, axis=3)                                # (B,H,n,C,dk)
+
+    # Intra-chunk pairwise decays: for t > s, decay = exp(cl_{t-1} - cl_s)
+    # (state used by o_t excludes step t's own decay — S_{t-1}).
+    cl_tm1 = cl - lw                                           # cl_{t-1}
+    diff = cl_tm1[..., :, None, :] - cl[..., None, :, :]       # (.., t, s, dk)
+    tmask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)     # strict lower
+    dec = jnp.where(tmask[..., None], jnp.exp(
+        jnp.where(tmask[..., None], diff, 0.0)), 0.0)
+    scores = jnp.einsum("bhntk,bhnsk,bhntsk->bhnts", rc, kc, dec)
+    o_intra = jnp.einsum("bhnts,bhnsv->bhntv", scores, vc)
+    # bonus diagonal term: r_t (u ⊙ k_t) v_t
+    bonus = jnp.einsum("bhntk,hk,bhntk->bhnt", rc, u.astype(jnp.float32), kc)
+    o_intra = o_intra + bonus[..., None] * vc
+
+    # Inter-chunk: scan the state across chunks.
+    s_init = jnp.zeros((B, H, dk, dv), jnp.float32) if s0 is None \
+        else s0.astype(jnp.float32)
+    # contribution of chunk to next state: sum_s exp(cl_C - cl_s) k_s v_s^T
+    end_dec = jnp.exp(cl[..., -1:, :] - cl)                    # (B,H,n,C,dk)
+    chunk_kv = jnp.einsum("bhnsk,bhnsv->bhnkv", kc * end_dec, vc)
+    chunk_decay = jnp.exp(cl[..., -1, :])                      # (B,H,n,dk)
+
+    def step(s, ins):
+        ckv, cdec, r_chunk, cltm1 = ins
+        # o_inter_t = (r_t ⊙ exp(cl_{t-1})) @ s
+        o_inter = jnp.einsum("bhtk,bhkv->bhtv", r_chunk * jnp.exp(cltm1), s)
+        s_new = cdec[..., None] * s + ckv
+        return s_new, o_inter
+
+    xs = (chunk_kv.transpose(2, 0, 1, 3, 4), chunk_decay.transpose(2, 0, 1, 3),
+          rc.transpose(2, 0, 1, 3, 4), cl_tm1.transpose(2, 0, 1, 3, 4))
+    s_fin, o_inter = jax.lax.scan(step, s_init, xs)
+    o = o_intra + o_inter.transpose(1, 2, 0, 3, 4)
+    return o.reshape(B, H, T, dv).astype(r.dtype), s_fin
+
+
+def wkv_step(r_t, k_t, v_t, logw_t, u, s):
+    """Decode: single token. r_t/k_t: (B,H,dk), v_t: (B,H,dv)."""
+    kv = k_t[..., :, None] * v_t[..., None, :]
+    o = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+    s_new = jnp.exp(logw_t)[..., None] * s + kv
+    return o, s_new
+
+
+# ---------------------------------------------------------------------------
+# Full blocks
+# ---------------------------------------------------------------------------
+
+def _group_norm(x, gamma, beta, eps=1e-5):
+    """Per-head layer norm of (B, H, T, dv)."""
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def time_mix(p, x, head_size: int, *, state: Optional[RWKVState] = None,
+             ctx=None, prefix="tmix", chunk: int = 32):
+    """RWKV6 time-mix. x: (B, T, D)."""
+    B, T, D = x.shape
+    H = D // head_size
+
+    def w(name):
+        return ctx.weight(f"{prefix}/{name}", p[name]) if ctx is not None else p[name]
+
+    x_last = state.x_tm if state is not None else jnp.zeros((B, D), x.dtype)
+    xr = _token_shift(x, x_last, p["mu_r"])
+    xk = _token_shift(x, x_last, p["mu_k"])
+    xv = _token_shift(x, x_last, p["mu_v"])
+    xw = _token_shift(x, x_last, p["mu_w"])
+    xg = _token_shift(x, x_last, p["mu_g"])
+
+    r = (xr @ w("w_r")).reshape(B, T, H, head_size).transpose(0, 2, 1, 3)
+    k = (xk @ w("w_k")).reshape(B, T, H, head_size).transpose(0, 2, 1, 3)
+    v = (xv @ w("w_v")).reshape(B, T, H, head_size).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(xg @ w("w_g"))
+    logw = _decay(p, xw).reshape(B, T, H, head_size).transpose(0, 2, 1, 3)
+    if ctx is not None:
+        r = ctx.act(f"{prefix}/r", r)
+        k = ctx.act(f"{prefix}/k", k)
+        v = ctx.act(f"{prefix}/v", v)
+
+    s0 = state.s if state is not None else None
+    if T == 1 and state is not None:
+        o, s_new = wkv_step(r[:, :, 0].astype(jnp.float32),
+                            k[:, :, 0].astype(jnp.float32),
+                            v[:, :, 0].astype(jnp.float32),
+                            logw[:, :, 0].astype(jnp.float32), p["u"], s0)
+        o = o[:, :, None].astype(r.dtype)
+        s_new = s_new.astype(s0.dtype)
+    else:
+        pad = (-T) % chunk
+        if pad:
+            rp = jnp.pad(r, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            lp = jnp.pad(logw, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            o, s_new = wkv_chunked(rp, kp, vp, lp, p["u"], s0, chunk)
+            o = o[:, :, :T]
+        else:
+            o, s_new = wkv_chunked(r, k, v, logw, p["u"], s0, chunk)
+    o = _group_norm(o, p["gn_g"], p["gn_b"])
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, D)
+    out = (o * g) @ w("w_o")
+    if ctx is not None:
+        out = ctx.act(f"{prefix}/out", out)
+    new_state = None
+    if state is not None:
+        new_state = state._replace(s=s_new, x_tm=x[:, -1].astype(jnp.float32))
+    return out, new_state
+
+
+def channel_mix(p, x, *, state: Optional[RWKVState] = None, ctx=None,
+                prefix="cmix"):
+    """RWKV6 channel-mix (the FFN analogue — where the paper's PEG applies)."""
+    B, T, D = x.shape
+
+    def w(name):
+        return ctx.weight(f"{prefix}/{name}", p[name]) if ctx is not None else p[name]
+
+    x_last = state.x_cm if state is not None else jnp.zeros((B, D), x.dtype)
+    xk = _token_shift(x, x_last, p["mu_ck"])
+    xr = _token_shift(x, x_last, p["mu_cr"])
+    if ctx is not None:
+        xk = ctx.act(f"{prefix}/ffn_in", xk)
+    k = jnp.square(jax.nn.relu(xk @ w("w_ck")))
+    out = jax.nn.sigmoid(xr @ w("w_cr")) * (k @ w("w_cv"))
+    if ctx is not None:
+        out = ctx.act(f"{prefix}/ffn_out", out)
+    new_state = None
+    if state is not None:
+        new_state = state._replace(x_cm=x[:, -1].astype(jnp.float32))
+    return out, new_state
+
+
+def init_rwkv_state(batch: int, d_model: int, head_size: int) -> RWKVState:
+    H = d_model // head_size
+    return RWKVState(s=jnp.zeros((batch, H, head_size, head_size), jnp.float32),
+                     x_tm=jnp.zeros((batch, d_model), jnp.float32),
+                     x_cm=jnp.zeros((batch, d_model), jnp.float32))
+
+
+def init_rwkv_params(key, d_model: int, d_ff: int, head_size: int,
+                     dtype=jnp.float32, lora_rank: int = 64):
+    ks = split_keys(key, 12)
+    H = d_model // head_size
+    p = {
+        "w_r": dense_init(ks[0], d_model, d_model, dtype),
+        "w_k": dense_init(ks[1], d_model, d_model, dtype),
+        "w_v": dense_init(ks[2], d_model, d_model, dtype),
+        "w_g": dense_init(ks[3], d_model, d_model, dtype),
+        "w_o": dense_init(ks[4], d_model, d_model, dtype),
+        "w_lora_a": dense_init(ks[5], d_model, lora_rank, dtype),
+        "w_lora_b": (jax.random.normal(ks[6], (lora_rank, d_model)) * 0.01).astype(dtype),
+        "w_base": jnp.full((d_model,), 0.5, dtype),
+        "u": (jax.random.normal(ks[7], (H, head_size)) * 0.1).astype(dtype),
+        "gn_g": jnp.ones((head_size,), dtype),
+        "gn_b": jnp.zeros((head_size,), dtype),
+        "w_ck": dense_init(ks[8], d_model, d_ff, dtype),
+        "w_cv": dense_init(ks[9], d_ff, d_model, dtype),
+        "w_cr": dense_init(ks[10], d_model, d_model, dtype),
+    }
+    for name in ("mu_r", "mu_k", "mu_v", "mu_w", "mu_g", "mu_ck", "mu_cr"):
+        p[name] = jnp.full((d_model,), 0.5, dtype)
+    return p

@@ -1,0 +1,534 @@
+"""Unified decoder-only transformer covering the assigned LM families:
+dense (GQA/MQA, sliding-window, local+global alternating, soft-capping),
+MoE, hybrid RG-LRU (Griffin), and attention-free RWKV6 — with the paper's
+quantization sites threaded throughout.
+
+Two execution layouts share the same block functions:
+  * stacked + lax.scan over "super-blocks" (one repeat of cfg.block_pattern)
+    — the production path; compiles O(1) HLO in depth.
+  * unrolled Python loop — for smoke tests, calibration and per-layer
+    quantization experiments (sites get per-layer names ``layer{i}/...``).
+
+Quantization sites per block (paper Fig. 1 / Table 2 naming):
+  {L}/residual_attn     — residual sum after self-attention
+  {L}/ffn_in            — FFN input (LN output)
+  {L}/ffn_out           — FFN output (before residual add)
+  {L}/residual_ffn      — THE paper bottleneck: residual sum after FFN
+plus the attention-internal sites from attention.py and:
+  embed/sum, head/logits
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ffn as ffn_lib
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import rwkv6 as rwkv_lib
+from repro.models.attention import (AttnConfig, KVCache, attention_block,
+                                    init_attention_params, init_kv_cache)
+from repro.models.common import (cross_entropy, embed_init, layer_norm,
+                                 rms_norm, softcap, split_keys)
+
+
+# ---------------------------------------------------------------------------
+# Distribution context (kept minimal; rules live in repro/parallel)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    mesh: Any
+    tp_axis: str = "model"
+    fsdp_axis: Any = "data"                  # str or tuple (pod FSDP)
+    dp_axes: Tuple[str, ...] = ("data",)     # ("pod","data") multi-pod
+    onehot_embed: bool = False               # perf: vocab-sharded einsum
+    quantized_gathers: bool = False          # perf: int8 FSDP weight gathers
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def _norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["g"], p["b"])
+    return rms_norm(x, p["g"])
+
+
+def _init_norm(cfg: ModelConfig, dtype):
+    if cfg.norm == "layernorm":
+        return {"g": jnp.ones((cfg.d_model,), dtype),
+                "b": jnp.zeros((cfg.d_model,), dtype)}
+    return {"g": jnp.zeros((cfg.d_model,), dtype)}   # rms: 1 + g
+
+
+# ---------------------------------------------------------------------------
+# Attention config per block kind
+# ---------------------------------------------------------------------------
+
+def attn_cfg_for(cfg: ModelConfig, kind: str) -> AttnConfig:
+    window = cfg.window
+    if kind == "local_attn":
+        window = cfg.local_window
+    return AttnConfig(num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                      head_dim=cfg.hd, causal=True, window=window,
+                      logit_softcap=cfg.attn_logit_softcap,
+                      rope_theta=cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# FFN dispatch (dense / GLU / MoE, optionally expert-parallel)
+# ---------------------------------------------------------------------------
+
+def _ffn_apply(cfg: ModelConfig, p, x, *, ctx, prefix, dist: Optional[DistContext]):
+    if cfg.moe is not None:
+        B, T, D = x.shape
+        if dist is not None and dist.tp_size > 1:
+            return _moe_sharded(cfg, p, x, dist)
+        out = moe_lib.moe_apply(p, x.reshape(B * T, D), cfg.moe, ctx=ctx,
+                                prefix=prefix)
+        return out.reshape(B, T, D)
+    if cfg.ffn_type == "glu":
+        return ffn_lib.glu_mlp(p, x, activation=cfg.act, ctx=ctx, prefix=prefix)
+    return ffn_lib.mlp(p, x, activation=cfg.act, ctx=ctx, prefix=prefix)
+
+
+def _moe_sharded(cfg: ModelConfig, p, x, dist: DistContext):
+    """Expert-parallel MoE via shard_map (DESIGN.md §4): FLATTENED tokens
+    data-sharded, experts model-sharded, FSDP re-gather of expert weights
+    inside. Token count not divisible by the dp group -> tokens replicate
+    (each shard computes its experts over all tokens)."""
+    from jax.sharding import PartitionSpec as P
+    import numpy as np
+    mesh = dist.mesh
+    tp, fsdp, dp = dist.tp_axis, dist.fsdp_axis, dist.dp_axes
+    ep_size = mesh.shape[tp]
+    mcfg = cfg.moe
+    B, T, D = x.shape
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    tok_spec = P(dp, None) if (B * T) % dp_size == 0 else P(None, None)
+
+    # E >= tp: expert parallelism (E/tp experts per shard). E < tp (grok-1:
+    # 8 experts, 16 shards): hybrid — every shard holds ALL experts with a
+    # d_ff slice (TP inside experts); the end psum reduces partial-F sums.
+    expert_parallel = mcfg.num_experts % ep_size == 0
+
+    def _gather(w, axis):
+        if not dist.quantized_gathers:
+            return jax.lax.all_gather(w, fsdp, axis=axis, tiled=True)
+        # perf variant: int8 wire format for the per-layer FSDP weight
+        # gathers (the paper's symmetric per-tensor weight quantization
+        # applied to the collective payload) — 2x fewer ICI/DCN bytes.
+        amax = jnp.max(jnp.abs(w))
+        s_w = jnp.maximum(amax / 127.0, 1e-12)
+        q = jnp.clip(jnp.round(w.astype(jnp.float32) / s_w),
+                     -127, 127).astype(jnp.int8)
+        q_full = jax.lax.all_gather(q, fsdp, axis=axis, tiled=True)
+        s_full = jax.lax.all_gather(s_w[None], fsdp, axis=0)
+        # every shard contributed its own scale; payload dequantizes with
+        # the max (scales are near-identical for homogeneous shards; exact
+        # per-shard dequant would segment the axis — done on real HW)
+        return q_full.astype(w.dtype) * jnp.max(s_full).astype(w.dtype)
+
+    def body(router, wg, wu, wo, xt):
+        router = _gather(router, 0)
+        wg = _gather(wg, 1)
+        wu = _gather(wu, 1)
+        wo = _gather(wo, 2)
+        return moe_lib.moe_apply_sharded(
+            {"router": router, "w_gate": wg, "w_up": wu, "w_out": wo},
+            xt, mcfg, ep_axis=tp, ep_size=ep_size,
+            expert_parallel=expert_parallel)
+
+    if expert_parallel:
+        w_specs = (P(tp, fsdp, None), P(tp, fsdp, None), P(tp, None, fsdp))
+    else:
+        w_specs = (P(None, fsdp, tp), P(None, fsdp, tp), P(None, tp, fsdp))
+
+    out = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(fsdp, None),) + w_specs + (tok_spec,),
+        out_specs=tok_spec,
+        check_vma=False,
+    )(p["router"], p["w_gate"], p["w_up"], p["w_out"], x.reshape(B * T, D))
+    return out.reshape(B, T, D)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def block_apply(cfg: ModelConfig, kind: str, p, x, positions, *, ctx=None,
+                prefix="layer", cache=None, dist=None, chunked=None):
+    """One transformer block of the given kind. Returns (x, new_cache)."""
+    if kind in ("attn", "local_attn"):
+        acfg = attn_cfg_for(cfg, kind)
+        h = _norm(cfg, p["ln1"], x)
+        attn_out, new_cache = attention_block(
+            p["attn"], h, positions, acfg, ctx=ctx, prefix=f"{prefix}/attn",
+            cache=cache, chunked=chunked)
+        if cfg.post_norm:
+            attn_out = _norm(cfg, p["post_ln1"], attn_out)
+        x = x + attn_out
+        if ctx is not None:
+            x = ctx.act(f"{prefix}/residual_attn", x)
+        h = _norm(cfg, p["ln2"], x)
+        if ctx is not None:
+            h = ctx.act(f"{prefix}/ffn_in", h)
+        ffn_out = _ffn_apply(cfg, p.get("moe", p.get("ffn")), h, ctx=ctx,
+                             prefix=f"{prefix}/ffn", dist=dist)
+        if cfg.post_norm:
+            ffn_out = _norm(cfg, p["post_ln2"], ffn_out)
+        if ctx is not None:
+            ffn_out = ctx.act(f"{prefix}/ffn_out", ffn_out)
+        x = x + ffn_out
+        if ctx is not None:
+            x = ctx.act(f"{prefix}/residual_ffn", x)
+        return x, new_cache
+
+    if kind == "rec":
+        h = _norm(cfg, p["ln1"], x)
+        rec_out, new_state = rglru_lib.recurrent_block(
+            p["rec"], h, state=cache, ctx=ctx, prefix=f"{prefix}/rec")
+        x = x + rec_out
+        if ctx is not None:
+            x = ctx.act(f"{prefix}/residual_attn", x)
+        h = _norm(cfg, p["ln2"], x)
+        if ctx is not None:
+            h = ctx.act(f"{prefix}/ffn_in", h)
+        ffn_out = _ffn_apply(cfg, p["ffn"], h, ctx=ctx, prefix=f"{prefix}/ffn",
+                             dist=dist)
+        if ctx is not None:
+            ffn_out = ctx.act(f"{prefix}/ffn_out", ffn_out)
+        x = x + ffn_out
+        if ctx is not None:
+            x = ctx.act(f"{prefix}/residual_ffn", x)
+        return x, new_state
+
+    if kind == "rwkv":
+        h = _norm(cfg, p["ln1"], x)
+        tm_out, st = rwkv_lib.time_mix(p["tmix"], h, cfg.rwkv_head_size,
+                                       state=cache, ctx=ctx,
+                                       prefix=f"{prefix}/tmix")
+        x = x + tm_out
+        if ctx is not None:
+            x = ctx.act(f"{prefix}/residual_attn", x)
+        h = _norm(cfg, p["ln2"], x)
+        cm_out, st = rwkv_lib.channel_mix(p["cmix"], h, state=st, ctx=ctx,
+                                          prefix=f"{prefix}/cmix")
+        x = x + cm_out
+        if ctx is not None:
+            x = ctx.act(f"{prefix}/residual_ffn", x)
+        return x, st
+
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def init_block_params(cfg: ModelConfig, kind: str, key, dtype):
+    ks = split_keys(key, 4)
+    p: Dict[str, Any] = {"ln1": _init_norm(cfg, dtype),
+                         "ln2": _init_norm(cfg, dtype)}
+    if kind in ("attn", "local_attn"):
+        p["attn"] = init_attention_params(ks[0], cfg.d_model,
+                                          attn_cfg_for(cfg, kind), dtype,
+                                          qk_norm=cfg.qk_norm)
+        if cfg.moe is not None:
+            p["moe"] = moe_lib.init_moe_params(ks[1], cfg.d_model, cfg.moe,
+                                               dtype)
+        elif cfg.ffn_type == "glu":
+            p["ffn"] = ffn_lib.init_glu_params(ks[1], cfg.d_model, cfg.d_ff,
+                                               dtype)
+        else:
+            p["ffn"] = ffn_lib.init_mlp_params(ks[1], cfg.d_model, cfg.d_ff,
+                                               dtype)
+        if cfg.post_norm:
+            p["post_ln1"] = _init_norm(cfg, dtype)
+            p["post_ln2"] = _init_norm(cfg, dtype)
+    elif kind == "rec":
+        p["rec"] = rglru_lib.init_recurrent_params(
+            ks[0], cfg.d_model, cfg.d_rnn or cfg.d_model, dtype)
+        p["ffn"] = (ffn_lib.init_glu_params(ks[1], cfg.d_model, cfg.d_ff, dtype)
+                    if cfg.ffn_type == "glu" else
+                    ffn_lib.init_mlp_params(ks[1], cfg.d_model, cfg.d_ff, dtype))
+    elif kind == "rwkv":
+        tm = rwkv_lib.init_rwkv_params(ks[0], cfg.d_model, cfg.d_ff,
+                                       cfg.rwkv_head_size, dtype)
+        p["tmix"] = {k: v for k, v in tm.items()
+                     if not k.startswith(("w_c", "mu_c"))}
+        p["cmix"] = {k: v for k, v in tm.items()
+                     if k.startswith(("w_c", "mu_c"))}
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype=jnp.bfloat16):
+    if kind in ("attn", "local_attn"):
+        return init_kv_cache(batch, max_len, attn_cfg_for(cfg, kind), dtype)
+    if kind == "rec":
+        return rglru_lib.init_rglru_state(batch, cfg.d_rnn or cfg.d_model)
+    if kind == "rwkv":
+        return rwkv_lib.init_rwkv_state(batch, cfg.d_model, cfg.rwkv_head_size)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key, *, stacked: bool = True,
+                dtype=jnp.bfloat16):
+    """stacked=True: per-pattern-position params stacked over repeats (scan
+    layout). stacked=False: params["layers"] is a flat per-layer list."""
+    plan = cfg.layer_plan
+    n_pat = len(cfg.block_pattern)
+    n_tail = len(cfg.tail_pattern)
+    n_super = (len(plan) - n_tail) // n_pat
+    keys = split_keys(key, len(plan) + 3)
+
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[-1], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": _init_norm(cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(keys[-2], cfg.vocab_size, cfg.d_model,
+                                       dtype).T
+
+    if stacked:
+        scan_groups = []
+        for j, kind in enumerate(cfg.block_pattern):
+            per = [init_block_params(cfg, kind, keys[s * n_pat + j], dtype)
+                   for s in range(n_super)]
+            scan_groups.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+        params["scan"] = scan_groups
+        params["tail"] = [init_block_params(cfg, kind,
+                                            keys[n_super * n_pat + i], dtype)
+                          for i, kind in enumerate(cfg.tail_pattern)]
+    else:
+        params["layers"] = [init_block_params(cfg, kind, keys[i], dtype)
+                            for i, kind in enumerate(plan)]
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               stacked: bool = True, dtype=jnp.bfloat16):
+    plan = cfg.layer_plan
+    n_pat = len(cfg.block_pattern)
+    n_tail = len(cfg.tail_pattern)
+    n_super = (len(plan) - n_tail) // n_pat
+    if stacked:
+        groups = []
+        for kind in cfg.block_pattern:
+            per = [init_block_cache(cfg, kind, batch, max_len, dtype)
+                   for _ in range(n_super)]
+            groups.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+        tail = [init_block_cache(cfg, kind, batch, max_len, dtype)
+                for kind in cfg.tail_pattern]
+        return {"scan": groups, "tail": tail}
+    return {"layers": [init_block_cache(cfg, kind, batch, max_len, dtype)
+                       for kind in plan]}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _constrain(x, dist: Optional[DistContext], spec):
+    """Divisibility-aware sharding constraint: any dim that does not divide
+    its assigned axis group is replicated instead."""
+    if dist is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec
+    fixed = []
+    for dim, axis in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if axis is None:
+            fixed.append(None)
+            continue
+        names = axis if isinstance(axis, tuple) else (axis,)
+        size = 1
+        for a in names:
+            size *= dist.mesh.shape[a]
+        fixed.append(axis if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(dist.mesh, PartitionSpec(*fixed)))
+
+
+def _embed(cfg: ModelConfig, params, tokens, embeds, ctx, dist=None):
+    from repro.models.common import resolve_weight
+    table = resolve_weight(params["embed"])
+    if dist is not None and dist.onehot_embed and tokens.size <= 4096:
+        # decode-path perf variant: a one-hot einsum keeps the vocab axis
+        # SHARDED through the lookup (partial rows + one tiny psum over tp)
+        # instead of all-gathering the whole embedding table per step.
+        oh = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=table.dtype)
+        x = jnp.einsum("btv,vd->btd", oh, table)
+    else:
+        x = jnp.take(table, tokens, axis=0)
+    if dist is not None:
+        # keep the gathered activations batch-sharded (avoids the SPMD
+        # "involuntary full rematerialization" reshard on the vocab gather)
+        from jax.sharding import PartitionSpec as P
+        x = _constrain(x, dist, P(dist.dp_axes, None, None))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if embeds is not None:
+        # modality frontend stub: precomputed patch/frame embeddings are
+        # prepended to the token embeddings (assignment: frontend is a stub).
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    if ctx is not None:
+        x = ctx.act("embed/sum", x)
+    return x
+
+
+def _head(cfg: ModelConfig, params, x, ctx, dist=None):
+    from repro.models.common import resolve_weight
+    h = _norm(cfg, params["final_norm"], x)
+    w = resolve_weight(params["embed"]).T if cfg.tie_embeddings \
+        else resolve_weight(params["lm_head"])
+    if ctx is not None:
+        w = ctx.weight("head/w", w)
+    logits = h @ w.astype(h.dtype)
+    if dist is not None:
+        # logits stay vocab-sharded on the TP axis end-to-end (the CE
+        # logsumexp reduces with one small all-reduce instead of gathering
+        # the (B, T, V) tensor)
+        from jax.sharding import PartitionSpec as P
+        logits = _constrain(logits, dist,
+                            P(dist.dp_axes, None, dist.tp_axis))
+    logits = softcap(logits, cfg.final_logit_softcap)
+    if ctx is not None:
+        logits = ctx.act("head/logits", logits)
+    return logits
+
+
+def forward(cfg: ModelConfig, params, tokens, *, embeds=None, ctx=None,
+            dist: Optional[DistContext] = None, cache=None, positions=None,
+            remat: bool = False, chunked=None):
+    """Returns (logits, new_cache). tokens: (B, T) int32.
+
+    positions: (B, T) absolute positions (defaults to arange).
+    cache: pytree from init_cache (stacked or unrolled layout must match
+    params layout).
+    """
+    B, T = tokens.shape
+    x = _embed(cfg, params, tokens, embeds, ctx, dist=dist)
+    T_full = x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T_full, dtype=jnp.int32),
+                                     (B, T_full))
+
+    if "layers" in params:                      # unrolled path
+        new_layer_caches = []
+        for i, kind in enumerate(cfg.layer_plan):
+            c = cache["layers"][i] if cache is not None else None
+
+            def _blk(p, x, c, kind=kind, i=i):
+                return block_apply(cfg, kind, p, x, positions, ctx=ctx,
+                                   prefix=f"layer{i}", cache=c, dist=dist,
+                                   chunked=chunked)
+            if remat:
+                _blk = jax.checkpoint(
+                    _blk, policy=jax.checkpoint_policies.nothing_saveable)
+            x, nc = _blk(params["layers"][i], x, c)
+            new_layer_caches.append(nc)
+        new_cache = ({"layers": new_layer_caches} if cache is not None
+                     else None)
+        logits = _head(cfg, params, x, ctx, dist=dist)
+        return logits, new_cache
+
+    # stacked scan path
+    n_pat = len(cfg.block_pattern)
+
+    def superblock(x, slices):
+        p_slices, c_slices = slices
+        new_cs = []
+        for j, kind in enumerate(cfg.block_pattern):
+            c = c_slices[j] if c_slices is not None else None
+            x, nc = block_apply(cfg, kind, p_slices[j], x, positions,
+                                ctx=ctx, prefix="layer", cache=c, dist=dist,
+                                chunked=chunked)
+            new_cs.append(nc)
+        return x, (new_cs if c_slices is not None else None)
+
+    body = superblock
+    if remat:
+        body = jax.checkpoint(
+            superblock,
+            policy=jax.checkpoint_policies.nothing_saveable)
+
+    scan_caches = cache["scan"] if cache is not None else None
+
+    def scan_fn(x, xs):
+        p_slices = xs[0]
+        c_slices = xs[1] if cache is not None else None
+        x, new_c = body(x, (p_slices, c_slices))
+        return x, new_c
+
+    xs = (params["scan"], scan_caches) if cache is not None \
+        else (params["scan"], None)
+    # lax.scan needs xs leaves with a leading axis; pack params (+caches).
+    if cache is not None:
+        x, new_scan_caches = jax.lax.scan(
+            lambda carry, xs_: scan_fn(carry, xs_),
+            x, (params["scan"], scan_caches))
+    else:
+        x, _ = jax.lax.scan(lambda carry, p: scan_fn(carry, (p,)),
+                            x, params["scan"])
+        new_scan_caches = None
+
+    new_tail_caches = []
+    for i, kind in enumerate(cfg.tail_pattern):
+        c = cache["tail"][i] if cache is not None else None
+        p_tail = params["tail"][i]
+        x, nc = block_apply(cfg, kind, p_tail, x, positions, ctx=ctx,
+                            prefix="tail", cache=c, dist=dist, chunked=chunked)
+        new_tail_caches.append(nc)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"scan": new_scan_caches, "tail": new_tail_caches}
+    logits = _head(cfg, params, x, ctx, dist=dist)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def train_loss(cfg: ModelConfig, params, batch, *, ctx=None, dist=None,
+               remat: bool = True, chunked=None):
+    """Next-token CE. batch: {tokens (B,T), labels (B,T) [, embeds]}."""
+    logits, _ = forward(cfg, params, batch["tokens"],
+                        embeds=batch.get("embeds"), ctx=ctx, dist=dist,
+                        remat=remat, chunked=chunked)
+    n_front = logits.shape[1] - batch["labels"].shape[1]
+    if n_front > 0:
+        logits = logits[:, n_front:]
+    return cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache, *, embeds=None,
+            ctx=None, dist=None, chunked=None):
+    """Fill the cache from a prompt; returns (last_logits, cache)."""
+    logits, cache = forward(cfg, params, tokens, embeds=embeds, ctx=ctx,
+                            dist=dist, cache=cache, chunked=chunked)
+    return logits[:, -1:], cache
+
+
+def decode_step(cfg: ModelConfig, params, tokens, pos, cache, *, ctx=None,
+                dist=None):
+    """One decode step. tokens/pos: (B, 1). Returns (logits, cache)."""
+    logits, cache = forward(cfg, params, tokens, positions=pos, cache=cache,
+                            ctx=ctx, dist=dist)
+    return logits, cache

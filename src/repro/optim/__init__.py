@@ -1,0 +1,4 @@
+from repro.optim.adam import (AdamState, adam_init, adam_update, adamw_init,
+                              apply_updates, clip_by_global_norm)
+from repro.optim.schedule import (constant_schedule, cosine_schedule,
+                                  linear_warmup_linear_decay)

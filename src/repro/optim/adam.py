@@ -1,0 +1,88 @@
+"""Adam / AdamW from scratch (no optax in this environment).
+
+Matches the paper's fine-tuning setup (App. B.1): Adam with linear warmup +
+linear decay, gradient clipping optional. State is a pytree mirroring the
+parameter tree, so it shards with the parameters under pjit (FSDP-style:
+moments inherit the param sharding).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray       # scalar int32
+    mu: Any                 # first moment, pytree like params
+    nu: Any                 # second moment, pytree like params
+
+
+def adam_init(params) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                     nu=jax.tree.map(jnp.copy, zeros))
+
+
+adamw_init = adam_init
+
+
+# Leaves bigger than this (elements) may update slice-by-slice over their
+# leading (layer-stack) dim via lax.map (chunked=True). NOTE: measured with
+# memory_analysis, the while-loop breaks XLA's donation aliasing of the
+# moment buffers and costs MORE peak HBM than the fused elementwise chain —
+# kept as an option, default off (EXPERIMENTS.md perf log).
+CHUNKED_UPDATE_MIN_ELEMS = 1 << 27
+
+
+def adam_update(grads, state: AdamState, params, *, lr,
+                b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                weight_decay: float = 0.0, grad_scale=None,
+                chunked: bool = False):
+    """Returns (updates, new_state). ``lr`` may be a scalar or a callable
+    step -> scalar (schedule). ``weight_decay`` is decoupled (AdamW).
+    ``grad_scale`` (e.g. a global-norm clip factor) is fused into the moment
+    update instead of materializing a scaled gradient tree."""
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+    b1t = 1.0 - b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def leaf(g, m, v, p):
+        g = g.astype(jnp.float32)
+        if grad_scale is not None:
+            g = g * grad_scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        u = (m2 / b1t) / (jnp.sqrt(v2 / b2t) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return m2, v2, (-lr_t * u).astype(p.dtype)
+
+    def apply_leaf(g, m, v, p):
+        if chunked and p.size >= CHUNKED_UPDATE_MIN_ELEMS and p.ndim >= 2 \
+                and p.shape[0] > 1:
+            return jax.lax.map(lambda a: leaf(*a), (g, m, v, p))
+        return leaf(g, m, v, p)
+
+    out = jax.tree.map(apply_leaf, grads, state.mu, state.nu, params)
+    mu = jax.tree.map(lambda t: t[0], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    updates = jax.tree.map(lambda t: t[2], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return updates, AdamState(step=step, mu=mu, nu=nu)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gnorm

@@ -1,0 +1,37 @@
+"""Learning-rate schedules. The paper (App. B.1/B.3) uses linear warmup for
+the first 10% of steps followed by linear decay to zero."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_linear_decay(max_lr: float, total_steps: int,
+                               warmup_frac: float = 0.1):
+    warmup = max(int(total_steps * warmup_frac), 1)
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / warmup
+        decay = jnp.maximum(0.0, (total_steps - step) /
+                            jnp.maximum(total_steps - warmup, 1))
+        return max_lr * jnp.where(step < warmup, warm, decay)
+    return schedule
+
+
+def cosine_schedule(max_lr: float, total_steps: int, warmup_frac: float = 0.1,
+                    min_lr: float = 0.0):
+    warmup = max(int(total_steps * warmup_frac), 1)
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / warmup
+        t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+        cos = min_lr + 0.5 * (max_lr - min_lr) * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, max_lr * warm, cos)
+    return schedule
+
+
+def constant_schedule(lr: float):
+    def schedule(step):
+        return jnp.full((), lr, jnp.float32)
+    return schedule

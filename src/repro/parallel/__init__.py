@@ -1,0 +1,5 @@
+from repro.parallel.sharding import (batch_spec, cache_spec_for, constrain,
+                                     make_batch_shardings,
+                                     make_cache_shardings, make_dist,
+                                     make_opt_shardings, make_param_shardings,
+                                     make_param_specs, param_spec_for)

@@ -1,0 +1,6 @@
+from repro.runtime.fault_tolerance import (PreemptionGuard, RestartPolicy,
+                                           StragglerWatchdog)
+from repro.runtime.serve_loop import Request, ServeStats, serve_batch
+from repro.runtime.steps import (make_decode_step, make_encoder_forward,
+                                 make_prefill_step, make_train_step)
+from repro.runtime.train_loop import TrainLoopConfig, run_train_loop

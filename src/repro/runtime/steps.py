@@ -1,0 +1,120 @@
+"""Jittable train / serve step builders (shared by launchers, dry-run and
+benchmarks).
+
+``make_train_step`` supports microbatch gradient accumulation (lax.scan over
+microbatches — per-device activation memory scales 1/M), global-norm
+clipping, Adam, and optional PEG-int8 cross-pod gradient compression.
+``make_*_serve_step`` build prefill / decode steps with KV-cache threading.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tfm
+from repro.optim import (adam_update, apply_updates, clip_by_global_norm)
+
+
+def _loss_fn_for(cfg: ModelConfig):
+    if cfg.encoder_layers:
+        return encdec_lib.train_loss
+    return tfm.train_loss
+
+
+def make_train_step(cfg: ModelConfig, *, lr_schedule, microbatches: int = 1,
+                    dist=None, clip_norm: float = 1.0,
+                    ctx_factory: Optional[Callable] = None,
+                    remat: bool = True, chunked=None,
+                    optimizer: str = "adam", accum_dtype=jnp.float32):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ctx_factory: () -> QuantCtx for QAT (fake-quant in the train graph).
+    optimizer: "adam" (f32 moments) or "adam8bit" (int8 moments with
+    row-wise scales — repro.optim.quantized_adam).
+    """
+    loss_fn = _loss_fn_for(cfg)
+    if optimizer == "adam8bit":
+        from repro.optim.quantized_adam import qadam_update as _opt_update
+    else:
+        _opt_update = adam_update
+
+    def loss_for(params, mb):
+        ctx = ctx_factory() if ctx_factory is not None else None
+        kw = {} if cfg.encoder_layers else {"chunked": chunked}
+        return loss_fn(cfg, params, mb, ctx=ctx, dist=dist, remat=remat, **kw)
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_for)(params, batch)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+            gz = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+
+            def acc(carry, mb):
+                lsum, gsum = carry
+                l, g = jax.value_and_grad(loss_for)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), gsum, g)
+                return (lsum + l, gsum), None
+
+            (lsum, gsum), _ = jax.lax.scan(acc, (jnp.zeros(()), gz), mbs)
+            loss = lsum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+
+        # global-norm clip FUSED into the moment update (no scaled-grad copy)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-12))
+        updates, opt_state = _opt_update(grads, opt_state, params,
+                                         lr=lr_schedule, grad_scale=scale)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": lr_schedule(opt_state.step) if callable(lr_schedule)
+                   else jnp.asarray(lr_schedule)}
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, *, dist=None,
+                      ctx_factory: Optional[Callable] = None, chunked=None):
+    def prefill(params, tokens, cache, embeds=None):
+        ctx = ctx_factory() if ctx_factory is not None else None
+        return tfm.prefill(cfg, params, tokens, cache, embeds=embeds,
+                           ctx=ctx, dist=dist, chunked=chunked)
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, *, dist=None,
+                     ctx_factory: Optional[Callable] = None):
+    """serve_step: one new token against the KV cache/state."""
+    if cfg.encoder_layers:
+        def decode(params, tokens, pos, cache):
+            ctx = ctx_factory() if ctx_factory is not None else None
+            return encdec_lib.decode_step(cfg, params, tokens, pos, cache,
+                                          ctx=ctx)
+        return decode
+
+    def decode(params, tokens, pos, cache):
+        ctx = ctx_factory() if ctx_factory is not None else None
+        return tfm.decode_step(cfg, params, tokens, pos, cache, ctx=ctx,
+                               dist=dist)
+    return decode
+
+
+def make_encoder_forward(cfg: ModelConfig, *, dist=None):
+    """Prefill-equivalent for encoder-decoder archs: encode the frames and
+    project the decoder's cross-attention KV (the serving 'prefill')."""
+    def fwd(params, frames, bos_tokens):
+        return encdec_lib.prefill_from_encoder(
+            cfg, params, frames, bos_tokens, max_decode_len=1024)
+    return fwd

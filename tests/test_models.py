@@ -1,0 +1,253 @@
+"""Model-substrate behaviour tests: forward/grad sanity, decode-vs-dense
+consistency, family-specific invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as tfm
+from repro.models import encdec, bert
+from repro.models.attention import AttnConfig, _chunked_attend, _dense_attend
+from repro.models.rglru import (init_recurrent_params, rg_lru_scan,
+                                rg_lru_step)
+from repro.models.rwkv6 import wkv_chunked, wkv_sequential, wkv_step
+
+LM_ARCHS = ["h2o-danube3-4b", "internlm2-20b", "gemma2-2b", "granite-20b",
+            "qwen3-moe-235b", "grok1-314b", "recurrentgemma-2b",
+            "rwkv6-1p6b", "phi3-vision-4p2b"]
+
+
+def _lm_batch(cfg, B=2, T=16, seed=1):
+    tokens = jax.random.randint(jax.random.PRNGKey(seed), (B, T), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.frontend:
+        batch["embeds"] = jnp.zeros((B, cfg.num_frontend_tokens, cfg.d_model),
+                                    jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_train_loss_finite_and_grads_flow(arch):
+    cfg = get_config(arch).reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    batch = _lm_batch(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: tfm.train_loss(cfg, p, batch, remat=False))(params)
+    assert np.isfinite(float(loss))
+    total = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert total > 0
+
+
+@pytest.mark.parametrize("arch", ["h2o-danube3-4b", "gemma2-2b",
+                                  "recurrentgemma-2b", "rwkv6-1p6b",
+                                  "qwen3-moe-235b", "granite-20b"])
+def test_decode_matches_dense_forward(arch):
+    """Prefill + T decode steps must equal the cache-free forward."""
+    cfg = get_config(arch).reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    B, T, extra = 2, 12, 4
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T + extra), 0,
+                              cfg.vocab_size)
+    full_logits, _ = tfm.forward(cfg, params, toks)
+    cache = tfm.init_cache(cfg, B, 64, dtype=jnp.float32)
+    logits_p, cache = tfm.prefill(cfg, params, toks[:, :T], cache)
+    errs = [float(jnp.max(jnp.abs(logits_p[:, -1] - full_logits[:, T - 1])))]
+    for t in range(extra):
+        pos = jnp.full((B, 1), T + t, jnp.int32)
+        lg, cache = tfm.decode_step(cfg, params, toks[:, T + t:T + t + 1],
+                                    pos, cache)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full_logits[:, T + t]))))
+    assert max(errs) < 5e-5
+
+
+def test_unrolled_matches_scan():
+    cfg = get_config("gemma2-2b").reduced()
+    key = jax.random.PRNGKey(0)
+    p_stacked = tfm.init_params(cfg, key, stacked=True, dtype=jnp.float32)
+    p_flat = tfm.init_params(cfg, key, stacked=False, dtype=jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    l1, _ = tfm.forward(cfg, p_stacked, toks)
+    l2, _ = tfm.forward(cfg, p_flat, toks)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sliding_window_restricts_attention():
+    """With ONE layer, a token further than `window` back must not influence
+    the output (with L layers the receptive field grows to L*window)."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("h2o-danube3-4b").reduced(),
+                              num_layers=1)        # window=16
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    T = 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, T), 0, cfg.vocab_size)
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 7) % cfg.vocab_size)
+    l1, _ = tfm.forward(cfg, params, toks)
+    l2, _ = tfm.forward(cfg, params, toks2)
+    # last position is > window away from position 0: unaffected
+    np.testing.assert_allclose(np.asarray(l1[0, -1]), np.asarray(l2[0, -1]),
+                               atol=1e-5)
+    # position 1 IS affected
+    assert float(jnp.max(jnp.abs(l1[0, 1] - l2[0, 1]))) > 1e-4
+
+
+def test_causality():
+    cfg = get_config("internlm2-20b").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 10), 0,
+                              cfg.vocab_size)
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 3) % cfg.vocab_size)
+    l1, _ = tfm.forward(cfg, params, toks)
+    l2, _ = tfm.forward(cfg, params, toks2)
+    np.testing.assert_allclose(np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]),
+                               atol=1e-5)
+
+
+class TestChunkedAttention:
+    def test_matches_dense(self):
+        key = jax.random.PRNGKey(0)
+        B, T, H, KV, hd = 2, 64, 4, 2, 16
+        cfg = AttnConfig(num_heads=H, num_kv_heads=KV, head_dim=hd)
+        q = jax.random.normal(key, (B, T, H, hd))
+        k = jax.random.normal(jax.random.PRNGKey(1), (B, T, KV, hd))
+        v = jax.random.normal(jax.random.PRNGKey(2), (B, T, KV, hd))
+        pos = jnp.broadcast_to(jnp.arange(T), (B, T)).astype(jnp.int32)
+        out_d = _dense_attend(q, k, v, pos, pos, cfg)
+        out_c = _chunked_attend(q, k, v, pos, pos, cfg, kv_chunk=16)
+        np.testing.assert_allclose(np.asarray(out_d), np.asarray(out_c),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_matches_dense_windowed_softcap(self):
+        key = jax.random.PRNGKey(3)
+        B, T, H, KV, hd = 1, 48, 2, 1, 8
+        cfg = AttnConfig(num_heads=H, num_kv_heads=KV, head_dim=hd,
+                         window=12, logit_softcap=20.0)
+        q = jax.random.normal(key, (B, T, H, hd))
+        k = jax.random.normal(jax.random.PRNGKey(4), (B, T, KV, hd))
+        v = jax.random.normal(jax.random.PRNGKey(5), (B, T, KV, hd))
+        pos = jnp.broadcast_to(jnp.arange(T), (B, T)).astype(jnp.int32)
+        out_d = _dense_attend(q, k, v, pos, pos, cfg)
+        out_c = _chunked_attend(q, k, v, pos, pos, cfg, kv_chunk=16)
+        np.testing.assert_allclose(np.asarray(out_d), np.asarray(out_c),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestRWKV:
+    def _make(self, B=2, H=3, T=96, dk=16, dv=16):
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        r = jax.random.normal(ks[0], (B, H, T, dk))
+        k = jax.random.normal(ks[1], (B, H, T, dk))
+        v = jax.random.normal(ks[2], (B, H, T, dv))
+        logw = jnp.clip(-jnp.exp(jax.random.normal(ks[3], (B, H, T, dk)) * .5),
+                        -8.0, 0.0)
+        u = jax.random.normal(ks[4], (H, dk)) * 0.1
+        return r, k, v, logw, u
+
+    def test_chunked_matches_sequential(self):
+        r, k, v, logw, u = self._make()
+        o1, s1 = wkv_sequential(r, k, v, logw, u)
+        o2, s2 = wkv_chunked(r, k, v, logw, u, chunk=32)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_step_matches_sequential(self):
+        r, k, v, logw, u = self._make(T=8)
+        o_ref, _ = wkv_sequential(r, k, v, logw, u)
+        B, H, T, dk = k.shape
+        s = jnp.zeros((B, H, dk, v.shape[-1]))
+        outs = []
+        for t in range(T):
+            o, s = wkv_step(r[:, :, t], k[:, :, t], v[:, :, t],
+                            logw[:, :, t], u, s)
+            outs.append(o)
+        np.testing.assert_allclose(np.asarray(jnp.stack(outs, 2)),
+                                   np.asarray(o_ref), rtol=1e-5, atol=1e-5)
+
+
+class TestRGLRU:
+    def test_scan_matches_steps(self):
+        d = 16
+        p = init_recurrent_params(jax.random.PRNGKey(0), 32, d)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, d))
+        y_scan, h_fin = rg_lru_scan(p, x)
+        h = jnp.zeros((2, d))
+        ys = []
+        for t in range(12):
+            y, h = rg_lru_step(p, x[:, t], h)
+            ys.append(y)
+        np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                                   np.asarray(y_scan), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_fin),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_state_decays(self):
+        """RG-LRU decay keeps |h| bounded (contraction)."""
+        d = 8
+        p = init_recurrent_params(jax.random.PRNGKey(0), 16, d)
+        x = jnp.ones((1, 256, d))
+        y, h = rg_lru_scan(p, x)
+        assert np.all(np.isfinite(np.asarray(y)))
+        assert float(jnp.max(jnp.abs(h))) < 100.0
+
+
+class TestEncDec:
+    def test_train_and_decode(self):
+        cfg = get_config("seamless-m4t-medium").reduced()
+        params = encdec.init_params(cfg, jax.random.PRNGKey(0),
+                                    dtype=jnp.float32)
+        B, S, T = 2, 8, 10
+        frames = jax.random.normal(jax.random.PRNGKey(1),
+                                   (B, S, cfg.d_model)) * 0.02
+        toks = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0,
+                                  cfg.vocab_size)
+        loss = encdec.train_loss(cfg, params,
+                                 {"frames": frames, "tokens": toks,
+                                  "labels": toks})
+        assert np.isfinite(float(loss))
+        mem = encdec.encode(cfg, params, frames)
+        full_logits, _ = encdec.decode(cfg, params, toks, mem)
+        logits0, cache = encdec.prefill_from_encoder(cfg, params, frames,
+                                                     toks[:, :1], 32)
+        errs = [float(jnp.max(jnp.abs(logits0[:, -1] - full_logits[:, 0])))]
+        for t in range(1, 4):
+            pos = jnp.full((B, 1), t, jnp.int32)
+            lg, cache = encdec.decode_step(cfg, params, toks[:, t:t + 1],
+                                           pos, cache)
+            errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full_logits[:, t]))))
+        assert max(errs) < 5e-5
+
+
+class TestBert:
+    def test_loss_and_predict(self):
+        cfg = bert.tiny()
+        params = bert.init_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                  cfg.vocab_size)
+        batch = {"tokens": toks, "labels": jnp.asarray([0, 1, 0, 1])}
+        loss = bert.loss_fn(cfg, params, batch)
+        assert np.isfinite(float(loss))
+        preds = bert.predict(cfg, params, batch)
+        assert preds.shape == (4,)
+
+    def test_quantizer_census_scale(self):
+        """Paper: 161 activation quantizers for BERT-base; our site layout
+        counts 160 (the accounting granularity matches)."""
+        n = len(bert.activation_sites(bert.BertConfig()))
+        assert 150 <= n <= 170
+
+    def test_padding_mask_blocks_attention(self):
+        cfg = bert.tiny()
+        params = bert.init_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                  cfg.vocab_size)
+        mask = jnp.asarray([[1, 1, 1, 1, 0, 0, 0, 0]], bool)
+        h1 = bert.encode(cfg, params, toks, pad_mask=mask)
+        toks2 = toks.at[0, 5].set((toks[0, 5] + 3) % cfg.vocab_size)
+        h2 = bert.encode(cfg, params, toks2, pad_mask=mask)
+        # changing a padded token must not affect valid positions
+        np.testing.assert_allclose(np.asarray(h1[0, :4]),
+                                   np.asarray(h2[0, :4]), atol=1e-5)

@@ -1,0 +1,80 @@
+"""Perf-variant correctness: banded attention == dense; int8 weight storage
+keeps the forward close to bf16."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as tfm
+from repro.models.attention import (AttnConfig, _banded_attend, _dense_attend)
+from repro.models.common import quantize_weight_int8, resolve_weight
+
+
+class TestBandedAttention:
+    @pytest.mark.parametrize("T,W,block", [(96, 24, 16), (128, 32, 32),
+                                           (90, 17, 16)])
+    def test_matches_dense(self, T, W, block):
+        B, H, KV, hd = 2, 4, 2, 16
+        cfg = AttnConfig(num_heads=H, num_kv_heads=KV, head_dim=hd, window=W)
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, T, H, hd))
+        k = jax.random.normal(ks[1], (B, T, KV, hd))
+        v = jax.random.normal(ks[2], (B, T, KV, hd))
+        pos = jnp.broadcast_to(jnp.arange(T), (B, T)).astype(jnp.int32)
+        ref = _dense_attend(q, k, v, pos, pos, cfg)
+        out = _banded_attend(q, k, v, pos, pos, cfg, block=block)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_model_level_banded_matches(self):
+        cfg = get_config("h2o-danube3-4b").reduced()   # window 16
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0),
+                                 dtype=jnp.float32)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 40), 0,
+                                  cfg.vocab_size)
+        l_ref, _ = tfm.forward(cfg, params, toks)
+        l_band, _ = tfm.forward(cfg, params, toks, chunked="banded")
+        np.testing.assert_allclose(np.asarray(l_ref), np.asarray(l_band),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestInt8WeightStorage:
+    def test_resolve_weight_roundtrip(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (128, 64)) / 8
+        qw = quantize_weight_int8(w)
+        w2 = resolve_weight(qw)
+        assert qw["q"].dtype == jnp.int8
+        # per-out-channel int8: error <= scale/2 + bf16 dequant rounding
+        # (resolve_weight dequantizes in bf16 for the matmul: 2^-8 relative)
+        err = np.asarray(jnp.abs(w - w2))
+        amax = np.abs(np.asarray(w)).max(axis=0)
+        bound = np.asarray(qw["s"])[0] * 0.51 + amax * 2.0 ** -8 + 1e-4
+        assert np.all(err <= bound[None, :])
+
+    def test_forward_with_int8_weights_close(self):
+        cfg = get_config("internlm2-20b").reduced()
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0),
+                                 dtype=jnp.float32)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                  cfg.vocab_size)
+        l_ref, _ = tfm.forward(cfg, params, toks)
+
+        def quantize_tree(p):
+            out = jax.tree.map(lambda x: x, p)   # copy structure
+            for g in out["scan"]:
+                for blk in ("attn", "ffn"):
+                    if blk not in g:
+                        continue
+                    for name, w in list(g[blk].items()):
+                        if w.ndim == 3 and w.shape[-1] >= 64:  # (L, in, out)
+                            g[blk][name] = jax.vmap(quantize_weight_int8)(w)
+            return out
+
+        pq = quantize_tree(params)
+        l_q, _ = tfm.forward(cfg, pq, toks)
+        # int8 weights perturb logits but keep them correlated
+        ref = np.asarray(l_ref).reshape(-1)
+        got = np.asarray(l_q).reshape(-1)
+        corr = np.corrcoef(ref, got)[0, 1]
+        assert corr > 0.99

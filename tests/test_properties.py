@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis) for the quantization system's
+invariants."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import (Granularity, QuantizerConfig, fake_quant,
+                        params_from_range, quantize, reduce_range)
+from repro.core.peg import build_groups, group_index_natural_layout
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+finite_arrays = hnp.arrays(
+    np.float32, hnp.array_shapes(min_dims=1, max_dims=2, min_side=2,
+                                 max_side=64),
+    elements=st.floats(-1e4, 1e4, width=32))
+
+
+@given(finite_arrays, st.integers(2, 8), st.booleans())
+def test_fake_quant_idempotent(x, bits, symmetric):
+    """Quantizing an already-quantized tensor is a no-op (projection)."""
+    cfg = QuantizerConfig(bits=bits, symmetric=symmetric)
+    qp = params_from_range(*reduce_range(jnp.asarray(x), cfg), cfg)
+    once = fake_quant(jnp.asarray(x), qp, cfg)
+    twice = fake_quant(once, qp, cfg)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(finite_arrays, st.integers(2, 8))
+def test_quantize_outputs_in_grid(x, bits):
+    cfg = QuantizerConfig(bits=bits, symmetric=False)
+    qp = params_from_range(*reduce_range(jnp.asarray(x), cfg), cfg)
+    q = np.asarray(quantize(jnp.asarray(x), qp, cfg))
+    assert q.min() >= cfg.qmin and q.max() <= cfg.qmax
+
+
+@given(finite_arrays, st.integers(2, 8))
+def test_error_bounded_by_half_step_inside_range(x, bits):
+    """|x - q(x)| <= scale/2 for values inside the clipping range."""
+    cfg = QuantizerConfig(bits=bits, symmetric=False)
+    xj = jnp.asarray(x)
+    qp = params_from_range(*reduce_range(xj, cfg), cfg)
+    xq = fake_quant(xj, qp, cfg)
+    err = np.abs(np.asarray(xj - xq))
+    bound = float(qp.scale) * 0.5 + 1e-3 * max(1.0, float(qp.scale))
+    assert err.max() <= bound
+
+
+@given(finite_arrays)
+def test_monotonicity(x):
+    """fake_quant is monotone non-decreasing in its input."""
+    cfg = QuantizerConfig(bits=4, symmetric=False)
+    xj = jnp.sort(jnp.asarray(x).reshape(-1))
+    qp = params_from_range(xj[0], xj[-1], cfg)
+    out = np.asarray(fake_quant(xj, qp, cfg))
+    assert np.all(np.diff(out) >= -1e-6)
+
+
+@given(st.integers(2, 512), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+def test_peg_groups_partition_dims(d, k, seed):
+    """PEG group assignment is always a partition of the d dims."""
+    hypothesis.assume(k <= d)
+    r = np.random.RandomState(seed % 2**31).rand(d)
+    spec = build_groups(r, k, lane_align=False)
+    gi = group_index_natural_layout(spec)
+    assert gi.shape == (d,)
+    assert set(np.unique(spec.group_index)) == set(range(k))
+    assert spec.group_sizes.sum() == d
+    # permutation is a bijection
+    assert sorted(spec.permutation.tolist()) == list(range(d))
+
+
+@given(st.integers(4, 256), st.integers(2, 4), st.integers(0, 10 ** 6))
+def test_peg_sorted_ranges_are_grouped_contiguously(d, k, seed):
+    """After the range-based permutation, group ranges are non-overlapping
+    in sorted order: max range of group j <= min range of group j+1."""
+    hypothesis.assume(k <= d)
+    r = np.random.RandomState(seed % 2**31).rand(d)
+    spec = build_groups(r, k, use_permutation=True, lane_align=False)
+    sorted_r = r[spec.permutation]
+    bounds = np.cumsum(spec.group_sizes)
+    prev_max = -np.inf
+    for j in range(k):
+        lo = 0 if j == 0 else bounds[j - 1]
+        grp = sorted_r[lo:bounds[j]]
+        assert grp.min() >= prev_max - 1e-12
+        prev_max = grp.max()
+
+
+@given(hnp.arrays(np.float32, st.tuples(st.integers(2, 16),
+                                        st.integers(2, 32)),
+                  elements=st.floats(-100, 100, width=32)),
+       st.integers(2, 8))
+def test_grad_compression_roundtrip_bound(g, group):
+    from repro.core.grad_compression import dequantize_grad, quantize_grad
+    gj = jnp.asarray(g)
+    q, s = quantize_grad(gj, group_size=group * 32)
+    g2 = dequantize_grad(q, s, gj.shape, gj.dtype)
+    # error per element bounded by half its group's scale
+    assert float(jnp.max(jnp.abs(gj - g2))) <= float(jnp.max(s)) * 0.51 + 1e-6

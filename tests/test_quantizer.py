@@ -1,0 +1,157 @@
+"""Unit tests for the uniform affine quantizer (paper eq. 1-2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Granularity, QuantParams, QuantizerConfig,
+                        RangeEstimator, dequantize, fake_quant,
+                        params_from_range, quantize, reduce_range)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+class TestGridProperties:
+    def test_asymmetric_levels(self):
+        cfg = QuantizerConfig(bits=8, symmetric=False)
+        assert cfg.qmin == 0 and cfg.qmax == 255 and cfg.num_levels == 255
+
+    def test_symmetric_levels(self):
+        cfg = QuantizerConfig(bits=8, symmetric=True)
+        assert cfg.qmin == -127 and cfg.qmax == 127
+
+    def test_invalid_bits(self):
+        with pytest.raises(ValueError):
+            QuantizerConfig(bits=0)
+
+    def test_quantize_hits_integer_grid(self):
+        cfg = QuantizerConfig(bits=4, symmetric=False)
+        x = _rand((64,), scale=3.0)
+        qp = params_from_range(jnp.min(x), jnp.max(x), cfg)
+        q = quantize(x, qp, cfg)
+        assert q.dtype == jnp.int32
+        assert int(q.min()) >= cfg.qmin and int(q.max()) <= cfg.qmax
+
+    def test_roundtrip_error_bounded_by_half_step(self):
+        cfg = QuantizerConfig(bits=8, symmetric=False)
+        x = _rand((1024,), scale=2.0)
+        qp = params_from_range(jnp.min(x), jnp.max(x), cfg)
+        xq = fake_quant(x, qp, cfg)
+        # inside the clipping range, error <= scale/2 (+ float eps)
+        assert float(jnp.max(jnp.abs(x - xq))) <= float(qp.scale) * 0.5 + 1e-5
+
+    def test_dequantize_matches_fake_quant(self):
+        cfg = QuantizerConfig(bits=8, symmetric=True)
+        x = _rand((128,))
+        qp = params_from_range(*reduce_range(x, cfg), cfg)
+        assert np.allclose(dequantize(quantize(x, qp, cfg), qp, cfg),
+                           fake_quant(x, qp, cfg), atol=1e-6)
+
+    def test_zero_is_representable(self):
+        # classic requirement: real 0.0 must map to an exact grid point
+        cfg = QuantizerConfig(bits=8, symmetric=False)
+        x = jnp.asarray([0.3, 5.0, 9.7])  # all-positive range
+        qp = params_from_range(jnp.min(x), jnp.max(x), cfg)
+        zero = fake_quant(jnp.zeros(()), qp, cfg)
+        assert abs(float(zero)) < 1e-7
+
+    def test_wide_dynamic_range_hurts_small_values(self):
+        """The paper's core phenomenon: one outlier destroys precision for
+        the rest of the tensor under per-tensor quantization."""
+        cfg = QuantizerConfig(bits=8, symmetric=False)
+        base = _rand((1000,), scale=0.1)
+        outlier = jnp.asarray([100.0])
+        x = jnp.concatenate([base, outlier])
+        qp = params_from_range(jnp.min(x), jnp.max(x), cfg)
+        err_with = float(jnp.mean(jnp.square(base - fake_quant(base, qp, cfg))))
+        qp0 = params_from_range(jnp.min(base), jnp.max(base), cfg)
+        err_without = float(jnp.mean(jnp.square(base - fake_quant(base, qp0, cfg))))
+        assert err_with > 50 * err_without
+
+
+class TestGranularity:
+    def test_per_channel_shapes(self):
+        cfg = QuantizerConfig(bits=8, symmetric=True,
+                              granularity=Granularity.PER_CHANNEL,
+                              channel_axis=-1)
+        w = _rand((32, 16))
+        mn, mx = reduce_range(w, cfg)
+        assert mn.shape == (16,)
+        qp = params_from_range(mn, mx, cfg)
+        out = fake_quant(w, qp, cfg)
+        assert out.shape == w.shape
+
+    def test_per_channel_better_than_per_tensor(self):
+        # scale one channel way up; per-channel must win
+        w = _rand((256, 8))
+        w = w.at[:, 3].multiply(100.0)
+        pc = QuantizerConfig(bits=8, symmetric=True,
+                             granularity=Granularity.PER_CHANNEL)
+        pt = QuantizerConfig(bits=8, symmetric=True)
+        qp_pc = params_from_range(*reduce_range(w, pc), pc)
+        qp_pt = params_from_range(*reduce_range(w, pt), pt)
+        err_pc = float(jnp.mean(jnp.square(w - fake_quant(w, qp_pc, pc))))
+        err_pt = float(jnp.mean(jnp.square(w - fake_quant(w, qp_pt, pt))))
+        # the outlier channel keeps its own coarse scale either way, so the
+        # achievable gain is bounded by the 7 clean channels: expect >5x.
+        assert err_pc < err_pt / 5
+
+    def test_peg_group_index_expansion(self):
+        cfg = QuantizerConfig(bits=8, granularity=Granularity.PER_EMBEDDING_GROUP,
+                              num_groups=2)
+        # dims 0-1 group 0 (small), dims 2-3 group 1 (large)
+        gi = jnp.asarray([0, 0, 1, 1])
+        qp = QuantParams(scale=jnp.asarray([0.01, 1.0]),
+                         zero_point=jnp.asarray([0.0, 0.0]),
+                         group_index=gi)
+        x = jnp.asarray([[0.5, -0.5, 100.0, -100.0]])
+        out = fake_quant(x, qp, cfg)
+        assert out.shape == x.shape
+        # small dims quantized with the fine scale
+        assert abs(float(out[0, 0]) - 0.5) < 0.01
+
+
+class TestGradients:
+    def test_ste_identity_inside_range(self):
+        cfg = QuantizerConfig(bits=8, symmetric=False)
+        x = _rand((64,))
+        qp = params_from_range(jnp.min(x) - 1, jnp.max(x) + 1, cfg)
+        g = jax.grad(lambda t: jnp.sum(fake_quant(t, qp, cfg)))(x)
+        assert np.allclose(g, 1.0)
+
+    def test_ste_zero_outside_range(self):
+        cfg = QuantizerConfig(bits=8, symmetric=True)
+        qp = QuantParams(scale=jnp.asarray(0.01), zero_point=jnp.asarray(0.0))
+        x = jnp.asarray([100.0, -100.0, 0.001])
+        g = jax.grad(lambda t: jnp.sum(fake_quant(t, qp, cfg)))(x)
+        assert abs(float(g[0])) < 1e-6 and abs(float(g[1])) < 1e-6
+        assert abs(float(g[2]) - 1.0) < 1e-6
+
+    def test_lsq_scale_gradient_nonzero(self):
+        cfg = QuantizerConfig(bits=4, symmetric=True)
+        x = _rand((128,))
+
+        def loss(log_s):
+            qp = QuantParams(scale=jnp.exp(log_s), zero_point=jnp.asarray(0.0))
+            return jnp.mean(jnp.square(x - fake_quant(x, qp, cfg)))
+
+        g = jax.grad(loss)(jnp.asarray(-2.0))
+        assert np.isfinite(float(g)) and abs(float(g)) > 0
+
+    def test_scale_gradient_descends_to_better_mse(self):
+        cfg = QuantizerConfig(bits=4, symmetric=True)
+        x = _rand((512,))
+        log_s = jnp.asarray(1.0)   # deliberately way too coarse
+
+        def loss(ls):
+            qp = QuantParams(scale=jnp.exp(ls), zero_point=jnp.asarray(0.0))
+            return jnp.mean(jnp.square(x - fake_quant(x, qp, cfg)))
+
+        l0 = float(loss(log_s))
+        for _ in range(200):
+            log_s = log_s - 0.1 * jax.grad(loss)(log_s)
+        assert float(loss(log_s)) < l0 / 5

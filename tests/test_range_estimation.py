@@ -1,0 +1,109 @@
+"""Tests for static range estimators (paper §2, App. B.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (Granularity, QuantizerConfig, RangeEstimator,
+                        estimate_weight_params, fake_quant, finalize,
+                        init_range_state, mse_search, observe,
+                        params_from_range, quant_error)
+
+
+def _cfg(estimator, **kw):
+    return QuantizerConfig(bits=8, estimator=estimator, **kw)
+
+
+class TestMinMax:
+    def test_current_minmax_tracks_envelope(self):
+        cfg = _cfg(RangeEstimator.CURRENT_MINMAX)
+        st = init_range_state()
+        st = observe(st, jnp.asarray([-1.0, 2.0]), cfg)
+        st = observe(st, jnp.asarray([-3.0, 1.0]), cfg)
+        assert float(st.x_min) == -3.0 and float(st.x_max) == 2.0
+
+    def test_running_minmax_ema(self):
+        cfg = _cfg(RangeEstimator.RUNNING_MINMAX, ema_momentum=0.9)
+        st = init_range_state()
+        st = observe(st, jnp.asarray([0.0, 10.0]), cfg)   # init: (0, 10)
+        st = observe(st, jnp.asarray([0.0, 0.0]), cfg)    # EMA: max -> 9.0
+        assert abs(float(st.x_max) - 9.0) < 1e-6
+
+    def test_finalize_minmax(self):
+        cfg = _cfg(RangeEstimator.CURRENT_MINMAX)
+        st = init_range_state()
+        x = jax.random.normal(jax.random.PRNGKey(0), (256,))
+        st = observe(st, x, cfg)
+        qp = finalize(st, cfg)
+        xq = fake_quant(x, qp, cfg)
+        assert float(jnp.max(jnp.abs(x - xq))) <= float(qp.scale) * 0.5 + 1e-5
+
+
+class TestMSE:
+    def test_mse_clips_outliers_at_low_bits(self):
+        """With few levels and a moderate outlier, clipping the range beats
+        covering it (Banner/Choukroun motivation). At 8-bit with an extreme
+        outlier the optimum flips to not clipping — MSE must find both."""
+        cfg = QuantizerConfig(bits=4, symmetric=True,
+                              estimator=RangeEstimator.MSE)
+        key = jax.random.PRNGKey(1)
+        x = jax.random.normal(key, (4096,))
+        x = x.at[0].set(10.0)     # moderate outlier, 4-bit budget
+        mn, mx = jnp.min(x), jnp.max(x)
+        qp = mse_search(x, mn, mx, cfg)
+        assert float(qp.scale) * cfg.qmax < float(mx) / 2  # clipped hard
+
+    def test_mse_keeps_extreme_outlier_at_8bit(self):
+        """Dual of the above: one huge outlier among N(0,1) data — its clip
+        error dominates, so the MSE optimum keeps (almost) the full range."""
+        cfg = _cfg(RangeEstimator.MSE, symmetric=True)
+        x = jax.random.normal(jax.random.PRNGKey(7), (4096,))
+        x = x.at[0].set(500.0)
+        qp = mse_search(x, jnp.min(x), jnp.max(x), cfg)
+        assert float(qp.scale) * cfg.qmax > 250.0
+
+    def test_mse_beats_minmax_on_outliers(self):
+        cfg_mse = QuantizerConfig(bits=4, symmetric=True,
+                                  estimator=RangeEstimator.MSE)
+        cfg_mm = QuantizerConfig(bits=4, symmetric=True,
+                                 estimator=RangeEstimator.CURRENT_MINMAX)
+        x = jax.random.normal(jax.random.PRNGKey(2), (4096,))
+        x = x.at[0].set(30.0)
+        qp_mse = estimate_weight_params(x, cfg_mse)
+        qp_mm = estimate_weight_params(x, cfg_mm)
+        # gain bounded by the outlier's own clip error (~(30-c)^2/N): expect >3x
+        assert float(quant_error(x, qp_mse, cfg_mse)) < \
+            float(quant_error(x, qp_mm, cfg_mm)) / 3
+
+    def test_mse_matches_minmax_on_uniform(self):
+        """On bounded uniform data, clipping should stay near 1.0."""
+        cfg = _cfg(RangeEstimator.MSE, symmetric=True)
+        x = jax.random.uniform(jax.random.PRNGKey(3), (4096,), minval=-1, maxval=1)
+        qp = estimate_weight_params(x, cfg)
+        full = float(jnp.max(jnp.abs(x))) / cfg.qmax
+        assert float(qp.scale) > 0.9 * full
+
+    def test_mse_per_channel(self):
+        cfg = QuantizerConfig(bits=4, symmetric=True,
+                              granularity=Granularity.PER_CHANNEL,
+                              estimator=RangeEstimator.MSE)
+        w = jax.random.normal(jax.random.PRNGKey(4), (8192, 8))
+        w = w.at[5, 0].set(10.0)    # moderate outlier only in channel 0
+        qp = estimate_weight_params(w, cfg)
+        assert qp.scale.shape == (8,)
+        # channel 0 should be clipped well below the outlier; others near min-max
+        assert float(qp.scale[0]) * cfg.qmax < 5.0
+
+
+class TestWeightEstimation:
+    def test_low_bit_prefers_mse(self):
+        """Paper §5: for <8-bit weights always use the MSE estimator."""
+        w = jax.random.normal(jax.random.PRNGKey(5), (2048,)) * \
+            (1 + 10 * jax.random.bernoulli(jax.random.PRNGKey(6), 0.001, (2048,)))
+        for bits in (2, 4, 6):
+            cfg_mse = QuantizerConfig(bits=bits, symmetric=True,
+                                      estimator=RangeEstimator.MSE)
+            cfg_mm = QuantizerConfig(bits=bits, symmetric=True,
+                                     estimator=RangeEstimator.CURRENT_MINMAX)
+            e_mse = float(quant_error(w, estimate_weight_params(w, cfg_mse), cfg_mse))
+            e_mm = float(quant_error(w, estimate_weight_params(w, cfg_mm), cfg_mm))
+            assert e_mse <= e_mm + 1e-9
