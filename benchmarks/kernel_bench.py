@@ -6,9 +6,20 @@ correctness timings for regression tracking and (b) the analytically derived
 TPU-roofline time per call (bytes / HBM bw for the memory-bound quant
 kernels; max(flops/peak, bytes/bw) for the matmuls) — the number a v5e
 deployment would be judged against.
+
+The FFN-chain section compares the *unfused* integer sequence
+(LN+quant, PEG matmul to f32, gelu, re-quant, matmul) against the *fused*
+deployment chain (``ln_quantize -> int8_matmul_peg`` with the
+bias+gelu+requant epilogue ``-> int8_matmul``) — same math, strictly fewer
+HBM bytes because the f32 hidden tensor never leaves VMEM.
+
+``python -m benchmarks.kernel_bench`` (or benchmarks/run.py --sections
+kernels) also writes machine-readable ``BENCH_kernels.json`` so the perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -19,6 +30,7 @@ from repro.kernels import ops
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
+JSON_PATH = "BENCH_kernels.json"
 
 
 def _time(fn, *args, iters=3):
@@ -27,6 +39,37 @@ def _time(fn, *args, iters=3):
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters * 1e6     # us
+
+
+def _row(name, us, roofline_us, hbm_bytes, variant="kernel"):
+    return {"name": name, "interpret_us": round(us, 1),
+            "tpu_roofline_us": round(roofline_us, 2),
+            "hbm_bytes": int(hbm_bytes), "variant": variant}
+
+
+def _matmul_roofline_us(m, k, n, *, a_bytes=1, o_bytes=4):
+    flops = 2 * m * k * n
+    bytes_moved = m * k * a_bytes + k * n + m * n * o_bytes
+    return max(flops / (2 * PEAK_FLOPS),        # int8 ~2x bf16 MXU rate
+               bytes_moved / HBM_BW) * 1e6, bytes_moved
+
+
+def ffn_chain_bytes(t, d, f, *, fused: bool) -> int:
+    """HBM traffic of the integer FFN chain (weights int8 either way).
+
+    Both variants start from the fused LN+quantize kernel (seed-era fusion);
+    what "unfused" lacks is the matmul EPILOGUE — its hidden activation
+    round-trips HBM in f32 (matmul out, bias+gelu pass, re-quant pass)."""
+    w_bytes = d * f + f * d
+    if fused:
+        # ln_quantize: f32 in, int8 out; both matmul intermediates int8.
+        return (t * d * 4 + t * d) + (t * d + t * f) + (t * f + t * d * 4) \
+            + w_bytes
+    # ln_quantize, matmul1 -> f32, bias+gelu f32->f32, re-quant f32->int8,
+    # matmul2 -> f32.
+    return (t * d * 4 + t * d) + (t * d + t * f * 4) \
+        + (t * f * 4 + t * f * 4) + (t * f * 4 + t * f) \
+        + (t * f + t * d * 4) + w_bytes
 
 
 def bench():
@@ -40,8 +83,8 @@ def bench():
     z = jnp.full((k,), 128.0)
     us = _time(lambda a: ops.peg_fake_quant(a, s, z), x)
     bytes_moved = t * d * 4 * 2
-    rows.append(("peg_fake_quant_4kx4k", us,
-                 f"tpu_roofline_us={bytes_moved / HBM_BW * 1e6:.1f}"))
+    rows.append(_row("peg_fake_quant_4kx4k", us,
+                     bytes_moved / HBM_BW * 1e6, bytes_moved))
 
     # int8 matmul per-tensor: 1024x4096x4096
     m, kk, n = 1024, 4096, 4096
@@ -50,11 +93,8 @@ def bench():
     us = _time(lambda a_: ops.int8_matmul(a_, w, s_a=0.02, s_w=0.01,
                                           block_m=256, block_n=256,
                                           block_k=512), a)
-    flops = 2 * m * kk * n
-    bytes_moved = m * kk + kk * n + m * n * 4
-    tpu_us = max(flops / (2 * PEAK_FLOPS),        # int8 ~2x bf16 MXU rate
-                 bytes_moved / HBM_BW) * 1e6
-    rows.append(("int8_matmul_1kx4kx4k", us, f"tpu_roofline_us={tpu_us:.1f}"))
+    tpu_us, bytes_moved = _matmul_roofline_us(m, kk, n)
+    rows.append(_row("int8_matmul_1kx4kx4k", us, tpu_us, bytes_moved))
 
     # PEG int8 matmul (K=8 groups fused rescale)
     g = 8
@@ -62,21 +102,85 @@ def bench():
     zg = jnp.zeros((g,))
     us = _time(lambda a_: ops.int8_matmul_peg(a_, w, sg, zg, w_scale=0.01,
                                               block_m=256, block_n=256), a)
-    rows.append(("int8_matmul_peg_k8", us, f"tpu_roofline_us={tpu_us:.1f}"))
+    rows.append(_row("int8_matmul_peg_k8", us, tpu_us, bytes_moved))
 
     # fused LN+quant: 4096 x 4096
     gma = jnp.ones((d,))
     beta = jnp.zeros((d,))
     us = _time(lambda a_: ops.ln_fake_quant(a_, gma, beta, 0.05, 128.0), x)
     bytes_moved = t * d * 4 * 2
-    rows.append(("fused_ln_quant_4kx4k", us,
-                 f"tpu_roofline_us={bytes_moved / HBM_BW * 1e6:.1f}"))
+    rows.append(_row("fused_ln_quant_4kx4k", us,
+                     bytes_moved / HBM_BW * 1e6, bytes_moved))
+
+    rows += bench_ffn_chain()
+    return rows
+
+
+def bench_ffn_chain(t=512, d=512, f=2048, groups=4):
+    """Unfused vs fused integer FFN chain (deployment hot path)."""
+    keys = jax.random.split(jax.random.PRNGKey(1), 6)
+    x = jax.random.normal(keys[0], (t, d), jnp.float32)
+    gamma = jnp.ones((d,))
+    beta = jnp.zeros((d,))
+    w1 = jax.random.randint(keys[1], (d, f), -127, 128, jnp.int8)
+    w2 = jax.random.randint(keys[2], (f, d), -127, 128, jnp.int8)
+    bias = jax.random.normal(keys[3], (f,)) * 0.1
+    sg = jax.random.uniform(keys[4], (groups,), minval=0.01, maxval=0.05)
+    zg = jnp.round(jax.random.uniform(keys[5], (groups,), minval=-1.0,
+                                      maxval=1.0) * 10)
+    s_h, z_h = jnp.asarray(0.03), jnp.asarray(-5.0)
+    s_w1 = s_w2 = jnp.asarray(0.01)
+
+    def unfused(xx):
+        a_q = ops.ln_quantize(xx, gamma, beta, sg, zg, qmin=-128, qmax=127)
+        h = ops.int8_matmul_peg(a_q, w1, sg, zg, w_scale=s_w1)
+        h = jax.nn.gelu(h + bias, approximate=True)
+        h_q = ops.peg_quantize(h, s_h[None], z_h[None], qmin=-128, qmax=127)
+        return ops.int8_matmul(h_q, w2, s_a=s_h, s_w=s_w2, z_a=z_h)
+
+    def fused(xx):
+        a_q = ops.ln_quantize(xx, gamma, beta, sg, zg, qmin=-128, qmax=127)
+        h_q = ops.int8_matmul_peg(a_q, w1, sg, zg, w_scale=s_w1, bias=bias,
+                                  activation="gelu", out_scale=s_h,
+                                  out_zp=z_h)
+        return ops.int8_matmul(h_q, w2, s_a=s_h, s_w=s_w2, z_a=z_h)
+
+    # same math: assert parity before timing
+    np.testing.assert_allclose(np.asarray(unfused(x)), np.asarray(fused(x)),
+                               rtol=1e-3, atol=1e-2)
+
+    rows = []
+    for name, fn, is_fused in [("ffn_chain_unfused", unfused, False),
+                               ("ffn_chain_fused", fused, True)]:
+        us = _time(fn, x)
+        nbytes = ffn_chain_bytes(t, d, f, fused=is_fused)
+        flops = 2 * t * d * f * 2
+        roof = max(flops / (2 * PEAK_FLOPS), nbytes / HBM_BW) * 1e6
+        rows.append(_row(f"{name}_{t}x{d}x{f}", us, roof, nbytes,
+                         "fused" if is_fused else "unfused"))
     return rows
 
 
 def report(rows):
-    return "\n".join(f"{n},{us:.1f},{d}" for n, us, d in rows)
+    lines = [f"{r['name']},{r['interpret_us']:.1f},"
+             f"tpu_roofline_us={r['tpu_roofline_us']:.2f},"
+             f"hbm_bytes={r['hbm_bytes']}" for r in rows]
+    fused = {r["variant"]: r for r in rows if r["variant"] in
+             ("fused", "unfused")}
+    if len(fused) == 2:
+        ratio = fused["unfused"]["hbm_bytes"] / fused["fused"]["hbm_bytes"]
+        lines.append(f"# fused FFN chain moves {ratio:.2f}x fewer HBM bytes "
+                     "than the unfused sequence")
+    return "\n".join(lines)
+
+
+def write_json(rows, path=JSON_PATH):
+    with open(path, "w") as fh:
+        json.dump(rows, fh, indent=1)
+    return path
 
 
 if __name__ == "__main__":
-    print(report(bench()))
+    rows = bench()
+    print(report(rows))
+    print(f"# wrote {write_json(rows)}")

@@ -54,9 +54,13 @@ def main(argv=None):
             lambda: table6_methods.report(table6_methods.run()))
     section("t7", "Table 7 — low-bit weights & embeddings",
             lambda: table7_lowbit.report(table7_lowbit.run()))
+    def _kernels():
+        rows = kernel_bench.bench()
+        path = kernel_bench.write_json(rows)
+        return kernel_bench.report(rows) + f"\n# wrote {path}"
+
     section("kernels", "Pallas kernel micro-bench (interpret mode + "
-            "TPU roofline)",
-            lambda: kernel_bench.report(kernel_bench.bench()))
+            "TPU roofline)", _kernels)
     section("roofline", "Roofline terms per dry-run cell "
             "(EXPERIMENTS.md §Roofline)", roofline.report)
 

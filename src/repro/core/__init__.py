@@ -10,6 +10,8 @@ Public API:
   adaround      — adaptive rounding PTQ refinement
   mixed_precision — Table-2/4 sensitivity + census helpers
   pipeline      — end-to-end PTQ driver
+  deploy        — Mode.DEPLOY integer execution (packed int8 weights +
+                  QTensor activations through the Pallas kernels)
   grad_compression — PEG-int8 cross-pod gradient all-reduce
 """
 from repro.core.quant_config import (A8_DEFAULT, A16_DEFAULT, FP32, W8_DEFAULT,
@@ -31,3 +33,5 @@ from repro.core.calibration import (Mode, QuantCtx, QuantState,
                                     build_act_state, build_weight_state,
                                     collect_ranges, fp32_ctx)
 from repro.core.pipeline import QuantizedModel, ptq
+from repro.core.deploy import (ActQuant, QTensor, act_quant_for, build_deploy,
+                               is_packed, pack_linear)

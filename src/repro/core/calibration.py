@@ -10,7 +10,17 @@ Models thread a ``QuantCtx`` through their forward pass and call
              tensors) per site; returns x unchanged;
   APPLY    — simulated quantization with the frozen ``QuantState``;
   QAT      — simulated quantization with *learnable* scale/offset taken from a
-             trainable pytree (see qat.py).
+             trainable pytree (see qat.py);
+  DEPLOY   — true fixed-point execution: models route deployable matmuls
+             through the Pallas int8 kernels (repro.core.deploy) using
+             ``ctx.deploy_acts``; every other site falls back to APPLY
+             fake-quant so deployed and simulated runs stay comparable.
+
+Matmul-INPUT sites (``{L}/attn_in``, ``{L}/attn/wo_in``) are tapped through
+``ctx.act_in``: they are only observed during COLLECT when
+``collect_inputs=True`` (the deploy calibration sets it) and only quantize in
+APPLY/DEPLOY when calibrated params exist — legacy simulate-only flows are
+byte-for-byte unchanged.
 
 This is a functional design: COLLECT mutates only the Python-side dict of the
 ctx object created inside the calling function, whose values are returned as
@@ -39,6 +49,7 @@ class Mode(enum.Enum):
     COLLECT = "collect"
     APPLY = "apply"
     QAT = "qat"
+    DEPLOY = "deploy"
 
 
 # QuantState: site name -> QuantParams (a pytree usable inside jit).
@@ -58,6 +69,10 @@ class QuantCtx:
     keep_tensors: bool = True                    # needed for MSE / PEG finalize
     # PEG group assignment per site (natural layout), set by the pipeline:
     group_indices: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    # DEPLOY: site -> repro.core.deploy.ActQuant for matmul-input sites.
+    deploy_acts: Optional[dict] = None
+    # COLLECT: also observe the matmul-input sites (deploy calibration).
+    collect_inputs: bool = False
 
     # -- model-facing API ---------------------------------------------------
 
@@ -71,7 +86,7 @@ class QuantCtx:
             if self.keep_tensors:
                 self.calib_tensors[site] = x
             return x
-        if self.mode == Mode.APPLY:
+        if self.mode in (Mode.APPLY, Mode.DEPLOY):
             qp = self.act_state.get(site) if self.act_state else None
             if qp is None:
                 return x
@@ -81,11 +96,38 @@ class QuantCtx:
             return qat_lib.apply_act(self, site, x, cfg)
         raise ValueError(self.mode)
 
+    def act_in(self, site: str, x: jnp.ndarray) -> jnp.ndarray:
+        """Matmul-input quantizer sites (attn_in / wo_in): no-op unless the
+        deploy calibration collected them (see the module docstring)."""
+        cfg = self.policy.act_config(site)
+        if not cfg.enabled:
+            return x
+        if self.mode == Mode.COLLECT:
+            if not self.collect_inputs:
+                return x
+            prev = self.range_states.get(site, init_range_state())
+            self.range_states[site] = observe(prev, x, cfg)
+            if self.keep_tensors:
+                self.calib_tensors[site] = x
+            return x
+        if self.mode in (Mode.APPLY, Mode.DEPLOY):
+            qp = self.act_state.get(site) if self.act_state else None
+            if qp is None:
+                return x
+            return fake_quant(x, qp, cfg)
+        return x                                   # OFF / QAT
+
+    def deploy_act(self, site: str):
+        """ActQuant for a deployable matmul-input site (DEPLOY mode only)."""
+        if self.mode != Mode.DEPLOY or not self.deploy_acts:
+            return None
+        return self.deploy_acts.get(site)
+
     def weight(self, site: str, w: jnp.ndarray) -> jnp.ndarray:
         cfg = self.policy.weight_config(site)
         if self.mode in (Mode.OFF, Mode.COLLECT) or not cfg.enabled:
             return w
-        if self.mode == Mode.APPLY:
+        if self.mode in (Mode.APPLY, Mode.DEPLOY):
             qp = (self.weight_state or {}).get(site)
             if qp is None:
                 # Estimate on the fly from the (static) weight values. Cheap
@@ -108,9 +150,12 @@ def fp32_ctx() -> QuantCtx:
 # ---------------------------------------------------------------------------
 
 def collect_ranges(forward: Callable, params, batches, policy: QuantizationPolicy,
-                   *, keep_tensors: bool = True):
+                   *, keep_tensors: bool = True, collect_inputs: bool = False):
     """Run ``forward(params, batch, ctx)`` over calibration batches, return
     (range_states, calib_tensors). ``forward`` must call ctx.act at its sites.
+
+    ``collect_inputs=True`` additionally observes the matmul-input sites
+    (ctx.act_in) needed by the integer deployment path.
 
     Runs un-jitted so the EMA threading across batches stays simple; batches
     are small calibration samples (paper: 1-16 batches).
@@ -120,7 +165,8 @@ def collect_ranges(forward: Callable, params, batches, policy: QuantizationPolic
     for batch in batches:
         ctx = QuantCtx(policy=policy, mode=Mode.COLLECT,
                        range_states=dict(range_states),
-                       keep_tensors=keep_tensors)
+                       keep_tensors=keep_tensors,
+                       collect_inputs=collect_inputs)
         forward(params, batch, ctx)
         range_states = ctx.range_states
         calib_tensors.update(ctx.calib_tensors)   # keep the last batch's tensor

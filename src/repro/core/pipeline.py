@@ -41,15 +41,19 @@ def ptq(forward: Callable, params, calib_batches: Sequence,
         named_weights: Optional[Dict[str, jnp.ndarray]] = None,
         tp_shards: int = 1,
         adaround_sites: Optional[Dict[str, tuple]] = None,
-        adaround_cfg: AdaRoundConfig = AdaRoundConfig()) -> QuantizedModel:
+        adaround_cfg: AdaRoundConfig = AdaRoundConfig(),
+        collect_inputs: bool = False) -> QuantizedModel:
     """Run the full PTQ pipeline.
 
     forward(params, batch, ctx) -> model output, calling ctx.act()/ctx.weight()
     named_weights: site -> weight array for weight-state precomputation.
     adaround_sites: site -> (weight, calib_inputs) for AdaRound refinement.
+    collect_inputs: also calibrate the matmul-input sites (ctx.act_in) so the
+    artifact can feed the integer deployment path (core.deploy).
     """
     range_states, calib_tensors = collect_ranges(
-        forward, params, calib_batches, policy)
+        forward, params, calib_batches, policy,
+        collect_inputs=collect_inputs)
     act_state, peg_specs = build_act_state(
         range_states, calib_tensors, policy, tp_shards=tp_shards)
     weight_state = build_weight_state(named_weights or {}, policy)

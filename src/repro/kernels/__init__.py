@@ -1,10 +1,29 @@
-"""Pallas TPU kernels for the paper's quantization hot-spots:
+"""Pallas TPU kernels for the paper's quantization hot-spots.
 
-  peg_quant      — fused per-embedding-group quantize(-dequantize)
-  int8_matmul    — s8xs8->s32 MXU matmul; PEG variant fuses the per-group
-                   accumulator re-scalings of paper eq. (4)->(5)
-  fused_ln_quant — LayerNorm + quantize in one VPU pass (Fig.-4 hot path)
+Module map (which kernel serves which paper equation):
 
-ops.py exposes jit'd wrappers (interpret mode on CPU, Mosaic on TPU);
+  peg_quant      — fused per-embedding-group quantize(-dequantize): eq. (5).
+                   ``peg_fake_quant`` simulates; ``peg_quantize`` emits the
+                   int8 payload (deployment).
+  int8_matmul    — s8xs8->s32 MXU matmuls. ``int8_matmul`` is the per-tensor
+                   fixed-point product of eq. (3) (asymmetric activations via
+                   the zero-point colsum correction); ``int8_matmul_peg``
+                   fuses the per-group accumulator re-scalings of eq.
+                   (4)->(5) into the K-loop. Both carry the fused deployment
+                   EPILOGUE (bias + activation + optional re-quantize) so
+                   integer FFN chains keep int8 in HBM end-to-end.
+  fused_ln_quant — LayerNorm / RMSNorm + quantize in one VPU pass (the
+                   Fig.-4 rewriting: quantizer directly after the norm).
+                   ``*_fake_quant`` simulates; ``*_quantize`` emits int8 and
+                   feeds ``int8_matmul[_peg]`` directly.
+
+Simulate vs deploy: the ``*_fake_quant`` variants back ``Mode.APPLY`` / QAT
+(f32 in, f32 out — quantization error only); the emitting variants back
+``Mode.DEPLOY`` (repro.core.deploy), where activations travel between
+kernels as int8 and scales are traced operands (no recompile per
+calibration / per scanned layer).
+
+ops.py exposes jit'd wrappers (interpret mode on CPU, Mosaic on TPU) that
+also handle batched (B, T, D) inputs and ragged row counts via padding;
 ref.py holds the pure-jnp oracles used by tests/test_kernels.py."""
 from repro.kernels import ops, ref

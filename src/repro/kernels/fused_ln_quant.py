@@ -1,16 +1,25 @@
-"""Pallas TPU kernel: LayerNorm fused with asymmetric quantization.
+"""Pallas TPU kernel: LayerNorm / RMSNorm fused with quantization.
 
 The paper's Fig.-4 rewriting puts a quantizer directly after each LayerNorm
 (the FFN-input path). On TPU this is a single VPU pass per token row: compute
-mean/variance, normalize+affine, quantize — the normalized f32 intermediate
-never leaves VMEM.
+the row statistics, normalize+affine, quantize — the normalized f32
+intermediate never leaves VMEM.
 
-Two variants:
-  * ln_fake_quant — LN + quant + dequant (simulation / QAT forward)
-  * ln_quantize   — LN + int8 emit (deployment; feeds int8_matmul)
+Variants (x2 norms, x2 emit modes):
+  * ln_fake_quant / ln_quantize    — LayerNorm (mean/var, gamma/beta)
+  * rms_fake_quant / rms_quantize  — RMSNorm (no mean subtraction; the
+    affine is (1 + gamma) matching repro.models.common.rms_norm)
+
+``*_fake_quant`` returns quant->dequant f32 (simulation / QAT forward);
+``*_quantize`` emits the int8 payload (deployment; feeds int8_matmul[_peg]).
+
+Scales / zero-points are traced (G,) vectors: G == 1 is the per-tensor case,
+G > 1 quantizes per contiguous embedding group (the paper's PEG scheme with
+the range-based permutation already folded into gamma/beta and the adjacent
+weights, so groups are contiguous lane-aligned spans).
 
 Grid: (T / block_t,). Block: (block_t, d) — a full embedding row per token so
-the mean/variance reduction stays in-block (d up to ~8k fits VMEM easily:
+the reduction stays in-block (d up to ~8k fits VMEM easily:
 256 x 8192 x 4B = 8 MiB).
 """
 from __future__ import annotations
@@ -22,33 +31,40 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _ln_fakequant_kernel(g_ref, b_ref, s_ref, z_ref, x_ref, o_ref, *,
-                         qmin, qmax, eps):
+def _norm_quant_kernel(g_ref, b_ref, s_ref, z_ref, x_ref, o_ref, *,
+                       kind, emit, qmin, qmax, eps):
     x = x_ref[...].astype(jnp.float32)
-    mu = jnp.mean(x, axis=-1, keepdims=True)
-    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
-    y = (x - mu) * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]
-    s = s_ref[0]
-    z = z_ref[0]
+    if kind == "ln":
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]
+    else:                                   # rms: x * rsqrt(E[x^2]) * (1 + g)
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(var + eps) * (1.0 + g_ref[...])
+    d = x.shape[-1]
+    g = s_ref.shape[0]
+    s = jnp.repeat(s_ref[...], d // g)[None, :]
+    z = jnp.repeat(z_ref[...], d // g)[None, :]
     q = jnp.clip(jnp.round(y / s) + z, qmin, qmax)
-    o_ref[...] = ((q - z) * s).astype(o_ref.dtype)
+    if emit:
+        o_ref[...] = q.astype(o_ref.dtype)
+    else:
+        o_ref[...] = ((q - z) * s).astype(o_ref.dtype)
 
 
-def _ln_quantize_kernel(g_ref, b_ref, s_ref, z_ref, x_ref, o_ref, *,
-                        qmin, qmax, eps):
-    x = x_ref[...].astype(jnp.float32)
-    mu = jnp.mean(x, axis=-1, keepdims=True)
-    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
-    y = (x - mu) * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]
-    s = s_ref[0]
-    z = z_ref[0]
-    o_ref[...] = jnp.clip(jnp.round(y / s) + z, qmin, qmax).astype(o_ref.dtype)
-
-
-def _call(kernel, x, gamma, beta, scale, zp, out_dtype, block_t, interpret):
+def _call(x, gamma, beta, scale, zp, *, kind, emit, qmin, qmax, eps,
+          out_dtype, block_t, interpret):
     t, d = x.shape
     bt = min(block_t, t)
     assert t % bt == 0
+    scale = jnp.atleast_1d(jnp.asarray(scale, jnp.float32))
+    zp = jnp.atleast_1d(jnp.asarray(zp, jnp.float32))
+    g = scale.shape[0]
+    assert d % g == 0, "group count must divide the embedding dim"
+    if beta is None:
+        beta = jnp.zeros((d,), jnp.float32)
+    kernel = functools.partial(_norm_quant_kernel, kind=kind, emit=emit,
+                               qmin=qmin, qmax=qmax, eps=eps)
     return pl.pallas_call(
         kernel,
         out_shape=jax.ShapeDtypeStruct((t, d), out_dtype),
@@ -56,32 +72,46 @@ def _call(kernel, x, gamma, beta, scale, zp, out_dtype, block_t, interpret):
         in_specs=[
             pl.BlockSpec((d,), lambda i: (0,)),
             pl.BlockSpec((d,), lambda i: (0,)),
-            pl.BlockSpec((1,), lambda i: (0,)),
-            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((g,), lambda i: (0,)),
+            pl.BlockSpec((g,), lambda i: (0,)),
             pl.BlockSpec((bt, d), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
         interpret=interpret,
-    )(gamma.astype(jnp.float32), beta.astype(jnp.float32),
-      jnp.atleast_1d(jnp.asarray(scale, jnp.float32)),
-      jnp.atleast_1d(jnp.asarray(zp, jnp.float32)), x)
+    )(gamma.astype(jnp.float32), beta.astype(jnp.float32), scale, zp, x)
 
 
 def ln_fake_quant(x, gamma, beta, scale, zp, *, qmin: int, qmax: int,
                   eps: float = 1e-6, block_t: int = 256,
                   interpret: bool = False):
     """x: (T, d) -> LN + fake-quant, same dtype."""
-    kernel = functools.partial(_ln_fakequant_kernel, qmin=qmin, qmax=qmax,
-                               eps=eps)
-    return _call(kernel, x, gamma, beta, scale, zp, x.dtype, block_t,
-                 interpret)
+    return _call(x, gamma, beta, scale, zp, kind="ln", emit=False, qmin=qmin,
+                 qmax=qmax, eps=eps, out_dtype=x.dtype, block_t=block_t,
+                 interpret=interpret)
 
 
 def ln_quantize(x, gamma, beta, scale, zp, *, qmin: int, qmax: int,
                 eps: float = 1e-6, out_dtype=jnp.int8, block_t: int = 256,
                 interpret: bool = False):
     """x: (T, d) -> LN + int8 emit."""
-    kernel = functools.partial(_ln_quantize_kernel, qmin=qmin, qmax=qmax,
-                               eps=eps)
-    return _call(kernel, x, gamma, beta, scale, zp, out_dtype, block_t,
-                 interpret)
+    return _call(x, gamma, beta, scale, zp, kind="ln", emit=True, qmin=qmin,
+                 qmax=qmax, eps=eps, out_dtype=out_dtype, block_t=block_t,
+                 interpret=interpret)
+
+
+def rms_fake_quant(x, gamma, scale, zp, *, qmin: int, qmax: int,
+                   eps: float = 1e-6, block_t: int = 256,
+                   interpret: bool = False):
+    """x: (T, d) -> RMSNorm + fake-quant, same dtype."""
+    return _call(x, gamma, None, scale, zp, kind="rms", emit=False, qmin=qmin,
+                 qmax=qmax, eps=eps, out_dtype=x.dtype, block_t=block_t,
+                 interpret=interpret)
+
+
+def rms_quantize(x, gamma, scale, zp, *, qmin: int, qmax: int,
+                 eps: float = 1e-6, out_dtype=jnp.int8, block_t: int = 256,
+                 interpret: bool = False):
+    """x: (T, d) -> RMSNorm + int8 emit."""
+    return _call(x, gamma, None, scale, zp, kind="rms", emit=True, qmin=qmin,
+                 qmax=qmax, eps=eps, out_dtype=out_dtype, block_t=block_t,
+                 interpret=interpret)

@@ -1,20 +1,34 @@
-"""Pallas TPU kernel: s8 x s8 -> s32 matmul with fused PEG re-scaling.
+"""Pallas TPU kernels: s8 x s8 -> s32 matmul with fused PEG re-scaling and a
+fused deployment epilogue.
 
-Realizes the paper's eq. (4)->(5) on the MXU: with per-embedding-group
-activation scales, the accumulator must be re-scaled once per GROUP rather
-than once per element. We align the K-grid of the matmul to the PEG group
-boundaries, so each k-step contributes  s_g * (A_g @ W_g)  into an f32 VMEM
-scratch accumulator — exactly K re-scalings per output tile, fused with the
-matmul (no extra HBM traffic).
+Realizes the paper's eq. (3)->(5) on the MXU. Two kernels:
 
-Grid: (M/bm, N/bn, K/bk) with bk == group_size (lane-aligned multiple of 128).
-Weights are symmetric per-tensor int8 (paper setup), activations asymmetric
-per-group int8: A_hat = s_g (A_q - z_g), W_hat = s_w W_q, so
+  * per-tensor (eq. 3): int32 accumulation over the K grid, one re-scale at
+    the end. Asymmetric activations are handled with the standard fixed-point
+    zero-point correction  out = s_a s_w (A_q @ W_q - z_a * colsum(W_q)).
+  * PEG (eq. 4->5): with per-embedding-group activation scales the
+    accumulator is re-scaled once per GROUP. We align the K-grid to the PEG
+    group boundaries, so each k-step contributes  s_g * (A_g @ W_g - z_g *
+    colsum(W_g))  into an f32 VMEM scratch accumulator — exactly K
+    re-scalings per output tile, fused with the matmul (no extra HBM
+    traffic).
 
-  out = s_w * sum_g s_g [ (A_q,g @ W_q,g) - z_g * colsum(W_q,g) ]
+Both kernels share a fused EPILOGUE executed on the last k-step while the
+accumulator tile is still in VMEM:
 
-The zero-point correction term colsum(W_q,g) is precomputed by the wrapper
-(ops.py) and added per group — the standard fixed-point trick.
+    f  = dequantized accumulator                       (f32, in VMEM)
+    f += bias                   (optional)
+    f  = activation(f)          (optional: gelu / silu / relu)
+    f *= mul                    (optional f32 operand — the GLU gating path)
+    o  = requantize(f)          (optional: emit int8 for the next matmul)
+
+With the requantizing epilogue the FFN chain  LN -> quant -> W_in matmul ->
+GELU -> requant -> W_out matmul  keeps int8 in HBM end-to-end: the f32
+intermediate never leaves VMEM.
+
+All scales / zero-points are TRACED operands (not compile-time constants), so
+freshly calibrated scales never trigger a recompile and per-layer scales can
+ride through a lax.scan over stacked layer weights.
 """
 from __future__ import annotations
 
@@ -25,74 +39,55 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Epilogue activations: the model-side table plus identity, shared so the
+# DEPLOY epilogue can never diverge from the simulate-path activations.
+from repro.models.common import ACTIVATIONS as _MODEL_ACTS
+
+EPILOGUE_ACTS = {"none": lambda x: x, **_MODEL_ACTS}
+
 
 def _vmem_scratch(shape, dtype):
     """VMEM scratch accumulator (TPU target; interpret mode emulates it)."""
     return pltpu.VMEM(shape, dtype)
 
 
-def _int8_matmul_kernel(sa_ref, za_ref, wcs_ref, a_ref, w_ref, o_ref,
-                        acc_ref, *, n_k: int, s_w: float):
-    k_idx = pl.program_id(2)
-
-    @pl.when(k_idx == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    a = a_ref[...]
-    w = w_ref[...]
-    part = jax.lax.dot_general(a, w, (((1,), (0,)), ((), ())),
-                               preferred_element_type=jnp.int32)
-    s_g = sa_ref[0]
-    z_g = za_ref[0]
-    # zero-point correction: z_g * colsum(W_q,g), precomputed per (group, n)
-    corr = wcs_ref[0, :].astype(jnp.float32)
-    acc_ref[...] += s_g * (part.astype(jnp.float32) - z_g * corr[None, :])
-
-    @pl.when(k_idx == n_k - 1)
-    def _done():
-        o_ref[...] = (acc_ref[...] * s_w).astype(o_ref.dtype)
+def _epilogue(f, refs, *, activation: str, has_bias: bool, has_mul: bool,
+              requant: bool, qmin: int, qmax: int, o_ref):
+    """Shared fused epilogue. ``f``: f32 (bm, bn) dequantized accumulator.
+    ``refs``: dict of the optional operand refs present for this call."""
+    if has_bias:
+        f = f + refs["bias"][0, :][None, :]
+    f = EPILOGUE_ACTS[activation](f)
+    if has_mul:
+        f = f * refs["mul"][...]
+    if requant:
+        s_out = refs["outq"][0]
+        z_out = refs["outq"][1]
+        q = jnp.clip(jnp.round(f / s_out) + z_out, qmin, qmax)
+        o_ref[...] = q.astype(o_ref.dtype)
+    else:
+        o_ref[...] = f.astype(o_ref.dtype)
 
 
-def int8_matmul_peg(a_q: jnp.ndarray, w_q: jnp.ndarray,
-                    act_scales: jnp.ndarray, act_zps: jnp.ndarray,
-                    w_scale: float, w_colsum_g: jnp.ndarray, *,
-                    out_dtype=jnp.float32, block_m: int = 256,
-                    block_n: int = 256, interpret: bool = False
-                    ) -> jnp.ndarray:
-    """a_q: (M, K) int8 group-sorted; w_q: (K, N) int8; act_scales/zps: (G,);
-    w_colsum_g: (G, N) int32 = per-group column sums of w_q.
-    K % G == 0 and group_size = K // G (the k-block)."""
-    m, k = a_q.shape
-    k2, n = w_q.shape
-    assert k == k2
-    g = act_scales.shape[0]
-    assert k % g == 0
-    bk = k // g
-    bm, bn = min(block_m, m), min(block_n, n)
-    assert m % bm == 0 and n % bn == 0
+# ---------------------------------------------------------------------------
+# Per-tensor path (paper eq. 3) + fused epilogue
+# ---------------------------------------------------------------------------
 
-    kernel = functools.partial(_int8_matmul_kernel, n_k=g, s_w=float(w_scale))
-    return pl.pallas_call(
-        kernel,
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        grid=(m // bm, n // bn, g),
-        in_specs=[
-            pl.BlockSpec((1,), lambda i, j, kk: (kk,)),        # s_g
-            pl.BlockSpec((1,), lambda i, j, kk: (kk,)),        # z_g
-            pl.BlockSpec((1, bn), lambda i, j, kk: (kk, j)),   # colsum slice
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),  # A tile
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),  # W tile
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        scratch_shapes=[_vmem_scratch((bm, bn), jnp.float32)],
-        interpret=interpret,
-    )(act_scales.astype(jnp.float32), act_zps.astype(jnp.float32),
-      w_colsum_g, a_q, w_q)
+def _int8_matmul_kernel(s_ref, za_ref, *rest, n_k: int, activation: str,
+                        has_zp: bool, has_bias: bool, has_mul: bool,
+                        requant: bool, qmin: int, qmax: int):
+    refs = {}
+    rest = list(rest)
+    if has_zp:
+        refs["colsum"] = rest.pop(0)
+    if has_bias:
+        refs["bias"] = rest.pop(0)
+    if has_mul:
+        refs["mul"] = rest.pop(0)
+    if requant:
+        refs["outq"] = rest.pop(0)
+    a_ref, w_ref, o_ref, acc_ref = rest
 
-
-def _int8_matmul_pertensor_kernel(a_ref, w_ref, o_ref, acc_ref, *,
-                                  n_k: int, s_out: float):
     k_idx = pl.program_id(2)
 
     @pl.when(k_idx == 0)
@@ -105,32 +100,189 @@ def _int8_matmul_pertensor_kernel(a_ref, w_ref, o_ref, acc_ref, *,
 
     @pl.when(k_idx == n_k - 1)
     def _done():
-        o_ref[...] = (acc_ref[...].astype(jnp.float32) * s_out
-                      ).astype(o_ref.dtype)
+        acc = acc_ref[...].astype(jnp.float32)
+        if has_zp:
+            corr = refs["colsum"][0, :].astype(jnp.float32)
+            acc = acc - za_ref[0] * corr[None, :]
+        f = acc * s_ref[0]
+        _epilogue(f, refs, activation=activation, has_bias=has_bias,
+                  has_mul=has_mul, requant=requant, qmin=qmin, qmax=qmax,
+                  o_ref=o_ref)
 
 
-def int8_matmul(a_q: jnp.ndarray, w_q: jnp.ndarray, s_a: float, s_w: float,
-                *, out_dtype=jnp.float32, block_m: int = 256,
+def int8_matmul(a_q: jnp.ndarray, w_q: jnp.ndarray, s_a, s_w, *,
+                z_a=None, w_colsum: jnp.ndarray = None,
+                bias: jnp.ndarray = None, mul: jnp.ndarray = None,
+                activation: str = "none",
+                out_scale=None, out_zp=None,
+                qmin: int = -128, qmax: int = 127,
+                out_dtype=jnp.float32, block_m: int = 256,
                 block_n: int = 256, block_k: int = 512,
                 interpret: bool = False) -> jnp.ndarray:
-    """Per-tensor symmetric path (paper eq. 3): one rescale at the end.
-    a_q: (M, K) int8, w_q: (K, N) int8."""
+    """Per-tensor path (paper eq. 3) with fused epilogue.
+
+    a_q: (M, K) int8, w_q: (K, N) int8; s_a/s_w traced scalars.
+    z_a + w_colsum (N,): asymmetric-activation zero-point correction.
+    bias (N,), mul (M, N) f32, activation, out_scale/out_zp: the epilogue.
+    When out_scale is given the output is int8 on the [qmin, qmax] grid.
+    """
     m, k = a_q.shape
     _, n = w_q.shape
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0
 
-    kernel = functools.partial(_int8_matmul_pertensor_kernel,
-                               n_k=k // bk, s_out=float(s_a) * float(s_w))
+    has_zp = w_colsum is not None
+    has_bias = bias is not None
+    has_mul = mul is not None
+    requant = out_scale is not None
+    if requant:
+        out_dtype = jnp.int8
+
+    s_prod = (jnp.asarray(s_a, jnp.float32) *
+              jnp.asarray(s_w, jnp.float32)).reshape(1)
+    za = jnp.asarray(0.0 if z_a is None else z_a, jnp.float32).reshape(1)
+
+    operands = [s_prod, za]
+    in_specs = [pl.BlockSpec((1,), lambda i, j, kk: (0,)),
+                pl.BlockSpec((1,), lambda i, j, kk: (0,))]
+    if has_zp:
+        operands.append(w_colsum.reshape(1, n))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+    if has_bias:
+        operands.append(bias.astype(jnp.float32).reshape(1, n))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+    if has_mul:
+        operands.append(mul.astype(jnp.float32))
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+    if requant:
+        outq = jnp.stack([jnp.asarray(out_scale, jnp.float32).reshape(()),
+                          jnp.asarray(0.0 if out_zp is None else out_zp,
+                                      jnp.float32).reshape(())])
+        operands.append(outq)
+        in_specs.append(pl.BlockSpec((2,), lambda i, j, kk: (0,)))
+    operands += [a_q, w_q]
+    in_specs += [pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                 pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))]
+
+    kernel = functools.partial(
+        _int8_matmul_kernel, n_k=k // bk, activation=activation,
+        has_zp=has_zp, has_bias=has_bias, has_mul=has_mul, requant=requant,
+        qmin=qmin, qmax=qmax)
     return pl.pallas_call(
         kernel,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         grid=(m // bm, n // bn, k // bk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         scratch_shapes=[_vmem_scratch((bm, bn), jnp.int32)],
         interpret=interpret,
-    )(a_q, w_q)
+    )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# PEG path (paper eq. 4->5) + fused epilogue
+# ---------------------------------------------------------------------------
+
+def _int8_matmul_peg_kernel(sw_ref, sa_ref, za_ref, wcs_ref, *rest,
+                            n_k: int, activation: str, has_bias: bool,
+                            has_mul: bool, requant: bool, qmin: int,
+                            qmax: int):
+    refs = {}
+    rest = list(rest)
+    if has_bias:
+        refs["bias"] = rest.pop(0)
+    if has_mul:
+        refs["mul"] = rest.pop(0)
+    if requant:
+        refs["outq"] = rest.pop(0)
+    a_ref, w_ref, o_ref, acc_ref = rest
+
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    part = jax.lax.dot_general(a_ref[...], w_ref[...],
+                               (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+    s_g = sa_ref[0]
+    z_g = za_ref[0]
+    # zero-point correction: z_g * colsum(W_q,g), precomputed per (group, n)
+    corr = wcs_ref[0, :].astype(jnp.float32)
+    acc_ref[...] += s_g * (part.astype(jnp.float32) - z_g * corr[None, :])
+
+    @pl.when(k_idx == n_k - 1)
+    def _done():
+        f = acc_ref[...] * sw_ref[0]
+        _epilogue(f, refs, activation=activation, has_bias=has_bias,
+                  has_mul=has_mul, requant=requant, qmin=qmin, qmax=qmax,
+                  o_ref=o_ref)
+
+
+def int8_matmul_peg(a_q: jnp.ndarray, w_q: jnp.ndarray,
+                    act_scales: jnp.ndarray, act_zps: jnp.ndarray,
+                    w_scale, w_colsum_g: jnp.ndarray, *,
+                    bias: jnp.ndarray = None, mul: jnp.ndarray = None,
+                    activation: str = "none",
+                    out_scale=None, out_zp=None,
+                    qmin: int = -128, qmax: int = 127,
+                    out_dtype=jnp.float32, block_m: int = 256,
+                    block_n: int = 256, interpret: bool = False
+                    ) -> jnp.ndarray:
+    """a_q: (M, K) int8 group-sorted; w_q: (K, N) int8; act_scales/zps: (G,);
+    w_colsum_g: (G, N) int32 = per-group column sums of w_q; w_scale traced
+    scalar. K % G == 0 and group_size = K // G (the k-block). Epilogue args
+    as in :func:`int8_matmul`."""
+    m, k = a_q.shape
+    k2, n = w_q.shape
+    assert k == k2
+    g = act_scales.shape[0]
+    assert k % g == 0
+    bk = k // g
+    bm, bn = min(block_m, m), min(block_n, n)
+    assert m % bm == 0 and n % bn == 0
+
+    has_bias = bias is not None
+    has_mul = mul is not None
+    requant = out_scale is not None
+    if requant:
+        out_dtype = jnp.int8
+
+    operands = [jnp.asarray(w_scale, jnp.float32).reshape(1),
+                act_scales.astype(jnp.float32),
+                act_zps.astype(jnp.float32),
+                w_colsum_g]
+    in_specs = [pl.BlockSpec((1,), lambda i, j, kk: (0,)),       # s_w
+                pl.BlockSpec((1,), lambda i, j, kk: (kk,)),      # s_g
+                pl.BlockSpec((1,), lambda i, j, kk: (kk,)),      # z_g
+                pl.BlockSpec((1, bn), lambda i, j, kk: (kk, j))]  # colsum
+    if has_bias:
+        operands.append(bias.astype(jnp.float32).reshape(1, n))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+    if has_mul:
+        operands.append(mul.astype(jnp.float32))
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+    if requant:
+        outq = jnp.stack([jnp.asarray(out_scale, jnp.float32).reshape(()),
+                          jnp.asarray(0.0 if out_zp is None else out_zp,
+                                      jnp.float32).reshape(())])
+        operands.append(outq)
+        in_specs.append(pl.BlockSpec((2,), lambda i, j, kk: (0,)))
+    operands += [a_q, w_q]
+    in_specs += [pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                 pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))]
+
+    kernel = functools.partial(
+        _int8_matmul_peg_kernel, n_k=g, activation=activation,
+        has_bias=has_bias, has_mul=has_mul, requant=requant,
+        qmin=qmin, qmax=qmax)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        grid=(m // bm, n // bn, g),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        scratch_shapes=[_vmem_scratch((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(*operands)

@@ -3,6 +3,19 @@
 On CPU (this container) kernels run in interpret mode — the kernel body
 executes in Python for correctness validation; on TPU the same call lowers to
 Mosaic. ``interpret=None`` auto-detects.
+
+Two conventions enforced here (and relied on by repro.core.deploy):
+
+* **Traced scales.** Every scale / zero-point is a traced operand, never a
+  ``static_argnames`` entry — serving with freshly calibrated scales (or
+  per-layer scales sliced out of a lax.scan) must not recompile per call.
+  Only block sizes, activation names and flags are static.
+
+* **Batched + ragged shapes.** Wrappers accept ``(..., K)`` inputs: leading
+  dims are flattened into the M/token axis and, when the flattened row count
+  does not divide the block size, rows are zero-padded and the result is
+  sliced back — so decode-time ``(B, 1, D)`` and ragged prefill shapes all
+  hit the same kernels.
 """
 from __future__ import annotations
 
@@ -24,55 +37,120 @@ def _interp(flag: Optional[bool]) -> bool:
     return flag
 
 
+def _flatten_rows(x, block: int):
+    """(..., D) -> ((M_padded, D), lead_shape, M). Pads rows to the block."""
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    m = x2.shape[0]
+    # m <= block runs as one partial block (bm == m); larger ragged row
+    # counts are zero-padded to a block multiple and sliced back after.
+    pad = (-m) % block if m > block else 0
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    return x2, lead, m
+
+
+def _unflatten_rows(y, lead, m):
+    return y[:m].reshape(*lead, y.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Per-embedding-group quantize (paper eq. 5)
+# ---------------------------------------------------------------------------
+
 @functools.partial(jax.jit, static_argnames=("qmin", "qmax", "block_t",
                                              "interpret"))
 def peg_fake_quant(x, scales, zps, *, qmin: int = 0, qmax: int = 255,
                    block_t: int = 256, interpret: Optional[bool] = None):
-    return _peg.peg_fake_quant(x, scales, zps, qmin=qmin, qmax=qmax,
-                               block_t=block_t, interpret=_interp(interpret))
+    x2, lead, m = _flatten_rows(x, block_t)
+    out = _peg.peg_fake_quant(x2, scales, zps, qmin=qmin, qmax=qmax,
+                              block_t=block_t, interpret=_interp(interpret))
+    return _unflatten_rows(out, lead, m)
 
 
 @functools.partial(jax.jit, static_argnames=("qmin", "qmax", "block_t",
                                              "interpret"))
 def peg_quantize(x, scales, zps, *, qmin: int = 0, qmax: int = 255,
                  block_t: int = 256, interpret: Optional[bool] = None):
-    return _peg.peg_quantize(x, scales, zps, qmin=qmin, qmax=qmax,
-                             block_t=block_t, interpret=_interp(interpret))
+    x2, lead, m = _flatten_rows(x, block_t)
+    out = _peg.peg_quantize(x2, scales, zps, qmin=qmin, qmax=qmax,
+                            block_t=block_t, interpret=_interp(interpret))
+    return _unflatten_rows(out, lead, m)
 
 
-@functools.partial(jax.jit, static_argnames=("s_a", "s_w", "block_m",
-                                             "block_n", "block_k",
+# ---------------------------------------------------------------------------
+# int8 matmuls (paper eq. 3-5) with fused epilogue
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("activation", "qmin", "qmax",
+                                             "block_m", "block_n", "block_k",
                                              "interpret"))
-def int8_matmul(a_q, w_q, *, s_a: float, s_w: float, block_m: int = 256,
-                block_n: int = 256, block_k: int = 512,
+def int8_matmul(a_q, w_q, *, s_a, s_w, z_a=None, w_colsum=None, bias=None,
+                mul=None, activation: str = "none", out_scale=None,
+                out_zp=None, qmin: int = -128, qmax: int = 127,
+                block_m: int = 256, block_n: int = 256, block_k: int = 512,
                 interpret: Optional[bool] = None):
-    return _imm.int8_matmul(a_q, w_q, s_a, s_w, block_m=block_m,
-                            block_n=block_n, block_k=block_k,
-                            interpret=_interp(interpret))
+    """Per-tensor int8 matmul (+ fused epilogue) over (..., K) activations.
+
+    s_a/s_w (and the optional z_a/out_scale/out_zp) are traced scalars.
+    z_a requires w_colsum (N,) = colsum(w_q) for the zero-point correction.
+    """
+    if z_a is not None and w_colsum is None:
+        w_colsum = jnp.sum(w_q.astype(jnp.int32), axis=0)
+    a2, lead, m = _flatten_rows(a_q, block_m)
+    mul2 = None
+    if mul is not None:
+        mul2, _, _ = _flatten_rows(mul, block_m)
+    out = _imm.int8_matmul(a2, w_q, s_a, s_w, z_a=z_a, w_colsum=w_colsum,
+                           bias=bias, mul=mul2, activation=activation,
+                           out_scale=out_scale, out_zp=out_zp, qmin=qmin,
+                           qmax=qmax, block_m=block_m, block_n=block_n,
+                           block_k=block_k, interpret=_interp(interpret))
+    return _unflatten_rows(out, lead, m)
 
 
-@functools.partial(jax.jit, static_argnames=("w_scale", "block_m", "block_n",
+@functools.partial(jax.jit, static_argnames=("activation", "qmin", "qmax",
+                                             "block_m", "block_n",
                                              "interpret"))
-def int8_matmul_peg(a_q, w_q, act_scales, act_zps, *, w_scale: float,
-                    block_m: int = 256, block_n: int = 256,
-                    interpret: Optional[bool] = None):
+def int8_matmul_peg(a_q, w_q, act_scales, act_zps, *, w_scale,
+                    w_colsum=None, bias=None, mul=None,
+                    activation: str = "none", out_scale=None, out_zp=None,
+                    qmin: int = -128, qmax: int = 127, block_m: int = 256,
+                    block_n: int = 256, interpret: Optional[bool] = None):
     """PEG fixed-point matmul: K re-scalings fused into the MXU k-loop.
-    Computes the zero-point correction internally."""
+    Computes the zero-point correction internally unless ``w_colsum`` (G, N)
+    is supplied (deployment pre-packs it next to the int8 weights)."""
     g = act_scales.shape[0]
-    w_colsum = _ref.w_colsum_groups(w_q, g)
-    return _imm.int8_matmul_peg(a_q, w_q, act_scales, act_zps, w_scale,
-                                w_colsum, block_m=block_m, block_n=block_n,
-                                interpret=_interp(interpret))
+    if w_colsum is None:
+        w_colsum = _ref.w_colsum_groups(w_q, g)
+    a2, lead, m = _flatten_rows(a_q, block_m)
+    mul2 = None
+    if mul is not None:
+        mul2, _, _ = _flatten_rows(mul, block_m)
+    out = _imm.int8_matmul_peg(a2, w_q, act_scales, act_zps, w_scale,
+                               w_colsum, bias=bias, mul=mul2,
+                               activation=activation, out_scale=out_scale,
+                               out_zp=out_zp, qmin=qmin, qmax=qmax,
+                               block_m=block_m, block_n=block_n,
+                               interpret=_interp(interpret))
+    return _unflatten_rows(out, lead, m)
 
+
+# ---------------------------------------------------------------------------
+# Fused norm + quantize (paper Fig. 4 hot path)
+# ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("qmin", "qmax", "eps", "block_t",
                                              "interpret"))
 def ln_fake_quant(x, gamma, beta, scale, zp, *, qmin: int = 0,
                   qmax: int = 255, eps: float = 1e-6, block_t: int = 256,
                   interpret: Optional[bool] = None):
-    return _lnq.ln_fake_quant(x, gamma, beta, scale, zp, qmin=qmin, qmax=qmax,
-                              eps=eps, block_t=block_t,
-                              interpret=_interp(interpret))
+    x2, lead, m = _flatten_rows(x, block_t)
+    out = _lnq.ln_fake_quant(x2, gamma, beta, scale, zp, qmin=qmin,
+                             qmax=qmax, eps=eps, block_t=block_t,
+                             interpret=_interp(interpret))
+    return _unflatten_rows(out, lead, m)
 
 
 @functools.partial(jax.jit, static_argnames=("qmin", "qmax", "eps", "block_t",
@@ -80,6 +158,32 @@ def ln_fake_quant(x, gamma, beta, scale, zp, *, qmin: int = 0,
 def ln_quantize(x, gamma, beta, scale, zp, *, qmin: int = 0, qmax: int = 255,
                 eps: float = 1e-6, block_t: int = 256,
                 interpret: Optional[bool] = None):
-    return _lnq.ln_quantize(x, gamma, beta, scale, zp, qmin=qmin, qmax=qmax,
+    x2, lead, m = _flatten_rows(x, block_t)
+    out = _lnq.ln_quantize(x2, gamma, beta, scale, zp, qmin=qmin, qmax=qmax,
+                           eps=eps, block_t=block_t,
+                           interpret=_interp(interpret))
+    return _unflatten_rows(out, lead, m)
+
+
+@functools.partial(jax.jit, static_argnames=("qmin", "qmax", "eps", "block_t",
+                                             "interpret"))
+def rms_fake_quant(x, gamma, scale, zp, *, qmin: int = 0, qmax: int = 255,
+                   eps: float = 1e-6, block_t: int = 256,
+                   interpret: Optional[bool] = None):
+    x2, lead, m = _flatten_rows(x, block_t)
+    out = _lnq.rms_fake_quant(x2, gamma, scale, zp, qmin=qmin, qmax=qmax,
+                              eps=eps, block_t=block_t,
+                              interpret=_interp(interpret))
+    return _unflatten_rows(out, lead, m)
+
+
+@functools.partial(jax.jit, static_argnames=("qmin", "qmax", "eps", "block_t",
+                                             "interpret"))
+def rms_quantize(x, gamma, scale, zp, *, qmin: int = 0, qmax: int = 255,
+                 eps: float = 1e-6, block_t: int = 256,
+                 interpret: Optional[bool] = None):
+    x2, lead, m = _flatten_rows(x, block_t)
+    out = _lnq.rms_quantize(x2, gamma, scale, zp, qmin=qmin, qmax=qmax,
                             eps=eps, block_t=block_t,
                             interpret=_interp(interpret))
+    return _unflatten_rows(out, lead, m)

@@ -4,24 +4,44 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.int8_matmul import EPILOGUE_ACTS as _ACTS
+
+
+def _expand_groups(v, d):
+    """(G,) per-group vector -> (1, d) per-column row (uniform groups)."""
+    v = jnp.atleast_1d(jnp.asarray(v, jnp.float32))
+    return jnp.repeat(v, d // v.shape[0])[None, :]
+
+
+def epilogue_ref(f, *, bias=None, activation="none", mul=None,
+                 out_scale=None, out_zp=None, qmin=-128, qmax=127):
+    """Reference for the fused matmul epilogue: bias -> act -> mul -> requant."""
+    f = f.astype(jnp.float32)
+    if bias is not None:
+        f = f + bias.astype(jnp.float32)[None, :]
+    f = _ACTS[activation](f)
+    if mul is not None:
+        f = f * mul.astype(jnp.float32)
+    if out_scale is not None:
+        zp = 0.0 if out_zp is None else out_zp
+        return jnp.clip(jnp.round(f / out_scale) + zp, qmin,
+                        qmax).astype(jnp.int8)
+    return f
+
 
 def peg_fake_quant_ref(x, scales, zps, *, qmin, qmax):
     """x: (T, d) group-sorted; scales/zps: (K,), uniform groups."""
-    t, d = x.shape
-    k = scales.shape[0]
-    gs = d // k
-    s = jnp.repeat(scales.astype(jnp.float32), gs)[None, :]
-    z = jnp.repeat(zps.astype(jnp.float32), gs)[None, :]
+    d = x.shape[-1]
+    s = _expand_groups(scales, d)
+    z = _expand_groups(zps, d)
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / s) + z, qmin, qmax)
     return ((q - z) * s).astype(x.dtype)
 
 
 def peg_quantize_ref(x, scales, zps, *, qmin, qmax, out_dtype=jnp.int8):
-    t, d = x.shape
-    k = scales.shape[0]
-    gs = d // k
-    s = jnp.repeat(scales.astype(jnp.float32), gs)[None, :]
-    z = jnp.repeat(zps.astype(jnp.float32), gs)[None, :]
+    d = x.shape[-1]
+    s = _expand_groups(scales, d)
+    z = _expand_groups(zps, d)
     return jnp.clip(jnp.round(x.astype(jnp.float32) / s) + z, qmin,
                     qmax).astype(out_dtype)
 
@@ -32,17 +52,40 @@ def int8_matmul_ref(a_q, w_q, s_a, s_w, out_dtype=jnp.float32):
     return (acc.astype(jnp.float32) * (s_a * s_w)).astype(out_dtype)
 
 
+def int8_matmul_fused_ref(a_q, w_q, s_a, s_w, *, z_a=None, bias=None,
+                          activation="none", mul=None, out_scale=None,
+                          out_zp=None, qmin=-128, qmax=127):
+    """Per-tensor asymmetric dequant-matmul + epilogue oracle."""
+    a = a_q.astype(jnp.float32)
+    if z_a is not None:
+        a = a - jnp.asarray(z_a, jnp.float32)
+    f = (a * jnp.asarray(s_a, jnp.float32)) @ \
+        (w_q.astype(jnp.float32) * jnp.asarray(s_w, jnp.float32))
+    return epilogue_ref(f, bias=bias, activation=activation, mul=mul,
+                        out_scale=out_scale, out_zp=out_zp, qmin=qmin,
+                        qmax=qmax)
+
+
 def int8_matmul_peg_ref(a_q, w_q, act_scales, act_zps, w_scale,
                         out_dtype=jnp.float32):
     """Dequantize-then-matmul oracle for the PEG fixed-point path."""
-    m, k = a_q.shape
-    g = act_scales.shape[0]
-    gs = k // g
-    s = jnp.repeat(act_scales.astype(jnp.float32), gs)[None, :]
-    z = jnp.repeat(act_zps.astype(jnp.float32), gs)[None, :]
+    k = a_q.shape[-1]
+    s = _expand_groups(act_scales, k)
+    z = _expand_groups(act_zps, k)
     a_hat = (a_q.astype(jnp.float32) - z) * s
     w_hat = w_q.astype(jnp.float32) * w_scale
     return (a_hat @ w_hat).astype(out_dtype)
+
+
+def int8_matmul_peg_fused_ref(a_q, w_q, act_scales, act_zps, w_scale, *,
+                              bias=None, activation="none", mul=None,
+                              out_scale=None, out_zp=None, qmin=-128,
+                              qmax=127):
+    """PEG dequant-matmul + epilogue oracle."""
+    f = int8_matmul_peg_ref(a_q, w_q, act_scales, act_zps, w_scale)
+    return epilogue_ref(f, bias=bias, activation=activation, mul=mul,
+                        out_scale=out_scale, out_zp=out_zp, qmin=qmin,
+                        qmax=qmax)
 
 
 def w_colsum_groups(w_q, num_groups):
@@ -57,8 +100,10 @@ def ln_fake_quant_ref(x, gamma, beta, scale, zp, *, qmin, qmax, eps=1e-6):
     mu = jnp.mean(xf, -1, keepdims=True)
     var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
     y = (xf - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
-    q = jnp.clip(jnp.round(y / scale) + zp, qmin, qmax)
-    return ((q - zp) * scale).astype(x.dtype)
+    s = _expand_groups(scale, x.shape[-1])
+    z = _expand_groups(zp, x.shape[-1])
+    q = jnp.clip(jnp.round(y / s) + z, qmin, qmax)
+    return ((q - z) * s).astype(x.dtype)
 
 
 def ln_quantize_ref(x, gamma, beta, scale, zp, *, qmin, qmax, eps=1e-6,
@@ -67,4 +112,26 @@ def ln_quantize_ref(x, gamma, beta, scale, zp, *, qmin, qmax, eps=1e-6,
     mu = jnp.mean(xf, -1, keepdims=True)
     var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
     y = (xf - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
-    return jnp.clip(jnp.round(y / scale) + zp, qmin, qmax).astype(out_dtype)
+    s = _expand_groups(scale, x.shape[-1])
+    z = _expand_groups(zp, x.shape[-1])
+    return jnp.clip(jnp.round(y / s) + z, qmin, qmax).astype(out_dtype)
+
+
+def rms_fake_quant_ref(x, gamma, scale, zp, *, qmin, qmax, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), -1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    s = _expand_groups(scale, x.shape[-1])
+    z = _expand_groups(zp, x.shape[-1])
+    q = jnp.clip(jnp.round(y / s) + z, qmin, qmax)
+    return ((q - z) * s).astype(x.dtype)
+
+
+def rms_quantize_ref(x, gamma, scale, zp, *, qmin, qmax, eps=1e-6,
+                     out_dtype=jnp.int8):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), -1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    s = _expand_groups(scale, x.shape[-1])
+    z = _expand_groups(zp, x.shape[-1])
+    return jnp.clip(jnp.round(y / s) + z, qmin, qmax).astype(out_dtype)

@@ -1,9 +1,16 @@
 """Serving launcher: batched requests against a (optionally W8A8-quantized)
 model — prefill + decode with KV cache.
 
+``--quantize`` serves with *simulated* quantization (fake-quant, f32
+matmuls). ``--quantize --deploy-int8`` serves the true fixed-point path:
+weights are pre-packed to int8 in the param pytree and the FFN / attention
+projections run on the Pallas kernels (``ln/rms_quantize ->
+int8_matmul_peg(+fused epilogue) -> int8_matmul``); a parity check against
+the fake-quant reference is printed at startup.
+
 CPU smoke:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
-      --requests 8 --new-tokens 8 [--quantize]
+      --requests 8 --new-tokens 8 [--quantize [--deploy-int8]]
 """
 from __future__ import annotations
 
@@ -35,8 +42,13 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--quantize", action="store_true",
                     help="W8A8 PTQ (PEG on the FFN path) before serving")
+    ap.add_argument("--deploy-int8", action="store_true",
+                    help="serve the integer path: packed int8 weights + "
+                         "Pallas kernels (requires --quantize)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.deploy_int8 and not args.quantize:
+        ap.error("--deploy-int8 requires --quantize")
 
     cfg = get_config(args.arch)
     dist = None
@@ -69,7 +81,8 @@ def main(argv=None):
         def fwd(p, b, ctx):
             logits, _ = tfm.forward(cfg, p, b["tokens"], ctx=ctx)
             return logits
-        qm = ptq(fwd, flat_params, calib, pol)
+        qm = ptq(fwd, flat_params, calib, pol,
+                 collect_inputs=args.deploy_int8)
         # collapse per-layer sites to shared "layer/..." names (median scale)
         shared = {}
         for site, qp in qm.act_state.items():
@@ -78,8 +91,28 @@ def main(argv=None):
             shared.setdefault(base, qp)
         state = dict(shared)
 
-        def ctx_factory():
-            return QuantCtx(policy=pol, mode=Mode.APPLY, act_state=state)
+        if args.deploy_int8:
+            from repro.core import build_deploy
+            fp_params = params
+            params, deploy_acts = build_deploy(cfg, params, pol, state)
+
+            def ctx_factory():
+                return QuantCtx(policy=pol, mode=Mode.DEPLOY,
+                                act_state=state, deploy_acts=deploy_acts)
+
+            # parity: integer path vs the fake-quant reference it replaces
+            toks = jax.random.randint(jax.random.PRNGKey(99),
+                                      (2, args.prompt_len), 0, cfg.vocab_size)
+            ref_ctx = QuantCtx(policy=pol, mode=Mode.APPLY, act_state=state)
+            logits_ref, _ = tfm.forward(cfg, fp_params, toks, ctx=ref_ctx)
+            logits_int, _ = tfm.forward(cfg, params, toks, ctx=ctx_factory())
+            diff = float(jnp.max(jnp.abs(logits_ref - logits_int)))
+            scale = float(jnp.max(jnp.abs(logits_ref)) + 1e-9)
+            print(f"[deploy-int8] max |fake-quant - int8| logits diff "
+                  f"{diff:.5f} (rel {diff / scale:.4%})")
+        else:
+            def ctx_factory():
+                return QuantCtx(policy=pol, mode=Mode.APPLY, act_state=state)
 
     prefill = jax.jit(make_prefill_step(cfg, dist=dist,
                                         ctx_factory=ctx_factory))

@@ -216,7 +216,12 @@ def attention_block(p, x, positions, cfg: AttnConfig, *, ctx=None,
 
     Training/prefill: cache=None or empty cache to fill.
     Decode: T == 1 (or small), cache holds past KV; returns updated cache.
+
+    DEPLOY: ``x`` may arrive as a QTensor (int8 LN output) with packed
+    projection weights — QKV and Wo then run on the int8 matmul kernel.
     """
+    from repro.core import deploy as deploy_lib
+    x_int8 = isinstance(x, deploy_lib.QTensor)
     B, T, D = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
 
@@ -225,9 +230,14 @@ def attention_block(p, x, positions, cfg: AttnConfig, *, ctx=None,
         wmat = resolve_weight(p[name])
         return ctx.weight(f"{prefix}/{name}", wmat) if ctx is not None else wmat
 
-    q = (x @ w("wq")).reshape(B, T, H, hd)
-    k = (x @ w("wk")).reshape(B, T, KV, hd)
-    v = (x @ w("wv")).reshape(B, T, KV, hd)
+    if x_int8:
+        q = deploy_lib.matmul(x, p["wq"]).reshape(B, T, H, hd)
+        k = deploy_lib.matmul(x, p["wk"]).reshape(B, T, KV, hd)
+        v = deploy_lib.matmul(x, p["wv"]).reshape(B, T, KV, hd)
+    else:
+        q = (x @ w("wq")).reshape(B, T, H, hd)
+        k = (x @ w("wk")).reshape(B, T, KV, hd)
+        v = (x @ w("wv")).reshape(B, T, KV, hd)
     if "q_norm" in p:   # qwen3-style per-head QK norm
         from repro.models.common import rms_norm
         q = rms_norm(q, p["q_norm"])
@@ -272,7 +282,15 @@ def attention_block(p, x, positions, cfg: AttnConfig, *, ctx=None,
     out = attend(q, k_att.astype(q.dtype), v_att.astype(q.dtype),
                  jnp.broadcast_to(positions, (B, T)), kpos_att, cfg,
                  ctx=ctx, prefix=prefix, chunked=chunked)
-    out = out.reshape(B, T, H * hd) @ w("wo")
+    out2d = out.reshape(B, T, H * hd)
+    if x_int8:
+        wo_aq = ctx.deploy_act(f"{prefix}/wo_in")
+        out = deploy_lib.matmul(deploy_lib.quantize_act(out2d, wo_aq),
+                                p["wo"])
+    else:
+        if ctx is not None:
+            out2d = ctx.act_in(f"{prefix}/wo_in", out2d)
+        out = out2d @ w("wo")
     if ctx is not None:
         out = ctx.act(f"{prefix}/ctx_out", out)
     return out, new_cache

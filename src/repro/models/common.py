@@ -104,6 +104,14 @@ def resolve_weight(w):
     consuming matmul — HBM reads the int8 payload (2x fewer bytes than bf16,
     the serving win the paper targets)."""
     if isinstance(w, dict) and "q" in w:
+        if "colsum" in w:
+            # deploy-packed payload (repro.core.deploy): rows may be
+            # PEG-permuted — dequantizing it here would silently compute
+            # x @ (permuted W) with unpermuted x.
+            raise TypeError(
+                "deploy-packed weight reached a non-deploy path; packed "
+                "payloads must be consumed via repro.core.deploy (Mode."
+                "DEPLOY ctx) or unpacked before simulate-mode use")
         return (w["q"].astype(jnp.bfloat16) * w["s"].astype(jnp.bfloat16))
     return w
 

@@ -5,6 +5,12 @@ The residual connection *after* the FFN is the paper's headline bottleneck
 ``{prefix}/ffn_in`` (FFN input = LN output feeding the residual),
 ``{prefix}/ffn_out`` (FFN output before the residual add) and
 ``{prefix}/residual_ffn`` (the sum) — the three tensors PEG-PTQ targets.
+
+Deployment (Mode.DEPLOY): when the block's weights are packed int8 payloads
+and the input arrives as a :class:`repro.core.deploy.QTensor` (emitted by the
+fused norm+quantize kernel), the MLP runs entirely on the integer kernels —
+``int8_matmul_peg`` with the fused bias+activation+re-quantize epilogue into
+``int8_matmul`` — so the hidden activation crosses HBM as int8.
 """
 from __future__ import annotations
 
@@ -15,8 +21,36 @@ import jax.numpy as jnp
 from repro.models.common import ACTIVATIONS, dense_init, split_keys
 
 
+def _mlp_int8(p, x, *, activation: str, ctx, prefix: str):
+    """Integer MLP: W_in matmul + bias + act + requant fused, then W_out."""
+    from repro.core import deploy
+    hid = ctx.deploy_act(f"{prefix}/hidden")
+    h_q = deploy.matmul(x, p["w_in"], bias=p.get("b_in"),
+                        activation=activation, out_aq=hid)
+    return deploy.matmul(h_q, p["w_out"], bias=p.get("b_out"))
+
+
+def _glu_mlp_int8(p, x, *, activation: str, ctx, prefix: str):
+    """Integer GLU: the up matmul stays f32; the gate matmul fuses
+    act(gate) * up + re-quantize in its epilogue; W_out consumes int8."""
+    from repro.core import deploy
+    hid = ctx.deploy_act(f"{prefix}/hidden")
+    up = deploy.matmul(x, p["w_up"])
+    h_q = deploy.matmul(x, p["w_gate"], activation=activation, mul=up,
+                        out_aq=hid)
+    return deploy.matmul(h_q, p["w_out"])
+
+
+def _deployed(p, x) -> bool:
+    from repro.core import deploy
+    return isinstance(x, deploy.QTensor) and \
+        deploy.is_packed(p.get("w_in", p.get("w_gate")))
+
+
 def mlp(p, x, *, activation: str = "gelu", ctx=None, prefix: str = "ffn"):
     """Classic 2-layer MLP (BERT-style). p: w_in (D,F), b_in, w_out (F,D), b_out."""
+    if _deployed(p, x):
+        return _mlp_int8(p, x, activation=activation, ctx=ctx, prefix=prefix)
     act = ACTIVATIONS[activation]
 
     def w(name):
@@ -38,6 +72,9 @@ def mlp(p, x, *, activation: str = "gelu", ctx=None, prefix: str = "ffn"):
 
 def glu_mlp(p, x, *, activation: str = "silu", ctx=None, prefix: str = "ffn"):
     """Gated MLP (SwiGLU/GeGLU). p: w_gate (D,F), w_up (D,F), w_out (F,D)."""
+    if _deployed(p, x):
+        return _glu_mlp_int8(p, x, activation=activation, ctx=ctx,
+                             prefix=prefix)
     act = ACTIVATIONS[activation]
 
     def w(name):

@@ -168,12 +168,52 @@ def _moe_sharded(cfg: ModelConfig, p, x, dist: DistContext):
 # Blocks
 # ---------------------------------------------------------------------------
 
+def _ffn_packed(p) -> bool:
+    from repro.core import deploy
+    ffn = p.get("ffn")
+    return isinstance(ffn, dict) and deploy.is_packed(
+        ffn.get("w_in", ffn.get("w_gate")))
+
+
+def _attn_packed(p) -> bool:
+    from repro.core import deploy
+    attn = p.get("attn")
+    return isinstance(attn, dict) and deploy.is_packed(attn.get("wq"))
+
+
+def _ffn_input(cfg: ModelConfig, p, x, ctx, prefix):
+    """LN2 + the ffn_in quantizer. In DEPLOY mode with packed FFN weights the
+    two fuse into one norm+int8-emit kernel pass returning a QTensor."""
+    if ctx is not None:
+        aq = ctx.deploy_act(f"{prefix}/ffn_in")
+        if aq is not None and _ffn_packed(p):
+            from repro.core import deploy
+            return deploy.norm_quantize(cfg.norm, p["ln2"], x, aq)
+    h = _norm(cfg, p["ln2"], x)
+    if ctx is not None:
+        h = ctx.act(f"{prefix}/ffn_in", h)
+    return h
+
+
+def _attn_input(cfg: ModelConfig, p, x, ctx, prefix):
+    """LN1 + the attn_in input quantizer (fused in DEPLOY, see _ffn_input)."""
+    if ctx is not None:
+        aq = ctx.deploy_act(f"{prefix}/attn_in")
+        if aq is not None and _attn_packed(p):
+            from repro.core import deploy
+            return deploy.norm_quantize(cfg.norm, p["ln1"], x, aq)
+    h = _norm(cfg, p["ln1"], x)
+    if ctx is not None:
+        h = ctx.act_in(f"{prefix}/attn_in", h)
+    return h
+
+
 def block_apply(cfg: ModelConfig, kind: str, p, x, positions, *, ctx=None,
                 prefix="layer", cache=None, dist=None, chunked=None):
     """One transformer block of the given kind. Returns (x, new_cache)."""
     if kind in ("attn", "local_attn"):
         acfg = attn_cfg_for(cfg, kind)
-        h = _norm(cfg, p["ln1"], x)
+        h = _attn_input(cfg, p, x, ctx, prefix)
         attn_out, new_cache = attention_block(
             p["attn"], h, positions, acfg, ctx=ctx, prefix=f"{prefix}/attn",
             cache=cache, chunked=chunked)
@@ -182,9 +222,7 @@ def block_apply(cfg: ModelConfig, kind: str, p, x, positions, *, ctx=None,
         x = x + attn_out
         if ctx is not None:
             x = ctx.act(f"{prefix}/residual_attn", x)
-        h = _norm(cfg, p["ln2"], x)
-        if ctx is not None:
-            h = ctx.act(f"{prefix}/ffn_in", h)
+        h = _ffn_input(cfg, p, x, ctx, prefix)
         ffn_out = _ffn_apply(cfg, p.get("moe", p.get("ffn")), h, ctx=ctx,
                              prefix=f"{prefix}/ffn", dist=dist)
         if cfg.post_norm:
@@ -203,9 +241,7 @@ def block_apply(cfg: ModelConfig, kind: str, p, x, positions, *, ctx=None,
         x = x + rec_out
         if ctx is not None:
             x = ctx.act(f"{prefix}/residual_attn", x)
-        h = _norm(cfg, p["ln2"], x)
-        if ctx is not None:
-            h = ctx.act(f"{prefix}/ffn_in", h)
+        h = _ffn_input(cfg, p, x, ctx, prefix)
         ffn_out = _ffn_apply(cfg, p["ffn"], h, ctx=ctx, prefix=f"{prefix}/ffn",
                              dist=dist)
         if ctx is not None:

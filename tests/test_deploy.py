@@ -1,0 +1,296 @@
+"""Integer deployment path (Mode.DEPLOY): the fused int8 kernels must match
+the fake-quant reference within int8 rounding tolerance (interpret mode).
+
+Covers the fused epilogue (bias + GELU + re-quantize), non-divisible (B, T)
+shapes, the fused norm+quantize entry, whole-model parity (prefill + decode)
+on the gemma2 reduced config, and the traced-scale no-recompile guarantee.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (Mode, QuantCtx, build_deploy, deploy, peg_policy,
+                        w8a8_policy)
+from repro.core.pipeline import ptq
+from repro.core.quant_config import W8_DEFAULT
+from repro.kernels import ops, ref
+from repro.models import ffn as ffn_lib
+from repro.models import transformer as tfm
+from repro.models.common import layer_norm, rms_norm
+
+
+def _group_act_quant(x, g):
+    """ActQuant from data: per-group asymmetric int8 (shifted uint8 grid)."""
+    d = x.shape[-1]
+    xg = x.reshape(-1, g, d // g)
+    mn = jnp.minimum(jnp.min(xg, axis=(0, 2)), 0.0)
+    mx = jnp.maximum(jnp.max(xg, axis=(0, 2)), 0.0)
+    s = jnp.maximum((mx - mn) / 255.0, 1e-8)
+    z = jnp.clip(jnp.round(-mn / s), 0, 255) - 128.0
+    return deploy.ActQuant(scales=s, zps=z, qmin=-128, qmax=127, perm=None)
+
+
+def _dequant(q: deploy.QTensor):
+    d = q.q.shape[-1]
+    g = q.scales.shape[0]
+    s = jnp.repeat(q.scales, d // g)
+    z = jnp.repeat(q.zps, d // g)
+    return (q.q.astype(jnp.float32) - z) * s
+
+
+class TestFusedEpilogue:
+    @pytest.mark.parametrize("m", [37, 64, 300])      # ragged + divisible
+    def test_peg_bias_gelu_requant_matches_oracle(self, m):
+        k, n, g = 64, 96, 4
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        a = jax.random.randint(ks[0], (m, k), -128, 128, jnp.int8)
+        w = jax.random.randint(ks[1], (k, n), -127, 128, jnp.int8)
+        sg = jax.random.uniform(ks[2], (g,), minval=0.01, maxval=0.05)
+        zg = jnp.round(jax.random.uniform(ks[3], (g,), minval=-20.0,
+                                          maxval=20.0))
+        bias = jax.random.normal(ks[4], (n,)) * 0.2
+        got = ops.int8_matmul_peg(a, w, sg, zg, w_scale=0.02, bias=bias,
+                                  activation="gelu", out_scale=0.04,
+                                  out_zp=-7.0, block_m=32, block_n=32)
+        want = ref.int8_matmul_peg_fused_ref(a, w, sg, zg, 0.02, bias=bias,
+                                             activation="gelu",
+                                             out_scale=0.04, out_zp=-7.0)
+        assert got.dtype == jnp.int8
+        # off-by-one on round-to-grid ties is legitimate
+        assert int(jnp.max(jnp.abs(got.astype(jnp.int32) -
+                                   want.astype(jnp.int32)))) <= 1
+
+    def test_pertensor_zero_point_and_mul(self):
+        m, k, n = 45, 64, 32                          # ragged M
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        a = jax.random.randint(ks[0], (m, k), -128, 128, jnp.int8)
+        w = jax.random.randint(ks[1], (k, n), -127, 128, jnp.int8)
+        mul = jax.random.normal(ks[2], (m, n))
+        got = ops.int8_matmul(a, w, s_a=0.03, s_w=0.01, z_a=5.0, mul=mul,
+                              activation="silu", block_m=16, block_n=16,
+                              block_k=32)
+        want = ref.int8_matmul_fused_ref(a, w, 0.03, 0.01, z_a=5.0, mul=mul,
+                                         activation="silu")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_batched_3d_input(self):
+        b, t, k, n = 3, 11, 64, 32                    # B*T = 33, ragged
+        ks = jax.random.split(jax.random.PRNGKey(2), 2)
+        a = jax.random.randint(ks[0], (b, t, k), -128, 128, jnp.int8)
+        w = jax.random.randint(ks[1], (k, n), -127, 128, jnp.int8)
+        got = ops.int8_matmul(a, w, s_a=0.02, s_w=0.01, block_m=16,
+                              block_n=16, block_k=32)
+        want = ref.int8_matmul_ref(a.reshape(-1, k), w, 0.02,
+                                   0.01).reshape(b, t, n)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestNormQuantize:
+    def test_rms_matches_model_norm(self):
+        d, g = 64, 4
+        ks = jax.random.split(jax.random.PRNGKey(3), 2)
+        x = jax.random.normal(ks[0], (2, 9, d)) * 2.0
+        gamma = jax.random.normal(ks[1], (d,)) * 0.1
+        aq = _group_act_quant(rms_norm(x, gamma), g)
+        q = deploy.norm_quantize("rmsnorm", {"g": gamma}, x, aq)
+        # compare against direct quantization of the model's own norm output
+        y = rms_norm(x, gamma).reshape(-1, d).astype(jnp.float32)
+        s = jnp.repeat(aq.scales, d // g)[None, :]
+        z = jnp.repeat(aq.zps, d // g)[None, :]
+        direct = jnp.clip(jnp.round(y / s) + z, -128, 127).astype(jnp.int8)
+        diff = jnp.abs(q.q.reshape(-1, d).astype(jnp.int32) -
+                       direct.astype(jnp.int32))
+        assert int(jnp.max(diff)) <= 1
+
+    def test_ln_with_permutation(self):
+        d, g = 64, 4
+        ks = jax.random.split(jax.random.PRNGKey(4), 3)
+        x = jax.random.normal(ks[0], (1, 7, d)) * 3.0
+        gamma = 1.0 + jax.random.normal(ks[1], (d,)) * 0.1
+        beta = jax.random.normal(ks[2], (d,)) * 0.1
+        perm = jnp.asarray(np.random.RandomState(0).permutation(d))
+        base = _group_act_quant(layer_norm(x, gamma, beta), g)
+        aq = deploy.ActQuant(scales=base.scales, zps=base.zps, qmin=-128,
+                             qmax=127, perm=perm)
+        q = deploy.norm_quantize("layernorm", {"g": gamma, "b": beta}, x, aq)
+        y = jnp.take(layer_norm(x, gamma, beta), perm,
+                     axis=-1).reshape(-1, d).astype(jnp.float32)
+        s = jnp.repeat(aq.scales, d // g)[None, :]
+        z = jnp.repeat(aq.zps, d // g)[None, :]
+        direct = jnp.clip(jnp.round(y / s) + z, -128, 127)
+        diff = jnp.abs(q.q.reshape(-1, d).astype(jnp.int32) -
+                       direct.astype(jnp.int32))
+        assert int(jnp.max(diff)) <= 1
+
+
+class TestIntegerFFN:
+    def test_mlp_bias_gelu_requant_parity(self):
+        """Integer MLP (fused epilogue) vs the f32 fake-quant computation
+        on identical quantized operands — non-divisible (B, T)."""
+        d, f = 64, 96
+        b, t = 2, 11
+        ks = jax.random.split(jax.random.PRNGKey(5), 5)
+        x = jax.random.normal(ks[0], (b, t, d))
+        p = {"w_in": jax.random.normal(ks[1], (d, f)) * 0.2,
+             "b_in": jax.random.normal(ks[2], (f,)) * 0.1,
+             "w_out": jax.random.normal(ks[3], (f, d)) * 0.2,
+             "b_out": jax.random.normal(ks[4], (d,)) * 0.1}
+
+        in_aq = _group_act_quant(x, 4)
+        x_q = deploy.quantize_act(x, in_aq)
+        x_dq = _dequant(x_q)                      # exactly what deploy sees
+
+        h_ref = jax.nn.gelu(x_dq @ _pack_dequant(p["w_in"], 4)[0] +
+                            p["b_in"], approximate=True)
+        hid_aq = _group_act_quant(h_ref, 1)
+
+        packed = {"w_in": deploy.pack_linear(p["w_in"], W8_DEFAULT, 4),
+                  "w_out": deploy.pack_linear(p["w_out"], W8_DEFAULT, 1),
+                  "b_in": p["b_in"], "b_out": p["b_out"]}
+        ctx = QuantCtx(policy=w8a8_policy(), mode=Mode.DEPLOY,
+                       deploy_acts={"ffn/hidden": hid_aq})
+        got = ffn_lib.mlp(packed, x_q, activation="gelu", ctx=ctx)
+
+        # fake-quant reference on the same integer operands
+        w1, _ = _pack_dequant(p["w_in"], 4)
+        w2, _ = _pack_dequant(p["w_out"], 1)
+        h = jax.nn.gelu(x_dq @ w1 + p["b_in"], approximate=True)
+        s_h, z_h = hid_aq.scales[0], hid_aq.zps[0]
+        h_fq = (jnp.clip(jnp.round(h / s_h) + z_h, -128, 127) - z_h) * s_h
+        want = h_fq @ w2 + p["b_out"]
+        tol = float(s_h) * float(jnp.max(jnp.sum(jnp.abs(w2), axis=0))) * 0.5
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=max(tol, 1e-3) , rtol=1e-2)
+
+    def test_glu_parity(self):
+        d, f = 64, 96
+        ks = jax.random.split(jax.random.PRNGKey(6), 4)
+        x = jax.random.normal(ks[0], (1, 13, d))
+        p = {"w_gate": jax.random.normal(ks[1], (d, f)) * 0.2,
+             "w_up": jax.random.normal(ks[2], (d, f)) * 0.2,
+             "w_out": jax.random.normal(ks[3], (f, d)) * 0.2}
+        in_aq = _group_act_quant(x, 1)
+        x_q = deploy.quantize_act(x, in_aq)
+        x_dq = _dequant(x_q)
+        wg, _ = _pack_dequant(p["w_gate"], 1)
+        wu, _ = _pack_dequant(p["w_up"], 1)
+        wo, _ = _pack_dequant(p["w_out"], 1)
+        h_ref = jax.nn.silu(x_dq @ wg) * (x_dq @ wu)
+        hid_aq = _group_act_quant(h_ref, 1)
+        packed = {k: deploy.pack_linear(v, W8_DEFAULT, 1)
+                  for k, v in p.items()}
+        ctx = QuantCtx(policy=w8a8_policy(), mode=Mode.DEPLOY,
+                       deploy_acts={"ffn/hidden": hid_aq})
+        got = ffn_lib.glu_mlp(packed, x_q, activation="silu", ctx=ctx)
+        s_h, z_h = hid_aq.scales[0], hid_aq.zps[0]
+        h_fq = (jnp.clip(jnp.round(h_ref / s_h) + z_h, -128, 127) - z_h) * s_h
+        want = h_fq @ wo
+        tol = float(s_h) * float(jnp.max(jnp.sum(jnp.abs(wo), axis=0))) * 0.5
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=max(tol, 1e-3), rtol=1e-2)
+
+
+def _pack_dequant(w, g):
+    """(dequantized weight, packed payload) with the deployment quantizer."""
+    pk = deploy.pack_linear(w, W8_DEFAULT, g)
+    return pk["q"].astype(jnp.float32) * pk["s"], pk
+
+
+# ---------------------------------------------------------------------------
+# Whole-model parity on the gemma2 reduced config (GLU + RMSNorm + PEG)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def gemma_deploy():
+    cfg = get_config("gemma2-2b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = tfm.init_params(cfg, key, stacked=True, dtype=jnp.float32)
+    pol = peg_policy(4)
+    flat = tfm.init_params(cfg, key, stacked=False, dtype=jnp.float32)
+    calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(10), (2, 8), 0,
+                                           cfg.vocab_size)}]
+
+    def fwd(p, b, ctx):
+        logits, _ = tfm.forward(cfg, p, b["tokens"], ctx=ctx)
+        return logits
+
+    qm = ptq(fwd, flat, calib, pol, collect_inputs=True)
+    shared = {}
+    for site, qp in qm.act_state.items():
+        base = "layer/" + site.split("/", 1)[1] if site.startswith("layer") \
+            else site
+        shared.setdefault(base, qp)
+    packed, acts = build_deploy(cfg, params, pol, shared)
+    return cfg, params, packed, shared, acts, pol
+
+
+def _ctxs(shared, acts, pol):
+    ref_ctx = QuantCtx(policy=pol, mode=Mode.APPLY, act_state=shared)
+    dep_ctx = QuantCtx(policy=pol, mode=Mode.DEPLOY, act_state=shared,
+                       deploy_acts=acts)
+    return ref_ctx, dep_ctx
+
+
+class TestModelParity:
+    def test_packed_pytree(self, gemma_deploy):
+        cfg, params, packed, shared, acts, pol = gemma_deploy
+        ffn = packed["scan"][0]["ffn"]
+        assert deploy.is_packed(ffn["w_gate"])
+        assert ffn["w_gate"]["q"].dtype == jnp.int8
+        assert ffn["w_gate"]["colsum"].shape[-2] == 4          # PEG groups
+        assert deploy.is_packed(packed["scan"][0]["attn"]["wq"])
+        # PEG input site carries the range-based permutation
+        assert acts["layer/ffn_in"].perm is not None
+
+    def test_prefill_logits_match_fake_quant(self, gemma_deploy):
+        cfg, params, packed, shared, acts, pol = gemma_deploy
+        toks = jax.random.randint(jax.random.PRNGKey(7), (2, 9), 0,
+                                  cfg.vocab_size)
+        ref_ctx, dep_ctx = _ctxs(shared, acts, pol)
+        l_ref, _ = tfm.forward(cfg, params, toks, ctx=ref_ctx)
+        l_int, _ = tfm.forward(cfg, packed, toks, ctx=dep_ctx)
+        scale = float(jnp.max(jnp.abs(l_ref)) + 1e-9)
+        diff = float(jnp.max(jnp.abs(l_ref - l_int)))
+        assert diff <= 0.05 * scale + 1e-3, diff
+
+    def test_decode_step_parity_ragged_batch(self, gemma_deploy):
+        cfg, params, packed, shared, acts, pol = gemma_deploy
+        B = 3                                                  # ragged M = 3
+        toks = jax.random.randint(jax.random.PRNGKey(8), (B, 1), 0,
+                                  cfg.vocab_size)
+        pos = jnp.zeros((B, 1), jnp.int32)
+        cache_r = tfm.init_cache(cfg, B, 16, dtype=jnp.float32)
+        cache_d = tfm.init_cache(cfg, B, 16, dtype=jnp.float32)
+        ref_ctx, dep_ctx = _ctxs(shared, acts, pol)
+        l_ref, _ = tfm.decode_step(cfg, params, toks, pos, cache_r,
+                                   ctx=ref_ctx)
+        l_int, _ = tfm.decode_step(cfg, packed, toks, pos, cache_d,
+                                   ctx=dep_ctx)
+        scale = float(jnp.max(jnp.abs(l_ref)) + 1e-9)
+        assert float(jnp.max(jnp.abs(l_ref - l_int))) <= 0.05 * scale + 1e-3
+
+
+def test_traced_scales_do_not_recompile():
+    """Satellite: calibration scales are traced operands — new scale values
+    must reuse the compiled kernel (the seed recompiled per scale)."""
+    a = jnp.ones((16, 64), jnp.int8)
+    w = jnp.ones((64, 32), jnp.int8)
+    kw = dict(block_m=16, block_n=16, block_k=32)
+    ops.int8_matmul(a, w, s_a=0.5, s_w=0.25, **kw).block_until_ready()
+    n0 = ops.int8_matmul._cache_size()
+    for s in (0.1, 0.01, 0.007):
+        ops.int8_matmul(a, w, s_a=s, s_w=s, **kw).block_until_ready()
+    assert ops.int8_matmul._cache_size() == n0
+
+    sg = jnp.full((4,), 0.1)
+    zg = jnp.zeros((4,))
+    ops.int8_matmul_peg(a, w, sg, zg, w_scale=0.3, block_m=16,
+                        block_n=16).block_until_ready()
+    n1 = ops.int8_matmul_peg._cache_size()
+    ops.int8_matmul_peg(a, w, sg * 3, zg + 1, w_scale=0.7, block_m=16,
+                        block_n=16).block_until_ready()
+    assert ops.int8_matmul_peg._cache_size() == n1

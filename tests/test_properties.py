@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) for the quantization system's
 invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="install via requirements-dev.txt")
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax
