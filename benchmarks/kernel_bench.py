@@ -13,6 +13,12 @@ deployment chain (``ln_quantize -> int8_matmul_peg`` with the
 bias+gelu+requant epilogue ``-> int8_matmul``) — same math, strictly fewer
 HBM bytes because the f32 hidden tensor never leaves VMEM.
 
+The attention-decode section compares one serving decode step over an int8
+KV cache (``int8_attend_decode``) against a bf16 cache with f32
+dequant-attend — the decode step re-reads the whole cache per token, so
+cache bytes/step is the roofline; int8 (+ per-slot f32 scales) roughly
+halves it.
+
 ``python -m benchmarks.kernel_bench`` (or benchmarks/run.py --sections
 kernels) also writes machine-readable ``BENCH_kernels.json`` so the perf
 trajectory is tracked across PRs.
@@ -113,6 +119,57 @@ def bench():
                      bytes_moved / HBM_BW * 1e6, bytes_moved))
 
     rows += bench_ffn_chain()
+    rows += bench_attention_decode()
+    return rows
+
+
+def bench_attention_decode(b=4, s=2048, kv=8, g=2, hd=128):
+    """Serving decode step: int8 KV cache (fused ``int8_attend_decode``)
+    vs a bf16 cache with f32 dequant-attend. The decode step re-reads the
+    whole cache every token, so cache bytes/step IS the roofline."""
+    keys = jax.random.split(jax.random.PRNGKey(2), 7)
+    q_q = jax.random.randint(keys[0], (b, kv, g, hd), -127, 128, jnp.int8)
+    qs = jax.random.uniform(keys[1], (b, kv, g), minval=0.01, maxval=0.05)
+    k_q = jax.random.randint(keys[2], (b, s, kv, hd), -127, 128, jnp.int8)
+    ks_ = jax.random.uniform(keys[3], (b, s, kv), minval=0.01, maxval=0.05)
+    v_q = jax.random.randint(keys[4], (b, s, kv, hd), -127, 128, jnp.int8)
+    vs_ = jax.random.uniform(keys[5], (b, s, kv), minval=0.01, maxval=0.05)
+    k_pos = jnp.broadcast_to(jnp.arange(s), (b, s)).astype(jnp.int32)
+    q_pos = jnp.full((b,), s - 1, jnp.int32)
+
+    def int8_path(qq):
+        return ops.int8_attend_decode(qq, qs, k_q, ks_, v_q, vs_, k_pos,
+                                      q_pos, chunk=512)
+
+    k16 = (k_q.astype(jnp.float32) * ks_[..., None]).astype(jnp.bfloat16)
+    v16 = (v_q.astype(jnp.float32) * vs_[..., None]).astype(jnp.bfloat16)
+    qf = (q_q.astype(jnp.float32) * qs[..., None])
+
+    @jax.jit
+    def bf16_path(qh):
+        sc = jnp.einsum("bkgd,bskd->bkgs", qh,
+                        k16.astype(jnp.float32))
+        valid = (k_pos >= 0) & (k_pos <= q_pos[:, None])
+        sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+        p = jax.nn.softmax(sc, axis=-1)
+        return jnp.einsum("bkgs,bskd->bkgd", p, v16.astype(jnp.float32))
+
+    # cache bytes/step: int8 payloads + f32 per-slot scales vs bf16 k/v
+    int8_cache = b * s * kv * (hd * 1 + 4) * 2
+    bf16_cache = b * s * kv * hd * 2 * 2
+    q_out = b * kv * g * hd * (1 + 4)            # q int8 + f32 out (both tiny)
+    rows = []
+    for name, fn, arg, cache_bytes, variant in [
+            ("attn_decode_int8kv", int8_path, q_q, int8_cache, "kv-int8"),
+            ("attn_decode_bf16kv", bf16_path, qf, bf16_cache, "kv-bf16")]:
+        us = _time(fn, arg)
+        nbytes = cache_bytes + q_out
+        flops = 2 * b * kv * g * hd * s * 2      # q.k + p.v
+        roof = max(flops / (2 * PEAK_FLOPS), nbytes / HBM_BW) * 1e6
+        row = _row(f"{name}_b{b}_s{s}_h{kv * g}x{hd}", us, roof, nbytes,
+                   variant)
+        row["cache_bytes_step"] = int(cache_bytes)
+        rows.append(row)
     return rows
 
 
@@ -171,6 +228,13 @@ def report(rows):
         ratio = fused["unfused"]["hbm_bytes"] / fused["fused"]["hbm_bytes"]
         lines.append(f"# fused FFN chain moves {ratio:.2f}x fewer HBM bytes "
                      "than the unfused sequence")
+    kvs = {r["variant"]: r for r in rows if r["variant"] in
+           ("kv-int8", "kv-bf16")}
+    if len(kvs) == 2:
+        ratio = kvs["kv-bf16"]["cache_bytes_step"] / \
+            kvs["kv-int8"]["cache_bytes_step"]
+        lines.append(f"# int8 KV cache reads {ratio:.2f}x fewer cache bytes "
+                     "per decode step than bf16")
     return "\n".join(lines)
 
 

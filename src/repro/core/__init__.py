@@ -33,5 +33,6 @@ from repro.core.calibration import (Mode, QuantCtx, QuantState,
                                     build_act_state, build_weight_state,
                                     collect_ranges, fp32_ctx)
 from repro.core.pipeline import QuantizedModel, ptq
-from repro.core.deploy import (ActQuant, QTensor, act_quant_for, build_deploy,
-                               is_packed, pack_linear)
+from repro.core.deploy import (ActQuant, KVQuant, QTensor, act_quant_for,
+                               build_deploy, is_packed, kv_quant_for,
+                               pack_linear)

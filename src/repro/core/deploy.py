@@ -78,6 +78,53 @@ class ActQuant:
         return int(self.scales.shape[0]) == 1 and self.perm is None
 
 
+class KVQuant(NamedTuple):
+    """Calibrated per-head grids for the int8 KV cache: the ``{prefix}/k`` /
+    ``{prefix}/v`` sites' quantization step and zero-point (shifted onto the
+    int8 grid; all f32, (KV,)). Registered in ``deploy_acts`` under the
+    ``{prefix}/attn/kv`` site by :func:`build_deploy`.
+
+    The cache write (repro.models.attention.quantize_kv) re-uses the site's
+    own affine grid, so values the simulate path already snapped to that
+    grid round-trip the int8 cache EXACTLY — deployment parity is limited by
+    the attention arithmetic, not by cache storage. The zero-point is
+    per-head STATIC (it lives here, not in the cache): the decode kernel
+    folds it into per-program scalar corrections, keeping the per-slot
+    payload zero-point-free and the S-loop free of zero-point gathers."""
+    k_grid: jnp.ndarray
+    v_grid: jnp.ndarray
+    k_zp: jnp.ndarray
+    v_zp: jnp.ndarray
+
+
+def kv_quant_for(act_state, policy: QuantizationPolicy, attn_prefix: str,
+                 num_kv_heads: int) -> Optional[KVQuant]:
+    """Per-head k/v grids from the calibrated ``{prefix}/k``/``{prefix}/v``
+    sites (paper Fig. 1): per-tensor scales broadcast over heads. Returns
+    None for anything else — per-channel/PEG scales span (or permute) the
+    head_dim axis, not the (KV, hd) head layout, and only the per-tensor
+    grid gives the exact round-trip this packing exists for. The cache then
+    quantizes purely dynamically per slot (or stays bf16, per the fallback
+    rule)."""
+    grids = []
+    for name in ("k", "v"):
+        site = f"{attn_prefix}/{name}"
+        qp = act_state.get(site)
+        if qp is None:
+            return None
+        cfg = policy.act_config(site)
+        if not cfg.enabled or cfg.bits != 8 or qp.group_index is not None \
+                or jnp.size(qp.scale) != 1:
+            return None
+        scale = jnp.asarray(qp.scale, jnp.float32).reshape(())
+        shift = _SHIFT if cfg.qmin == 0 else 0
+        zp = jnp.asarray(qp.zero_point, jnp.float32).reshape(()) - shift
+        grids.append((jnp.full((num_kv_heads,), scale),
+                      jnp.full((num_kv_heads,), zp)))
+    return KVQuant(k_grid=grids[0][0], v_grid=grids[1][0],
+                   k_zp=grids[0][1], v_zp=grids[1][1])
+
+
 def is_packed(w) -> bool:
     """True for a packed int8 deployment weight (vs f32 array / legacy
     {"q", "s"} storage, which lacks the colsum payload)."""
@@ -201,8 +248,9 @@ def build_deploy(cfg, params, policy: QuantizationPolicy, act_state
     attention projection weights with packed payloads wherever the policy,
     the calibrated ``act_state`` and the kernel layout constraints allow;
     everything else is left untouched (those sites keep fake-quant APPLY
-    behavior). ``deploy_acts`` maps input-site names to :class:`ActQuant`.
-    Works on both the stacked-scan and the unrolled param layouts.
+    behavior). ``deploy_acts`` maps input-site names to :class:`ActQuant`,
+    plus ``{prefix}/attn/kv`` -> :class:`KVQuant` clip ranges for the int8
+    KV cache. Works on both the stacked-scan and the unrolled param layouts.
     """
     acts: Dict[str, ActQuant] = {}
     for name, qp in act_state.items():
@@ -218,6 +266,12 @@ def build_deploy(cfg, params, policy: QuantizationPolicy, act_state
         attn = _pack_attn(bp, prefix, policy, acts)
         if attn is not None:
             new["attn"] = attn
+        if isinstance(bp.get("attn"), dict):
+            # int8 KV cache clip ranges (independent of projection packing)
+            kv = kv_quant_for(act_state, policy, f"{prefix}/attn",
+                              cfg.num_kv_heads)
+            if kv is not None:
+                acts[f"{prefix}/attn/kv"] = kv
         return new
 
     packed = dict(params)

@@ -16,6 +16,17 @@ Module map (which kernel serves which paper equation):
                    Fig.-4 rewriting: quantizer directly after the norm).
                    ``*_fake_quant`` simulates; ``*_quantize`` emits int8 and
                    feeds ``int8_matmul[_peg]`` directly.
+  int8_attend_decode — fused decode attention over the int8 KV cache
+                   (serving hot path). Covers the paper's Fig.-1 attention
+                   quantization sites in true fixed point: the q/k sites
+                   become the int8 payloads themselves (q on the calibrated
+                   site grid with an in-kernel zero-point correction, k/v as
+                   the per-head per-slot symmetric cache), ``softmax_in``
+                   fake-quants the soft-capped logits in-kernel, and
+                   ``softmax_out`` the normalized probabilities (two-pass
+                   schedule: the S grid is walked twice because the online-
+                   softmax denominator only exists after the last chunk).
+                   Halves decode-time cache HBM bytes vs bf16.
 
 Simulate vs deploy: the ``*_fake_quant`` variants back ``Mode.APPLY`` / QAT
 (f32 in, f32 out — quantization error only); the emitting variants back

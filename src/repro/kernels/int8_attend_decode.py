@@ -1,0 +1,247 @@
+"""Pallas TPU kernel: fused int8 decode attention over a quantized KV cache.
+
+The serving decode step is HBM-bandwidth-bound: every new token re-reads the
+whole KV cache. With the cache stored int8 (per-head, per-slot symmetric
+scales — see ``repro.models.attention.QuantKVCache``) this kernel computes
+the (B, 1, H, S) step as
+
+    s[g, c]  = (q_q[g] . k_q[c]) * q_scale[g] * k_scale[c]     s8 x s8 -> s32
+    s        = softcap(s);  s = fake_quant_{softmax_in}(s)     (optional)
+    s        = mask(s)              causal + sliding-window from positions
+    p        = online_softmax(s)    flash-style running (m, l) over S chunks
+    p        = fake_quant_{softmax_out}(p)                     (optional)
+    acc     += (p * v_scale) @ v_q                              dequant-on-read
+
+so the int8 payloads and their f32 scales are the ONLY cache bytes read from
+HBM — roughly half the traffic of a bf16 cache — and the q.k product runs on
+the MXU in int8.
+
+Layout: one program per (batch, kv-head, kv-chunk); the grid's last axis
+walks the S chunks so the running max / denominator / accumulator live in
+VMEM scratch across chunk steps (same accumulation pattern as the int8
+matmul kernels). GQA is free: the q block for a kv head is its (G, hd) group
+of query heads.
+
+The paper's Fig.-1 attention quantization sites are applied IN-KERNEL with
+traced scale / zero-point operands (no recompile per calibration), matching
+the simulate path bit-for-bit:
+
+  * ``softmax_in`` — fake-quant on the (soft-capped) logits, one VPU pass.
+  * ``softmax_out`` — fake-quant on the *normalized* probabilities. This is
+    impossible in one streaming pass (the denominator is only known after
+    the last chunk), so when the site is calibrated the grid walks S twice:
+    pass 1 accumulates the running (m, l), pass 2 recomputes the logits,
+    quantizes ``exp(s - m) / l`` on the site grid and accumulates against
+    V. The V block index is pinned during pass 1, so V still streams from
+    HBM once; only K is read twice — ~1.5x the single-pass cache bytes.
+
+The mask is causal-decode fixed (valid slot, k_pos <= q_pos, optional
+sliding window). Non-causal configs and sites that need more than a
+per-tensor scalar fall back to dequantize-then-flash
+(repro.models.attention) — the simulate-path rule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attend_decode_kernel(*refs, n_chunks: int, window: Optional[int],
+                          logit_softcap: Optional[float], has_smq: bool,
+                          has_smo: bool, sm_qmin: int, sm_qmax: int,
+                          smo_qmin: int, smo_qmax: int):
+    refs = list(refs)
+    smq_ref = refs.pop(0) if has_smq else None
+    smo_ref = refs.pop(0) if has_smo else None
+    (q_ref, qs_ref, qz_ref, kz_ref, vz_ref, k_ref, ks_ref, v_ref, vs_ref,
+     kp_ref, qp_ref, o_ref, m_ref, l_ref, acc_ref) = refs
+
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # logits for this chunk (recomputed in the second pass when two-pass)
+    q = q_ref[0, 0]                                    # (G, hd) int8
+    k = k_ref[0, :, 0, :]                              # (C, hd) int8
+    hd = q.shape[-1]
+    s32 = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    # zero-point corrections (asymmetric q grid / static per-head k grid):
+    #   sum (q - zq)(k - zk) = q.k - zq colsum(k) - zk rowsum(q) + hd zq zk
+    # colsum/rowsum come from ints already in VMEM — no extra HBM traffic,
+    # and the per-slot payload stays zero-point-free.
+    zq = qz_ref[0, 0][:, None]                         # (G, 1)
+    zk = kz_ref[0, 0]                                  # scalar (this head)
+    kcol = jnp.sum(k.astype(jnp.int32), axis=-1).astype(jnp.float32)
+    qrow = jnp.sum(q.astype(jnp.int32), axis=-1).astype(jnp.float32)
+    acc32 = (s32.astype(jnp.float32) - zq * kcol[None, :]
+             - zk * qrow[:, None] + hd * zq * zk)
+    s = (acc32 * qs_ref[0, 0][:, None]
+         * ks_ref[0, :, 0][None, :])                   # (G, C)
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    if has_smq:
+        sm_s = smq_ref[0]
+        sm_z = smq_ref[1]
+        sq = jnp.clip(jnp.round(s / sm_s) + sm_z, sm_qmin, sm_qmax)
+        s = (sq - sm_z) * sm_s
+    kp = kp_ref[0]                                     # (C,) int32
+    qp = qp_ref[0, 0]
+    valid = (kp >= 0) & (kp <= qp)
+    if window is not None:
+        valid &= kp > qp - window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    @pl.when(c_idx < n_chunks)
+    def _stats_pass():
+        # online max / denominator (flash accumulation); in single-pass mode
+        # the numerator accumulates alongside.
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(jnp.maximum(m_prev, jnp.max(s, axis=-1)),
+                            NEG_INF)
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        m_ref[:, 0] = m_new
+        l_ref[:, 0] = l_ref[:, 0] * corr + jnp.sum(p, axis=-1)
+        if not has_smo:
+            # fold the per-slot v scales into p (G x C muls < C x hd);
+            # static v zero-point corrects with a per-row scalar
+            pv = p * vs_ref[0, :, 0][None, :]
+            zv = vz_ref[0, 0]
+            acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+                pv, v_ref[0, :, 0, :].astype(jnp.float32),
+                (((1,), (0,)), ((), ()))) - zv * jnp.sum(pv, axis=-1)[:, None]
+
+    if has_smo:
+        @pl.when(c_idx >= n_chunks)
+        def _emit_pass():
+            # second pass: (m, l) are final — quantize the normalized
+            # probabilities on the softmax_out grid exactly like the
+            # simulate path (which does NOT renormalize after fake-quant).
+            p = jnp.exp(s - m_ref[:, 0][:, None]) / \
+                jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+            so_s = smo_ref[0]
+            so_z = smo_ref[1]
+            pq = jnp.clip(jnp.round(p / so_s) + so_z, smo_qmin, smo_qmax)
+            p = (pq - so_z) * so_s
+            pv = p * vs_ref[0, :, 0][None, :]
+            zv = vz_ref[0, 0]
+            acc_ref[...] += jax.lax.dot_general(
+                pv, v_ref[0, :, 0, :].astype(jnp.float32),
+                (((1,), (0,)), ((), ()))) - zv * jnp.sum(pv, axis=-1)[:, None]
+
+        @pl.when(c_idx == 2 * n_chunks - 1)
+        def _done_two_pass():
+            o_ref[0, 0] = acc_ref[...]
+    else:
+        @pl.when(c_idx == n_chunks - 1)
+        def _done():
+            o_ref[0, 0] = acc_ref[...] / \
+                jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+
+
+def int8_attend_decode(q_q: jnp.ndarray, q_scale: jnp.ndarray,
+                       q_zp: jnp.ndarray, k_zp: jnp.ndarray,
+                       v_zp: jnp.ndarray,
+                       k_q: jnp.ndarray, k_scale: jnp.ndarray,
+                       v_q: jnp.ndarray, v_scale: jnp.ndarray,
+                       k_pos: jnp.ndarray, q_pos: jnp.ndarray, *,
+                       window: Optional[int] = None,
+                       logit_softcap: Optional[float] = None,
+                       sm_quant: Optional[jnp.ndarray] = None,
+                       sm_qmin: int = 0, sm_qmax: int = 255,
+                       smo_quant: Optional[jnp.ndarray] = None,
+                       smo_qmin: int = 0, smo_qmax: int = 255,
+                       chunk: int = 256, interpret: bool = False
+                       ) -> jnp.ndarray:
+    """One decode step of attention against an int8 KV cache.
+
+    q_q: (B, KV, G, hd) int8 queries, grouped per kv head (GQA);
+    q_scale: (B, KV, G) f32 per-query-head scales with the attention
+    1/sqrt(hd) factor already folded in; q_zp: (B, KV, G) f32 zero-points on
+    the shifted int8 grid (0 = symmetric); k_zp/v_zp: (B, KV) f32 static
+    per-head zero-points of the cache grids (0 = symmetric). All three are
+    corrected in-kernel with rowsum/colsum scalars computed from the int8
+    payloads already in VMEM, so affine site grids dequantize exactly with
+    zero extra HBM traffic and a zero-point-free per-slot payload.
+    k_q/v_q: (B, S, KV, hd) int8 cache; k_scale/v_scale: (B, S, KV) f32
+    per-head per-slot scales; k_pos: (B, S) absolute positions (-1 = empty
+    slot); q_pos: (B,) query positions. sm_quant / smo_quant: optional (2,) f32 [scale, zero_point]
+    for the in-kernel ``softmax_in`` / ``softmax_out`` fake-quant on their
+    [qmin, qmax] grids (softmax_out switches to the two-pass schedule).
+    Returns (B, KV, G, hd) f32. S must be a multiple of ``chunk`` (the ops
+    wrapper pads with k_pos = -1 slots).
+    """
+    b, kv, g, hd = q_q.shape
+    s_len = k_q.shape[1]
+    c = min(chunk, s_len)
+    assert s_len % c == 0, f"S={s_len} not a multiple of chunk={c}"
+    n_chunks = s_len // c
+    has_smq = sm_quant is not None
+    has_smo = smo_quant is not None
+    n_steps = 2 * n_chunks if has_smo else n_chunks
+
+    operands = []
+    in_specs = []
+    if has_smq:
+        operands.append(sm_quant.astype(jnp.float32))
+        in_specs.append(pl.BlockSpec((2,), lambda i, j, kk: (0,)))
+    if has_smo:
+        operands.append(smo_quant.astype(jnp.float32))
+        in_specs.append(pl.BlockSpec((2,), lambda i, j, kk: (0,)))
+    operands += [q_q, q_scale.astype(jnp.float32),
+                 q_zp.astype(jnp.float32), k_zp.astype(jnp.float32),
+                 v_zp.astype(jnp.float32), k_q,
+                 k_scale.astype(jnp.float32), v_q,
+                 v_scale.astype(jnp.float32), k_pos,
+                 q_pos.reshape(b, 1)]
+    # the chunk axis folds modulo n_chunks so the two-pass schedule re-walks
+    # the same S blocks for K; V pins to block 0 during the stats pass (its
+    # block index then doesn't change, so the pipeline fetches it only once
+    # per program there — V streams from HBM once overall, K twice)
+    ck = (lambda kk: kk % n_chunks) if has_smo else (lambda kk: kk)
+    cv = (lambda kk: jnp.maximum(kk - n_chunks, 0)) if has_smo \
+        else (lambda kk: kk)
+    in_specs += [
+        pl.BlockSpec((1, 1, g, hd), lambda i, j, kk: (i, j, 0, 0)),    # q_q
+        pl.BlockSpec((1, 1, g), lambda i, j, kk: (i, j, 0)),           # q_s
+        pl.BlockSpec((1, 1, g), lambda i, j, kk: (i, j, 0)),           # q_z
+        pl.BlockSpec((1, 1), lambda i, j, kk: (i, j)),                 # k_z
+        pl.BlockSpec((1, 1), lambda i, j, kk: (i, j)),                 # v_z
+        pl.BlockSpec((1, c, 1, hd),
+                     lambda i, j, kk: (i, ck(kk), j, 0)),              # k_q
+        pl.BlockSpec((1, c, 1), lambda i, j, kk: (i, ck(kk), j)),      # k_s
+        pl.BlockSpec((1, c, 1, hd),
+                     lambda i, j, kk: (i, cv(kk), j, 0)),              # v_q
+        pl.BlockSpec((1, c, 1), lambda i, j, kk: (i, cv(kk), j)),      # v_s
+        pl.BlockSpec((1, c), lambda i, j, kk: (i, ck(kk))),            # k_pos
+        pl.BlockSpec((1, 1), lambda i, j, kk: (i, 0)),                 # q_pos
+    ]
+
+    kernel = functools.partial(
+        _attend_decode_kernel, n_chunks=n_chunks, window=window,
+        logit_softcap=logit_softcap, has_smq=has_smq, has_smo=has_smo,
+        sm_qmin=sm_qmin, sm_qmax=sm_qmax, smo_qmin=smo_qmin,
+        smo_qmax=smo_qmax)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), jnp.float32),
+        grid=(b, kv, n_steps),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, j, kk: (i, j, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),   # running max
+                        pltpu.VMEM((g, 1), jnp.float32),   # running denom
+                        pltpu.VMEM((g, hd), jnp.float32)], # numerator
+        interpret=interpret,
+    )(*operands)

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import fused_ln_quant as _lnq
+from repro.kernels import int8_attend_decode as _iad
 from repro.kernels import int8_matmul as _imm
 from repro.kernels import peg_quant as _peg
 from repro.kernels import ref as _ref
@@ -135,6 +136,57 @@ def int8_matmul_peg(a_q, w_q, act_scales, act_zps, *, w_scale,
                                block_m=block_m, block_n=block_n,
                                interpret=_interp(interpret))
     return _unflatten_rows(out, lead, m)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache decode attention (serving hot path)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("window", "logit_softcap",
+                                             "sm_qmin", "sm_qmax",
+                                             "smo_qmin", "smo_qmax", "chunk",
+                                             "interpret"))
+def int8_attend_decode(q_q, q_scale, k_q, k_scale, v_q, v_scale, k_pos,
+                       q_pos, *, q_zp=None, k_zp=None, v_zp=None,
+                       window: Optional[int] = None,
+                       logit_softcap: Optional[float] = None,
+                       sm_quant=None, sm_qmin: int = 0, sm_qmax: int = 255,
+                       smo_quant=None, smo_qmin: int = 0, smo_qmax: int = 255,
+                       chunk: int = 256, interpret: Optional[bool] = None):
+    """Decode attention over an int8 KV cache (see int8_attend_decode.py).
+
+    q_q (B, KV, G, hd) int8; q_scale (B, KV, G) f32 (attention scale folded
+    in); q_zp (B, KV, G) / k_zp, v_zp (B, KV) f32 shifted-grid zero-points
+    (None = symmetric); k_q/v_q (B, S, KV, hd) int8; k_scale/v_scale
+    (B, S, KV) f32; k_pos (B, S) int32 (-1 = empty); q_pos (B,) int32.
+    ``sm_quant``/``smo_quant``: optional (2,) [scale, zp] — the traced
+    softmax_in / softmax_out fake-quants (the latter selects the two-pass
+    schedule). Ragged S is padded to the chunk size with empty slots.
+    Returns (B, KV, G, hd) f32.
+    """
+    if q_zp is None:
+        q_zp = jnp.zeros_like(q_scale)
+    if k_zp is None:
+        k_zp = jnp.zeros(q_scale.shape[:2], jnp.float32)
+    if v_zp is None:
+        v_zp = jnp.zeros(q_scale.shape[:2], jnp.float32)
+    s_len = k_pos.shape[1]
+    c = min(chunk, s_len)
+    pad = (-s_len) % c
+    if pad:
+        pad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k_q = jnp.pad(k_q, pad4)
+        v_q = jnp.pad(v_q, pad4)
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    return _iad.int8_attend_decode(
+        q_q, q_scale, q_zp, k_zp, v_zp, k_q, k_scale, v_q, v_scale, k_pos,
+        q_pos,
+        window=window, logit_softcap=logit_softcap, sm_quant=sm_quant,
+        sm_qmin=sm_qmin, sm_qmax=sm_qmax, smo_quant=smo_quant,
+        smo_qmin=smo_qmin, smo_qmax=smo_qmax, chunk=c,
+        interpret=_interp(interpret))
 
 
 # ---------------------------------------------------------------------------

@@ -95,6 +95,51 @@ def w_colsum_groups(w_q, num_groups):
     return jnp.sum(w_q.reshape(num_groups, gs, n).astype(jnp.int32), axis=1)
 
 
+def int8_attend_decode_ref(q_q, q_scale, k_q, k_scale, v_q, v_scale, k_pos,
+                           q_pos, *, q_zp=None, k_zp=None, v_zp=None,
+                           window=None, logit_softcap=None,
+                           sm_quant=None, sm_qmin=0, sm_qmax=255,
+                           smo_quant=None, smo_qmin=0, smo_qmax=255):
+    """Dequantize-then-attend oracle for the int8 KV decode kernel.
+
+    Shapes as in :func:`repro.kernels.int8_attend_decode.int8_attend_decode`:
+    q_q (B, KV, G, hd), k_q/v_q (B, S, KV, hd), scales per head(-slot),
+    q_zp optional (B, KV, G), k_zp/v_zp optional (B, KV), k_pos (B, S),
+    q_pos (B,). Returns (B, KV, G, hd) f32.
+    """
+    qh = q_q.astype(jnp.float32)
+    if q_zp is not None:
+        qh = qh - q_zp.astype(jnp.float32)[..., None]
+    qh = qh * q_scale.astype(jnp.float32)[..., None]
+    kh = k_q.astype(jnp.float32)
+    vh = v_q.astype(jnp.float32)
+    if k_zp is not None:
+        kh = kh - k_zp.astype(jnp.float32)[:, None, :, None]
+    if v_zp is not None:
+        vh = vh - v_zp.astype(jnp.float32)[:, None, :, None]
+    kh = kh * k_scale.astype(jnp.float32)[..., None]
+    vh = vh * v_scale.astype(jnp.float32)[..., None]
+    s = jnp.einsum("bkgd,bskd->bkgs", qh, kh)
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    if sm_quant is not None:
+        sm_s, sm_z = sm_quant[0], sm_quant[1]
+        sq = jnp.clip(jnp.round(s / sm_s) + sm_z, sm_qmin, sm_qmax)
+        s = (sq - sm_z) * sm_s
+    kp = k_pos[:, None, None, :]
+    qp = q_pos[:, None, None, None]
+    valid = (kp >= 0) & (kp <= qp)
+    if window is not None:
+        valid &= kp > qp - window
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    if smo_quant is not None:        # fake-quant probs, NOT renormalized
+        so_s, so_z = smo_quant[0], smo_quant[1]
+        pq = jnp.clip(jnp.round(p / so_s) + so_z, smo_qmin, smo_qmax)
+        p = (pq - so_z) * so_s
+    return jnp.einsum("bkgs,bskd->bkgd", p, vh)
+
+
 def ln_fake_quant_ref(x, gamma, beta, scale, zp, *, qmin, qmax, eps=1e-6):
     xf = x.astype(jnp.float32)
     mu = jnp.mean(xf, -1, keepdims=True)

@@ -8,9 +8,14 @@ projections run on the Pallas kernels (``ln/rms_quantize ->
 int8_matmul_peg(+fused epilogue) -> int8_matmul``); a parity check against
 the fake-quant reference is printed at startup.
 
+``--kv-bits 8`` additionally stores the KV cache int8 (per-head per-slot
+scales) and decodes through the fused ``int8_attend_decode`` kernel; a
+multi-step decode parity check against the bf16-cache path is printed at
+startup.
+
 CPU smoke:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
-      --requests 8 --new-tokens 8 [--quantize [--deploy-int8]]
+      --requests 8 --new-tokens 8 [--quantize [--deploy-int8 [--kv-bits 8]]]
 """
 from __future__ import annotations
 
@@ -45,10 +50,15 @@ def main(argv=None):
     ap.add_argument("--deploy-int8", action="store_true",
                     help="serve the integer path: packed int8 weights + "
                          "Pallas kernels (requires --quantize)")
+    ap.add_argument("--kv-bits", type=int, default=16, choices=(8, 16),
+                    help="8: int8 KV cache + fused int8 decode attention "
+                         "(requires --deploy-int8); 16: bf16/f32 cache")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.deploy_int8 and not args.quantize:
         ap.error("--deploy-int8 requires --quantize")
+    if args.kv_bits == 8 and not args.deploy_int8:
+        ap.error("--kv-bits 8 requires --deploy-int8")
 
     cfg = get_config(args.arch)
     dist = None
@@ -110,6 +120,34 @@ def main(argv=None):
             scale = float(jnp.max(jnp.abs(logits_ref)) + 1e-9)
             print(f"[deploy-int8] max |fake-quant - int8| logits diff "
                   f"{diff:.5f} (rel {diff / scale:.4%})")
+
+            if args.kv_bits == 8:
+                # multi-step decode parity: int8 KV cache (fused decode
+                # kernel) vs the bf16/f32-cache integer path it replaces
+                B, steps = 2, 4
+                c16 = tfm.init_cache(cfg, B, args.max_len, dtype=dtype)
+                c8 = tfm.init_cache(cfg, B, args.max_len, dtype=dtype,
+                                    kv_bits=8)
+                l16, c16 = tfm.prefill(cfg, params, toks, c16,
+                                       ctx=ctx_factory())
+                l8, c8 = tfm.prefill(cfg, params, toks, c8,
+                                     ctx=ctx_factory())
+                worst = float(jnp.max(jnp.abs(l16 - l8)) /
+                              (jnp.max(jnp.abs(l16)) + 1e-9))
+                cur = jnp.argmax(l16, axis=-1).astype(jnp.int32)
+                pos = jnp.full((B, 1), toks.shape[1], jnp.int32)
+                for _ in range(steps):
+                    l16, c16 = tfm.decode_step(cfg, params, cur, pos, c16,
+                                               ctx=ctx_factory())
+                    l8, c8 = tfm.decode_step(cfg, params, cur, pos, c8,
+                                             ctx=ctx_factory())
+                    rel = float(jnp.max(jnp.abs(l16 - l8)) /
+                                (jnp.max(jnp.abs(l16)) + 1e-9))
+                    worst = max(worst, rel)
+                    cur = jnp.argmax(l16, axis=-1).astype(jnp.int32)
+                    pos = pos + 1
+                print(f"[kv-int8] max rel logits diff over prefill + "
+                      f"{steps} decode steps vs bf16 cache: {worst:.4%}")
         else:
             def ctx_factory():
                 return QuantCtx(policy=pol, mode=Mode.APPLY, act_state=state)
@@ -128,17 +166,19 @@ def main(argv=None):
                 for i in range(args.requests)]
 
     def init_cache(batch):
-        return tfm.init_cache(cfg, batch, args.max_len, dtype=dtype)
+        return tfm.init_cache(cfg, batch, args.max_len, dtype=dtype,
+                              kv_bits=args.kv_bits)
 
     stats = serve_batch(lambda t, c: prefill(params, t, c),
                         lambda t, p, c: decode(params, t, p, c),
                         init_cache, requests,
                         batch_slots=args.batch_slots)
-    tps = stats.tokens_generated / max(stats.wall_s, 1e-9)
     print(f"[serve] {stats.tokens_generated} tokens, "
           f"{stats.decode_steps} decode steps, "
           f"{stats.prefill_calls} prefills, {stats.wall_s:.2f}s "
-          f"({tps:.1f} tok/s)")
+          f"({stats.tokens_per_s:.1f} tok/s), "
+          f"kv-cache {stats.cache_bytes / 1024:.0f} KiB/group "
+          f"(kv-bits {args.kv_bits})")
     return stats
 
 

@@ -51,6 +51,19 @@ class KVCache(NamedTuple):
     pos: jnp.ndarray
 
 
+class QuantKVCache(NamedTuple):
+    """Int8 KV cache (deployment serving path): k_q/v_q (B, S, KV, hd) int8
+    payloads with zero-point-free symmetric per-head, per-slot scales k_s/v_s
+    (B, S, KV) f32; pos as in :class:`KVCache`. Symmetry keeps the zero-point
+    colsum correction out of the decode kernel's S-loop; per-slot scales make
+    the write a pure in-place quantize (ring-buffer slots included)."""
+    k_q: jnp.ndarray
+    v_q: jnp.ndarray
+    k_s: jnp.ndarray
+    v_s: jnp.ndarray
+    pos: jnp.ndarray
+
+
 def init_kv_cache(batch: int, max_len: int, cfg: AttnConfig,
                   dtype=jnp.bfloat16) -> KVCache:
     size = min(max_len, cfg.window) if cfg.window else max_len
@@ -58,6 +71,59 @@ def init_kv_cache(batch: int, max_len: int, cfg: AttnConfig,
         k=jnp.zeros((batch, size, cfg.num_kv_heads, cfg.head_dim), dtype),
         v=jnp.zeros((batch, size, cfg.num_kv_heads, cfg.head_dim), dtype),
         pos=jnp.full((batch, size), -1, jnp.int32))
+
+
+def init_quant_kv_cache(batch: int, max_len: int,
+                        cfg: AttnConfig) -> QuantKVCache:
+    size = min(max_len, cfg.window) if cfg.window else max_len
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return QuantKVCache(
+        k_q=jnp.zeros((batch, size, kv, hd), jnp.int8),
+        v_q=jnp.zeros((batch, size, kv, hd), jnp.int8),
+        k_s=jnp.zeros((batch, size, kv), jnp.float32),
+        v_s=jnp.zeros((batch, size, kv), jnp.float32),
+        pos=jnp.full((batch, size), -1, jnp.int32))
+
+
+def quantize_kv(x, grid_scale=None, zero_point=None):
+    """Per-head (last-two-axes: ..., KV, hd) int8 quantization.
+
+    Without calibration each (token, kv-head) vector gets its own symmetric
+    scale amax/127. With a calibrated site grid (``grid_scale`` +
+    ``zero_point`` from deploy.kv_quant_for, both broadcastable over (KV,))
+    the write re-uses the site's affine grid shifted onto int8 — values the
+    simulate path already fake-quantized then store EXACTLY, so the int8
+    cache adds no storage error on the deploy path. The zero-point is NOT
+    stored per slot; it is static per head and corrected inside the decode
+    kernel. Returns (q int8, scale f32 x.shape[:-1]).
+    """
+    xf = x.astype(jnp.float32)
+    if zero_point is not None:
+        s = jnp.broadcast_to(jnp.asarray(grid_scale, jnp.float32),
+                             xf.shape[:-1])
+        z = jnp.asarray(zero_point, jnp.float32)
+        q = jnp.clip(jnp.round(xf / s[..., None]) + z[..., None],
+                     -128, 127).astype(jnp.int8)
+        return q, s
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    s = amax / 127.0
+    if grid_scale is not None:
+        s = jnp.maximum(s, jnp.asarray(grid_scale, jnp.float32))
+    s = jnp.maximum(s, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(xf / s[..., None]), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def dequantize_kv(cache: QuantKVCache, kvq=None):
+    """(k, v) f32 views of a quantized cache (the fallback read path).
+    ``kvq``: the deploy.KVQuant whose static zero-points the cache was
+    written with (None = symmetric dynamic writes)."""
+    kq = cache.k_q.astype(jnp.float32)
+    vq = cache.v_q.astype(jnp.float32)
+    if kvq is not None:
+        kq = kq - jnp.asarray(kvq.k_zp, jnp.float32)[..., None]
+        vq = vq - jnp.asarray(kvq.v_zp, jnp.float32)[..., None]
+    return kq * cache.k_s[..., None], vq * cache.v_s[..., None]
 
 
 def _mask(q_pos, k_pos, cfg: AttnConfig):
@@ -205,6 +271,130 @@ def attend(q, k, v, q_pos, k_pos, cfg: AttnConfig, *, ctx=None, prefix="",
 
 
 # ---------------------------------------------------------------------------
+# Quantized-cache write / decode paths
+# ---------------------------------------------------------------------------
+
+def _write_kv(cache, k_new, v_new, pw, slots, bidx, kvq):
+    """Scatter new K/V tokens into the cache slots. QuantKVCache writes
+    quantize in place (per-head per-slot scales, ring-buffer slots included);
+    ``kvq`` optionally carries the calibrated per-head clip ranges."""
+    if isinstance(cache, QuantKVCache):
+        if kvq is None:
+            kq, ks = quantize_kv(k_new)
+            vq, vs = quantize_kv(v_new)
+        else:
+            kq, ks = quantize_kv(k_new, kvq.k_grid, kvq.k_zp)
+            vq, vs = quantize_kv(v_new, kvq.v_grid, kvq.v_zp)
+        return QuantKVCache(
+            k_q=cache.k_q.at[bidx, slots].set(kq),
+            v_q=cache.v_q.at[bidx, slots].set(vq),
+            k_s=cache.k_s.at[bidx, slots].set(ks),
+            v_s=cache.v_s.at[bidx, slots].set(vs),
+            pos=cache.pos.at[bidx, slots].set(pw))
+    return KVCache(
+        k=cache.k.at[bidx, slots].set(k_new.astype(cache.k.dtype)),
+        v=cache.v.at[bidx, slots].set(v_new.astype(cache.v.dtype)),
+        pos=cache.pos.at[bidx, slots].set(pw))
+
+
+def _sites_active(ctx):
+    if ctx is None or not ctx.act_state:
+        return False
+    from repro.core.calibration import Mode
+    return ctx.mode in (Mode.APPLY, Mode.DEPLOY)
+
+
+def _site_quant(ctx, site):
+    """((scale, zp) (2,), qmin, qmax) for an in-kernel fake-quant site;
+    (None, 0, 0) when the site is inactive; ``False`` when calibrated but not
+    expressible by the kernel (per-channel / PEG) — the caller then falls
+    back to dequantize-then-attend so the site still applies."""
+    qp = ctx.act_state.get(site)
+    acfg = ctx.policy.act_config(site)
+    if qp is None or not acfg.enabled:
+        return None, 0, 0
+    if jnp.size(qp.scale) != 1 or qp.group_index is not None:
+        return False
+    sm = jnp.stack([jnp.reshape(jnp.asarray(qp.scale, jnp.float32), ()),
+                    jnp.reshape(jnp.asarray(qp.zero_point, jnp.float32), ())])
+    return sm, acfg.qmin, acfg.qmax
+
+
+def _q_site_quant(ctx, prefix):
+    """(scale, shifted zero-point, qmin, qmax, shift) of the calibrated
+    per-tensor ``{prefix}/q`` site, or None. Re-using the site's own affine
+    grid (shifted onto int8, zero-point corrected in-kernel) makes already
+    fake-quantized queries enter the kernel EXACTLY — no second rounding."""
+    qp = ctx.act_state.get(f"{prefix}/q")
+    acfg = ctx.policy.act_config(f"{prefix}/q")
+    if qp is None or not acfg.enabled or acfg.bits != 8 \
+            or jnp.size(qp.scale) != 1:
+        return None
+    shift = 128 if acfg.qmin == 0 else 0
+    return (jnp.reshape(jnp.asarray(qp.scale, jnp.float32), ()),
+            jnp.reshape(jnp.asarray(qp.zero_point, jnp.float32), ()),
+            acfg.qmin, acfg.qmax, shift)
+
+
+def _quant_decode_attend(q, cache: QuantKVCache, q_pos, cfg: AttnConfig,
+                         ctx, prefix, kvq=None):
+    """Decode step through the fused int8 attention kernel.
+
+    q: (B, 1, H, hd) (already RoPE'd / site-quantized); queries enter on
+    the calibrated site grid when available (exact), else dynamically
+    quantized per head; the attention scale is folded into the q scales.
+    ``kvq``: the deploy.KVQuant the cache was written with (its static
+    per-head zero-points are corrected in-kernel). Returns (B, 1, H, hd) in
+    q.dtype, or None when the kernel cannot express the site (the caller
+    dequantizes and takes the flash path — the simulate-path fallback rule).
+    """
+    if not cfg.causal:
+        return None           # kernel masks causally; _mask handles the rest
+    sm_quant = smo_quant = None
+    sm_qmin = sm_qmax = smo_qmin = smo_qmax = 0
+    q_site = None
+    if _sites_active(ctx):
+        sm = _site_quant(ctx, f"{prefix}/softmax_in")
+        smo = _site_quant(ctx, f"{prefix}/softmax_out")
+        if sm is False or smo is False:
+            return None
+        sm_quant, sm_qmin, sm_qmax = sm
+        smo_quant, smo_qmin, smo_qmax = smo
+        q_site = _q_site_quant(ctx, prefix)
+    from repro.kernels import ops as kops
+    B, T, H, hd = q.shape
+    KV, G = cfg.num_kv_heads, cfg.q_groups
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    if q_site is not None:
+        # re-use the site's affine grid (shifted to int8): already
+        # fake-quantized queries enter the kernel exactly
+        s_q, z_q, qmin, qmax, shift = q_site
+        q_q = (jnp.clip(jnp.round(qg / s_q) + z_q, qmin, qmax)
+               - shift).astype(jnp.int8)
+        qs = jnp.full((B, KV, G), s_q)
+        qz = jnp.full((B, KV, G), z_q - shift)
+    else:
+        # dynamic symmetric per-head quantization
+        amax = jnp.max(jnp.abs(qg), axis=-1)
+        qs = jnp.maximum(amax / 127.0, jnp.finfo(jnp.float32).tiny)
+        q_q = jnp.clip(jnp.round(qg / qs[..., None]), -127,
+                       127).astype(jnp.int8)
+        qz = None
+    kz = vz = None
+    if kvq is not None:
+        kz = jnp.broadcast_to(jnp.asarray(kvq.k_zp, jnp.float32), (B, KV))
+        vz = jnp.broadcast_to(jnp.asarray(kvq.v_zp, jnp.float32), (B, KV))
+    out = kops.int8_attend_decode(
+        q_q, qs * cfg.scale, cache.k_q, cache.k_s, cache.v_q, cache.v_s,
+        cache.pos, q_pos[:, 0], q_zp=qz, k_zp=kz, v_zp=vz,
+        window=cfg.window,
+        logit_softcap=cfg.logit_softcap, sm_quant=sm_quant,
+        sm_qmin=sm_qmin, sm_qmax=sm_qmax, smo_quant=smo_quant,
+        smo_qmin=smo_qmin, smo_qmax=smo_qmax)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Full attention block with projections + cache handling
 # ---------------------------------------------------------------------------
 
@@ -251,37 +441,43 @@ def attention_block(p, x, positions, cfg: AttnConfig, *, ctx=None,
         v = ctx.act(f"{prefix}/v", v)
 
     new_cache = None
+    out = None
     positions = jnp.broadcast_to(positions, (B, T))
     if cache is not None:
-        S = cache.k.shape[1]
+        quantized = isinstance(cache, QuantKVCache)
+        kvq = ctx.deploy_act(f"{prefix}/kv") \
+            if (quantized and ctx is not None) else None
+        S = cache.pos.shape[1]
+        bidx = jnp.arange(B)[:, None]
         if T > 1:
             # Prefill: attend over the fresh K/V (window enforced by mask),
             # then write the last min(T, S) tokens into the cache.
             keep = min(T, S)
             kw, vw, pw = k[:, -keep:], v[:, -keep:], positions[:, -keep:]
             slots = pw % S if cfg.window else pw
-            bidx = jnp.arange(B)[:, None]
-            new_cache = KVCache(
-                k=cache.k.at[bidx, slots].set(kw.astype(cache.k.dtype)),
-                v=cache.v.at[bidx, slots].set(vw.astype(cache.v.dtype)),
-                pos=cache.pos.at[bidx, slots].set(pw))
+            new_cache = _write_kv(cache, kw, vw, pw, slots, bidx, kvq)
             k_att, v_att, kpos_att = k, v, positions
         else:
             # Decode: write the new token, attend over the cache.
             slots = positions % S if cfg.window else positions
-            bidx = jnp.arange(B)[:, None]
-            k_upd = cache.k.at[bidx, slots].set(k.astype(cache.k.dtype))
-            v_upd = cache.v.at[bidx, slots].set(v.astype(cache.v.dtype))
-            pos_upd = cache.pos.at[bidx, slots].set(positions)
-            new_cache = KVCache(k=k_upd, v=v_upd, pos=pos_upd)
-            k_att, v_att, kpos_att = k_upd, v_upd, pos_upd
+            new_cache = _write_kv(cache, k, v, positions, slots, bidx, kvq)
+            if quantized:
+                out = _quant_decode_attend(q, new_cache, positions, cfg,
+                                           ctx, prefix, kvq)
+                if out is None:       # kernel can't express: dequant + flash
+                    k_att, v_att = dequantize_kv(new_cache, kvq)
+                    kpos_att = new_cache.pos
+            else:
+                k_att, v_att, kpos_att = (new_cache.k, new_cache.v,
+                                          new_cache.pos)
     else:
         k_att, v_att = k, v
         kpos_att = positions
 
-    out = attend(q, k_att.astype(q.dtype), v_att.astype(q.dtype),
-                 jnp.broadcast_to(positions, (B, T)), kpos_att, cfg,
-                 ctx=ctx, prefix=prefix, chunked=chunked)
+    if out is None:
+        out = attend(q, k_att.astype(q.dtype), v_att.astype(q.dtype),
+                     jnp.broadcast_to(positions, (B, T)), kpos_att, cfg,
+                     ctx=ctx, prefix=prefix, chunked=chunked)
     out2d = out.reshape(B, T, H * hd)
     if x_int8:
         wo_aq = ctx.deploy_act(f"{prefix}/wo_in")

@@ -31,8 +31,9 @@ from repro.models import ffn as ffn_lib
 from repro.models import moe as moe_lib
 from repro.models import rglru as rglru_lib
 from repro.models import rwkv6 as rwkv_lib
-from repro.models.attention import (AttnConfig, KVCache, attention_block,
-                                    init_attention_params, init_kv_cache)
+from repro.models.attention import (AttnConfig, KVCache, QuantKVCache,
+                                    attention_block, init_attention_params,
+                                    init_kv_cache, init_quant_kv_cache)
 from repro.models.common import (cross_entropy, embed_init, layer_norm,
                                  rms_norm, softcap, split_keys)
 
@@ -309,9 +310,12 @@ def init_block_params(cfg: ModelConfig, kind: str, key, dtype):
 
 
 def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
-                     dtype=jnp.bfloat16):
+                     dtype=jnp.bfloat16, kv_bits: int = 16):
     if kind in ("attn", "local_attn"):
-        return init_kv_cache(batch, max_len, attn_cfg_for(cfg, kind), dtype)
+        acfg = attn_cfg_for(cfg, kind)
+        if kv_bits == 8:
+            return init_quant_kv_cache(batch, max_len, acfg)
+        return init_kv_cache(batch, max_len, acfg, dtype)
     if kind == "rec":
         return rglru_lib.init_rglru_state(batch, cfg.d_rnn or cfg.d_model)
     if kind == "rwkv":
@@ -358,7 +362,9 @@ def init_params(cfg: ModelConfig, key, *, stacked: bool = True,
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
-               stacked: bool = True, dtype=jnp.bfloat16):
+               stacked: bool = True, dtype=jnp.bfloat16, kv_bits: int = 16):
+    """kv_bits=8 stores attention caches as int8 QuantKVCache (deployment
+    serving path); 16 keeps the bf16/f32 KVCache."""
     plan = cfg.layer_plan
     n_pat = len(cfg.block_pattern)
     n_tail = len(cfg.tail_pattern)
@@ -366,13 +372,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
     if stacked:
         groups = []
         for kind in cfg.block_pattern:
-            per = [init_block_cache(cfg, kind, batch, max_len, dtype)
+            per = [init_block_cache(cfg, kind, batch, max_len, dtype, kv_bits)
                    for _ in range(n_super)]
             groups.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
-        tail = [init_block_cache(cfg, kind, batch, max_len, dtype)
+        tail = [init_block_cache(cfg, kind, batch, max_len, dtype, kv_bits)
                 for kind in cfg.tail_pattern]
         return {"scan": groups, "tail": tail}
-    return {"layers": [init_block_cache(cfg, kind, batch, max_len, dtype)
+    return {"layers": [init_block_cache(cfg, kind, batch, max_len, dtype,
+                                        kv_bits)
                        for kind in plan]}
 
 

@@ -27,6 +27,13 @@ class ServeStats:
     decode_steps: int = 0
     tokens_generated: int = 0
     wall_s: float = 0.0
+    cache_bytes: int = 0        # peak KV-cache footprint of one batch group
+    tokens_per_s: float = 0.0
+
+
+def _tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)
+               if hasattr(x, "dtype"))
 
 
 def serve_batch(prefill_fn: Callable, decode_fn: Callable, init_cache_fn,
@@ -48,12 +55,16 @@ def serve_batch(prefill_fn: Callable, decode_fn: Callable, init_cache_fn,
         toks = np.zeros((B, T), np.int32)
         for i, r in enumerate(group):
             toks[i, T - len(r.prompt):] = r.prompt      # left-pad
+        for r in group:                                 # empty-quota requests
+            if r.max_new_tokens <= 0:
+                r.done = True
         cache = init_cache_fn(B)
+        stats.cache_bytes = max(stats.cache_bytes, _tree_bytes(cache))
         logits, cache = prefill_fn(jnp.asarray(toks), cache)
         stats.prefill_calls += 1
         pos = np.full((B, 1), T, np.int32)
         cur = np.asarray(jnp.argmax(logits[:, -1:], axis=-1), np.int32)
-        steps = max(r.max_new_tokens for r in group)
+        steps = max((r.max_new_tokens for r in group), default=0)
         for _ in range(steps):
             for i, r in enumerate(group):
                 if not r.done:
@@ -61,12 +72,15 @@ def serve_batch(prefill_fn: Callable, decode_fn: Callable, init_cache_fn,
                     stats.tokens_generated += 1
                     if len(r.tokens_out) >= r.max_new_tokens:
                         r.done = True
+            # check BEFORE decoding: once every request hit its quota the
+            # group must not pay for (or emit tokens from) another step
+            if all(r.done for r in group):
+                break
             logits, cache = decode_fn(jnp.asarray(cur), jnp.asarray(pos),
                                       cache)
             stats.decode_steps += 1
             cur = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
             pos = pos + 1
-            if all(r.done for r in group):
-                break
     stats.wall_s = time.perf_counter() - t_start
+    stats.tokens_per_s = stats.tokens_generated / max(stats.wall_s, 1e-9)
     return stats

@@ -273,6 +273,67 @@ class TestModelParity:
         scale = float(jnp.max(jnp.abs(l_ref)) + 1e-9)
         assert float(jnp.max(jnp.abs(l_ref - l_int))) <= 0.05 * scale + 1e-3
 
+    def test_multi_token_decode_parity(self, gemma_deploy):
+        """Prefill -> N greedy decode steps: the deploy path (packed weights
+        + int8 kernels) must track the fake-quant reference at every step —
+        this pins the parity check serve.py prints at startup."""
+        cfg, params, packed, shared, acts, pol = gemma_deploy
+        B, T, steps = 2, 9, 4
+        toks = jax.random.randint(jax.random.PRNGKey(11), (B, T), 0,
+                                  cfg.vocab_size)
+        ref_ctx, dep_ctx = _ctxs(shared, acts, pol)
+        cache_r = tfm.init_cache(cfg, B, 32, dtype=jnp.float32)
+        cache_d = tfm.init_cache(cfg, B, 32, dtype=jnp.float32)
+        l_ref, cache_r = tfm.prefill(cfg, params, toks, cache_r, ctx=ref_ctx)
+        l_int, cache_d = tfm.prefill(cfg, packed, toks, cache_d, ctx=dep_ctx)
+        cur = jnp.argmax(l_ref, axis=-1).astype(jnp.int32)
+        pos = jnp.full((B, 1), T, jnp.int32)
+        for _ in range(steps):
+            l_ref, cache_r = tfm.decode_step(cfg, params, cur, pos, cache_r,
+                                             ctx=ref_ctx)
+            l_int, cache_d = tfm.decode_step(cfg, packed, cur, pos, cache_d,
+                                             ctx=dep_ctx)
+            scale = float(jnp.max(jnp.abs(l_ref)) + 1e-9)
+            diff = float(jnp.max(jnp.abs(l_ref - l_int)))
+            assert diff <= 0.05 * scale + 1e-3, diff
+            cur = jnp.argmax(l_ref, axis=-1).astype(jnp.int32)
+            pos = pos + 1
+
+    @pytest.mark.deploy
+    def test_multi_token_decode_parity_int8_kv(self, gemma_deploy):
+        """Same multi-step decode with the int8 KV cache (fused decode
+        kernel): parity vs the f32-cache deploy path within the fake-quant
+        tolerance — the ``--kv-bits 8`` startup check, pinned by CI."""
+        cfg, params, packed, shared, acts, pol = gemma_deploy
+        assert isinstance(acts.get("layer/attn/kv"), deploy.KVQuant)
+        B, T, steps = 2, 9, 4
+        toks = jax.random.randint(jax.random.PRNGKey(12), (B, T), 0,
+                                  cfg.vocab_size)
+        _, dep_ctx = _ctxs(shared, acts, pol)
+        c16 = tfm.init_cache(cfg, B, 32, dtype=jnp.float32)
+        c8 = tfm.init_cache(cfg, B, 32, dtype=jnp.float32, kv_bits=8)
+        l16, c16 = tfm.prefill(cfg, packed, toks, c16, ctx=dep_ctx)
+        l8, c8 = tfm.prefill(cfg, packed, toks, c8, ctx=dep_ctx)
+        # prefill attends over the fresh K/V: identical in both paths
+        np.testing.assert_allclose(np.asarray(l16), np.asarray(l8),
+                                   rtol=1e-5, atol=1e-5)
+        cur = jnp.argmax(l16, axis=-1).astype(jnp.int32)
+        pos = jnp.full((B, 1), T, jnp.int32)
+        for _ in range(steps):
+            l16, c16 = tfm.decode_step(cfg, packed, cur, pos, c16,
+                                       ctx=dep_ctx)
+            l8, c8 = tfm.decode_step(cfg, packed, cur, pos, c8, ctx=dep_ctx)
+            scale = float(jnp.max(jnp.abs(l16)) + 1e-9)
+            diff = float(jnp.max(jnp.abs(l16 - l8)))
+            assert diff <= 0.05 * scale + 1e-3, diff
+            cur = jnp.argmax(l16, axis=-1).astype(jnp.int32)
+            pos = pos + 1
+        # the int8 cache halves the attention-cache bytes
+        def kv_bytes(c):
+            from repro.runtime.serve_loop import _tree_bytes
+            return _tree_bytes(c)
+        assert kv_bytes(c8) < 0.6 * kv_bytes(c16)
+
 
 def test_traced_scales_do_not_recompile():
     """Satellite: calibration scales are traced operands — new scale values

@@ -1,0 +1,155 @@
+"""Golden-output tests for runtime.serve_loop.serve_batch using a tiny
+deterministic stub model: next_token = (2 * token + 1) % VOCAB. Covers
+left-pad packing, per-request max_new_tokens (straggler off-by-one), the
+done-flag/decode accounting, and ServeStats bookkeeping."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime import Request, ServeStats, serve_batch
+
+VOCAB = 32
+
+
+def _next(tok: int) -> int:
+    return (2 * tok + 1) % VOCAB
+
+
+def _onehot(tokens):
+    return jnp.eye(VOCAB, dtype=jnp.float32)[jnp.asarray(tokens) % VOCAB]
+
+
+class StubModel:
+    """prefill predicts next(last prompt token); decode predicts next(cur).
+    The 'cache' counts decode calls so scheduling is observable."""
+
+    def __init__(self):
+        self.prefill_tokens = []          # packed (B, T) matrices seen
+
+    def init_cache(self, batch):
+        return {"steps": jnp.zeros((), jnp.int32),
+                "kv": jnp.zeros((batch, 4), jnp.float32)}
+
+    def prefill(self, tokens, cache):
+        self.prefill_tokens.append(np.asarray(tokens))
+        logits = _onehot(_next_arr(np.asarray(tokens)))    # (B, T, V)
+        return logits, cache
+
+    def decode(self, tokens, pos, cache):
+        logits = _onehot(_next_arr(np.asarray(tokens)))    # (B, 1, V)
+        cache = dict(cache, steps=cache["steps"] + 1)
+        return logits, cache
+
+
+def _next_arr(toks):
+    return (2 * toks + 1) % VOCAB
+
+
+def _golden(prompt, n):
+    """Expected greedy continuation of length n."""
+    out, tok = [], int(prompt[-1])
+    for _ in range(n):
+        tok = _next(tok)
+        out.append(tok)
+    return out
+
+
+def _serve(requests, batch_slots=4):
+    m = StubModel()
+    stats = serve_batch(m.prefill, m.decode, m.init_cache, requests,
+                        batch_slots=batch_slots)
+    return m, stats
+
+
+class TestGoldenOutputs:
+    def test_greedy_continuation_matches_golden(self):
+        reqs = [Request(rid=i, prompt=np.asarray([3 + i, 5 + i]),
+                        max_new_tokens=6) for i in range(3)]
+        _, stats = _serve(reqs)
+        for r in reqs:
+            assert r.tokens_out == _golden(r.prompt, 6)
+            assert r.done
+        assert stats.tokens_generated == 18
+
+    def test_left_pad_packing(self):
+        reqs = [Request(rid=0, prompt=np.asarray([7]), max_new_tokens=2),
+                Request(rid=1, prompt=np.asarray([1, 2, 3]),
+                        max_new_tokens=2)]
+        m, _ = _serve(reqs)
+        toks = m.prefill_tokens[0]
+        assert toks.shape == (2, 3)
+        np.testing.assert_array_equal(toks[0], [0, 0, 7])       # left-pad
+        np.testing.assert_array_equal(toks[1], [1, 2, 3])
+        # padded request still decodes from ITS last prompt token
+        assert reqs[0].tokens_out == _golden([7], 2)
+
+    def test_groups_split_by_batch_slots(self):
+        reqs = [Request(rid=i, prompt=np.asarray([i + 1]), max_new_tokens=3)
+                for i in range(5)]
+        m, stats = _serve(reqs, batch_slots=2)
+        assert stats.prefill_calls == 3                         # 2+2+1
+        assert len(m.prefill_tokens) == 3
+        for r in reqs:
+            assert r.tokens_out == _golden(r.prompt, 3)
+
+
+class TestStragglerHandling:
+    def test_per_request_max_new_tokens_exact(self):
+        """A request with a smaller quota than the group max stops exactly
+        at its quota (the pre-fix loop appended while others decoded)."""
+        reqs = [Request(rid=0, prompt=np.asarray([3]), max_new_tokens=1),
+                Request(rid=1, prompt=np.asarray([4]), max_new_tokens=5),
+                Request(rid=2, prompt=np.asarray([5]), max_new_tokens=3)]
+        _, stats = _serve(reqs)
+        assert [len(r.tokens_out) for r in reqs] == [1, 5, 3]
+        for r in reqs:
+            assert r.tokens_out == _golden(r.prompt, r.max_new_tokens)
+            assert r.done
+        assert stats.tokens_generated == 9
+
+    def test_zero_quota_request_generates_nothing(self):
+        reqs = [Request(rid=0, prompt=np.asarray([3]), max_new_tokens=0),
+                Request(rid=1, prompt=np.asarray([4]), max_new_tokens=2)]
+        _, stats = _serve(reqs)
+        assert reqs[0].tokens_out == []
+        assert reqs[0].done
+        assert reqs[1].tokens_out == _golden([4], 2)
+        assert stats.tokens_generated == 2
+
+    def test_no_decode_after_all_done(self):
+        """The done check runs BEFORE paying for another decode step:
+        generating N tokens costs exactly N-1 decode calls (the first token
+        comes from prefill logits)."""
+        n = 4
+        reqs = [Request(rid=0, prompt=np.asarray([3]), max_new_tokens=n)]
+        m, stats = _serve(reqs)
+        assert stats.decode_steps == n - 1
+        # the stub cache counted the same number of decode invocations
+        assert stats.tokens_generated == n
+
+    def test_all_zero_quota_never_decodes(self):
+        reqs = [Request(rid=0, prompt=np.asarray([3]), max_new_tokens=0)]
+        _, stats = _serve(reqs)
+        assert stats.decode_steps == 0
+        assert stats.tokens_generated == 0
+
+
+class TestStatsAccounting:
+    def test_stats_fields(self):
+        reqs = [Request(rid=i, prompt=np.asarray([i + 2]), max_new_tokens=3)
+                for i in range(4)]
+        _, stats = _serve(reqs, batch_slots=4)
+        assert isinstance(stats, ServeStats)
+        assert stats.prefill_calls == 1
+        assert stats.decode_steps == 2
+        assert stats.tokens_generated == 12
+        assert stats.wall_s > 0
+        assert stats.tokens_per_s > 0
+        # the stub cache: one int32 scalar + (4, 4) f32 = 4 + 64 bytes
+        assert stats.cache_bytes == 4 + 4 * 4 * 4
+
+    def test_cache_bytes_tracks_peak_group(self):
+        reqs = [Request(rid=0, prompt=np.asarray([1]), max_new_tokens=1),
+                Request(rid=1, prompt=np.asarray([2]), max_new_tokens=1),
+                Request(rid=2, prompt=np.asarray([3]), max_new_tokens=1)]
+        _, stats = _serve(reqs, batch_slots=2)    # groups of 2 then 1
+        assert stats.cache_bytes == 4 + 2 * 4 * 4  # the B=2 group dominates
