@@ -13,7 +13,8 @@ import argparse
 import sys
 import time
 
-SECTIONS = ["t1", "t2", "t4", "t5", "t6", "t7", "kernels", "roofline"]
+SECTIONS = ["t1", "t2", "t4", "t5", "t6", "t7", "kernels", "serving",
+            "roofline"]
 
 
 def main(argv=None):
@@ -37,9 +38,10 @@ def main(argv=None):
             print(f"(section {name} FAILED: {e})")
         print(f"# section {name} took {time.time() - t0:.1f}s", flush=True)
 
-    from benchmarks import (kernel_bench, roofline, table1_ptq,
-                            table2_ablation, table4_mixed_precision,
-                            table5_peg, table6_methods, table7_lowbit)
+    from benchmarks import (kernel_bench, roofline, serving_bench,
+                            table1_ptq, table2_ablation,
+                            table4_mixed_precision, table5_peg,
+                            table6_methods, table7_lowbit)
 
     section("t1", "Table 1 — standard 8-bit PTQ (paper Table 1)",
             lambda: table1_ptq.report(table1_ptq.run()))
@@ -61,6 +63,14 @@ def main(argv=None):
 
     section("kernels", "Pallas kernel micro-bench (interpret mode + "
             "TPU roofline)", _kernels)
+
+    def _serving():
+        rows = serving_bench.bench()
+        path = serving_bench.write_json(rows)
+        return serving_bench.report(rows) + f"\n# wrote {path}"
+
+    section("serving", "Serving schedulers — static vs continuous "
+            "batching on a skewed-quota workload", _serving)
     section("roofline", "Roofline terms per dry-run cell "
             "(EXPERIMENTS.md §Roofline)", roofline.report)
 

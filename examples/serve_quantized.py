@@ -79,7 +79,7 @@ def main(argv=None):
                          donate_argnums=(3,))
         reqs = make_requests()
         stats = serve_batch(
-            lambda t, c: prefill(serve_params, t, c),
+            lambda t, pm, c: prefill(serve_params, t, c, pm),
             lambda t, p, c: decode(serve_params, t, p, c),
             lambda b: tfm.init_cache(cfg, b, 64, dtype=jnp.float32),
             reqs, batch_slots=4)

@@ -2,6 +2,7 @@
 # Tier-1 verify (see ROADMAP.md): the full fast test suite from the repo
 # root with src/ on the path. Extra args pass through to pytest, e.g.
 #   scripts/tier1.sh -m deploy        # just the integer-deployment tests
+#   scripts/tier1.sh -m serve         # serving-runtime scheduler tests
 #   scripts/tier1.sh -m "not slow"
 set -euo pipefail
 cd "$(dirname "$0")/.."

@@ -13,9 +13,15 @@ scales) and decodes through the fused ``int8_attend_decode`` kernel; a
 multi-step decode parity check against the bf16-cache path is printed at
 startup.
 
+``--scheduler continuous`` replaces the static group batching with the
+slot-scheduled continuous-batching runtime (in-flight admission into freed
+decode lanes, see repro.runtime.serve_loop); ``--parity`` serves the same
+requests under both schedulers and verifies identical greedy tokens.
+
 CPU smoke:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
-      --requests 8 --new-tokens 8 [--quantize [--deploy-int8 [--kv-bits 8]]]
+      --requests 8 --new-tokens 8 [--quantize [--deploy-int8 [--kv-bits 8]]] \
+      [--scheduler continuous [--parity]]
 """
 from __future__ import annotations
 
@@ -31,8 +37,9 @@ from repro.core.pipeline import ptq
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as tfm
 from repro.parallel import make_dist, make_param_shardings
-from repro.runtime import Request, serve_batch
-from repro.runtime.steps import make_decode_step, make_prefill_step
+from repro.runtime import Request, serve
+from repro.runtime.steps import (make_admit_step, make_decode_step,
+                                 make_prefill_step)
 
 
 def main(argv=None):
@@ -45,6 +52,18 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--batch-slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--scheduler", choices=("static", "continuous"),
+                    default="static",
+                    help="static: group batching, lockstep decode per "
+                         "group; continuous: slot-scheduled decode with "
+                         "in-flight admission into freed lanes")
+    ap.add_argument("--parity", action="store_true",
+                    help="serve the same requests under BOTH schedulers "
+                         "and verify identical per-request greedy tokens")
+    ap.add_argument("--skew", type=int, default=0, metavar="N",
+                    help="give every other request max_new_tokens=N "
+                         "(skewed-quota workload; shows the continuous "
+                         "scheduler's utilization win)")
     ap.add_argument("--quantize", action="store_true",
                     help="W8A8 PTQ (PEG on the FFN path) before serving")
     ap.add_argument("--deploy-int8", action="store_true",
@@ -59,6 +78,17 @@ def main(argv=None):
         ap.error("--deploy-int8 requires --quantize")
     if args.kv_bits == 8 and not args.deploy_int8:
         ap.error("--kv-bits 8 requires --deploy-int8")
+    # fail before model build on workloads the serve loop would reject
+    # (same shared check serve() re-runs on the real requests)
+    from repro.runtime.serve_loop import _check_capacity
+    try:
+        _check_capacity([Request(rid=-1,
+                                 prompt=np.zeros(args.prompt_len, np.int32),
+                                 max_new_tokens=max(args.new_tokens,
+                                                    args.skew))],
+                        args.max_len)
+    except ValueError as e:
+        ap.error(f"--max-len too small: {e}")
 
     cfg = get_config(args.arch)
     dist = None
@@ -154,31 +184,54 @@ def main(argv=None):
 
     prefill = jax.jit(make_prefill_step(cfg, dist=dist,
                                         ctx_factory=ctx_factory))
+    admit = jax.jit(make_admit_step(cfg, dist=dist,
+                                    ctx_factory=ctx_factory),
+                    donate_argnums=(4,))
     decode = jax.jit(make_decode_step(cfg, dist=dist,
                                       ctx_factory=ctx_factory),
                      donate_argnums=(3,))
 
-    rng = np.random.RandomState(args.seed)
-    requests = [Request(rid=i,
+    def make_requests():
+        rng = np.random.RandomState(args.seed)
+        return [Request(rid=i,
                         prompt=rng.randint(10, cfg.vocab_size,
                                            size=args.prompt_len),
-                        max_new_tokens=args.new_tokens)
+                        max_new_tokens=(args.skew if args.skew and i % 2
+                                        else args.new_tokens))
                 for i in range(args.requests)]
 
     def init_cache(batch):
         return tfm.init_cache(cfg, batch, args.max_len, dtype=dtype,
                               kv_bits=args.kv_bits)
 
-    stats = serve_batch(lambda t, c: prefill(params, t, c),
-                        lambda t, p, c: decode(params, t, p, c),
-                        init_cache, requests,
-                        batch_slots=args.batch_slots)
-    print(f"[serve] {stats.tokens_generated} tokens, "
+    def run(scheduler, requests):
+        return serve(prefill, admit, decode, init_cache, params, requests,
+                     scheduler=scheduler, batch_slots=args.batch_slots,
+                     max_len=args.max_len)
+
+    requests = make_requests()
+    stats = run(args.scheduler, requests)
+    print(f"[serve:{args.scheduler}] {stats.tokens_generated} tokens, "
           f"{stats.decode_steps} decode steps, "
           f"{stats.prefill_calls} prefills, {stats.wall_s:.2f}s "
           f"({stats.tokens_per_s:.1f} tok/s), "
-          f"kv-cache {stats.cache_bytes / 1024:.0f} KiB/group "
+          f"slot-utilization {stats.slot_utilization:.0%}, "
+          f"peak kv-cache {stats.cache_bytes / 1024:.0f} KiB "
           f"(kv-bits {args.kv_bits})")
+
+    if args.parity:
+        other = ("static" if args.scheduler == "continuous"
+                 else "continuous")
+        other_reqs = make_requests()
+        run(other, other_reqs)
+        mismatch = [r.rid for r, o in zip(requests, other_reqs)
+                    if r.tokens_out != o.tokens_out]
+        if mismatch:
+            raise SystemExit(f"[parity] FAIL: request ids {mismatch} "
+                             f"diverge between schedulers")
+        print(f"[parity] OK: {args.scheduler} and {other} schedulers "
+              f"emit identical greedy tokens for all "
+              f"{len(requests)} requests")
     return stats
 
 

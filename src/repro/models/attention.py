@@ -3,6 +3,14 @@ logit soft-capping, RoPE, KV cache (full + ring-buffer windowed), and a
 flash-style chunked path (online softmax over KV chunks via lax.scan) so long
 contexts never materialize the (T, S) score matrix.
 
+Absolute positions drive both masking and cache writes, and position -1
+marks a DEAD cell — a pad token inside a left-packed prompt or an idle
+decode lane: dead cells are masked out of attention (every path checks
+k_pos >= 0) and their KV-cache writes are dropped (_write_slots). That
+sentinel is the lane-safety contract the continuous-batching scheduler
+builds on (runtime/serve_loop.py): a slot-insert prefill or a masked decode
+step can never perturb co-resident lanes' caches.
+
 Quantization sites (paper Fig. 1 naming) are threaded via QuantCtx:
   {prefix}/q, {prefix}/k, {prefix}/v       — linear outputs
   {prefix}/softmax_in, {prefix}/softmax_out
@@ -274,10 +282,22 @@ def attend(q, k, v, q_pos, k_pos, cfg: AttnConfig, *, ctx=None, prefix="",
 # Quantized-cache write / decode paths
 # ---------------------------------------------------------------------------
 
+def _write_slots(pw, S, window):
+    """Cache slot index per new token from its absolute position. Dead cells
+    (position < 0: prompt pads and idle decode lanes) are routed out of
+    bounds so the scatter DROPS them — the lane-safety contract behind the
+    slot-insert prefill and the masked decode step (a cell with pw == -1
+    neither attends nor writes, so co-resident lanes pass through
+    bit-identical)."""
+    base = pw % S if window else pw
+    return jnp.where(pw >= 0, base, S)
+
+
 def _write_kv(cache, k_new, v_new, pw, slots, bidx, kvq):
     """Scatter new K/V tokens into the cache slots. QuantKVCache writes
     quantize in place (per-head per-slot scales, ring-buffer slots included);
-    ``kvq`` optionally carries the calibrated per-head clip ranges."""
+    ``kvq`` optionally carries the calibrated per-head clip ranges.
+    Out-of-bounds slots (dead cells, see _write_slots) are dropped."""
     if isinstance(cache, QuantKVCache):
         if kvq is None:
             kq, ks = quantize_kv(k_new)
@@ -286,15 +306,30 @@ def _write_kv(cache, k_new, v_new, pw, slots, bidx, kvq):
             kq, ks = quantize_kv(k_new, kvq.k_grid, kvq.k_zp)
             vq, vs = quantize_kv(v_new, kvq.v_grid, kvq.v_zp)
         return QuantKVCache(
-            k_q=cache.k_q.at[bidx, slots].set(kq),
-            v_q=cache.v_q.at[bidx, slots].set(vq),
-            k_s=cache.k_s.at[bidx, slots].set(ks),
-            v_s=cache.v_s.at[bidx, slots].set(vs),
-            pos=cache.pos.at[bidx, slots].set(pw))
+            k_q=cache.k_q.at[bidx, slots].set(kq, mode="drop"),
+            v_q=cache.v_q.at[bidx, slots].set(vq, mode="drop"),
+            k_s=cache.k_s.at[bidx, slots].set(ks, mode="drop"),
+            v_s=cache.v_s.at[bidx, slots].set(vs, mode="drop"),
+            pos=cache.pos.at[bidx, slots].set(pw, mode="drop"))
     return KVCache(
-        k=cache.k.at[bidx, slots].set(k_new.astype(cache.k.dtype)),
-        v=cache.v.at[bidx, slots].set(v_new.astype(cache.v.dtype)),
-        pos=cache.pos.at[bidx, slots].set(pw))
+        k=cache.k.at[bidx, slots].set(k_new.astype(cache.k.dtype),
+                                      mode="drop"),
+        v=cache.v.at[bidx, slots].set(v_new.astype(cache.v.dtype),
+                                      mode="drop"),
+        pos=cache.pos.at[bidx, slots].set(pw, mode="drop"))
+
+
+def reset_kv_lanes(cache, lane_mask, batch_axis: int = 0):
+    """Empty the masked batch lanes of a (Quant)KVCache for slot reuse:
+    ``pos`` -> -1 on those lanes. Payload bytes (and int8 scales) are left in
+    place — an empty position masks the slot out of every read path (dense /
+    chunked / fused int8 kernel), so stale K/V from a retired request can
+    never leak into the next occupant. ``lane_mask``: (B,) bool;
+    ``batch_axis``: where B sits in ``pos`` (1 for stacked scan leaves)."""
+    shape = [1] * cache.pos.ndim
+    shape[batch_axis] = lane_mask.shape[0]
+    m = jnp.reshape(lane_mask, shape)
+    return cache._replace(pos=jnp.where(m, -1, cache.pos))
 
 
 def _sites_active(ctx):
@@ -454,12 +489,12 @@ def attention_block(p, x, positions, cfg: AttnConfig, *, ctx=None,
             # then write the last min(T, S) tokens into the cache.
             keep = min(T, S)
             kw, vw, pw = k[:, -keep:], v[:, -keep:], positions[:, -keep:]
-            slots = pw % S if cfg.window else pw
+            slots = _write_slots(pw, S, cfg.window)
             new_cache = _write_kv(cache, kw, vw, pw, slots, bidx, kvq)
             k_att, v_att, kpos_att = k, v, positions
         else:
             # Decode: write the new token, attend over the cache.
-            slots = positions % S if cfg.window else positions
+            slots = _write_slots(positions, S, cfg.window)
             new_cache = _write_kv(cache, k, v, positions, slots, bidx, kvq)
             if quantized:
                 out = _quant_decode_attend(q, new_cache, positions, cfg,

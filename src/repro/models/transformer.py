@@ -33,7 +33,8 @@ from repro.models import rglru as rglru_lib
 from repro.models import rwkv6 as rwkv_lib
 from repro.models.attention import (AttnConfig, KVCache, QuantKVCache,
                                     attention_block, init_attention_params,
-                                    init_kv_cache, init_quant_kv_cache)
+                                    init_kv_cache, init_quant_kv_cache,
+                                    reset_kv_lanes)
 from repro.models.common import (cross_entropy, embed_init, layer_norm,
                                  rms_norm, softcap, split_keys)
 
@@ -383,6 +384,34 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
                        for kind in plan]}
 
 
+def cache_reset_slots(cache, lane_mask):
+    """Empty the masked batch lanes of a whole-model cache pytree for slot
+    reuse (continuous batching): every attention cache's ``pos`` becomes -1
+    on those lanes, so the next occupant starts from an empty lane while the
+    other lanes are untouched. Works for both cache layouts (stacked scan
+    leaves carry batch on axis 1) and both cache types (KVCache /
+    QuantKVCache — the int8 per-head per-slot scale layout is preserved;
+    stale payload bytes are unreadable once pos == -1).
+
+    Recurrent state (rglru / rwkv6) has no per-slot validity sentinel, so
+    those caches are not supported by the continuous scheduler.
+    """
+    lane_mask = jnp.asarray(lane_mask, bool)
+
+    def _reset(c, axis):
+        if isinstance(c, (KVCache, QuantKVCache)):
+            return reset_kv_lanes(c, lane_mask, batch_axis=axis)
+        raise ValueError(
+            "cache_reset_slots: continuous batching supports attention "
+            f"caches only, got {type(c).__name__} (recurrent state has no "
+            "per-slot validity to reset)")
+
+    if "layers" in cache:
+        return {"layers": [_reset(c, 0) for c in cache["layers"]]}
+    return {"scan": [_reset(c, 1) for c in cache["scan"]],
+            "tail": [_reset(c, 0) for c in cache["tail"]]}
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------
@@ -561,11 +590,20 @@ def train_loss(cfg: ModelConfig, params, batch, *, ctx=None, dist=None,
     return cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
 
 
-def prefill(cfg: ModelConfig, params, tokens, cache, *, embeds=None,
-            ctx=None, dist=None, chunked=None):
-    """Fill the cache from a prompt; returns (last_logits, cache)."""
+def prefill(cfg: ModelConfig, params, tokens, cache, *, positions=None,
+            ctx=None, embeds=None, dist=None, chunked=None):
+    """Fill the cache from a prompt; returns (last_logits, cache).
+
+    positions: optional (B, T) absolute positions. Left-packed ragged
+    prompts pass their pads as position -1 (dead cells: masked out of
+    attention, cache writes dropped) and real tokens as 0..len-1, so a
+    padded request produces the same logits/cache lane as serving it alone.
+    A lane whose positions are ALL -1 writes nothing — the slot-insert
+    admission path of the continuous scheduler relies on this.
+    """
     logits, cache = forward(cfg, params, tokens, embeds=embeds, ctx=ctx,
-                            dist=dist, cache=cache, chunked=chunked)
+                            dist=dist, cache=cache, positions=positions,
+                            chunked=chunked)
     return logits[:, -1:], cache
 
 

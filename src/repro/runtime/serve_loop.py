@@ -1,11 +1,38 @@
-"""Batched serving loop: fixed-slot continuous batching over a prefill step
-and a decode step, with per-request positions and simple timeout-based
-straggler handling for request admission."""
+"""Batched serving loops over jitted prefill / decode / admit steps.
+
+Two schedulers share the Request / ServeStats bookkeeping:
+
+* ``serve_batch`` — STATIC group batching. Requests are packed into groups
+  of up to ``batch_slots`` (prompts left-padded to the group max), each
+  group is prefilled once and then decoded in lockstep until every request
+  in the group hits its quota. A lane whose request finished early idles
+  (still pays for decode steps) until the group's slowest request is done;
+  the next group only starts after that. Simple, but measured tokens/s
+  collapses when ``max_new_tokens`` is skewed across requests.
+
+* ``Scheduler`` / ``serve_continuous`` — CONTINUOUS batching. A fixed pool
+  of ``batch_slots`` decode lanes, each carrying its own request, position
+  and KV-cache lane. Finished requests retire immediately and queued
+  requests are admitted into the freed lanes mid-flight via a slot-insert
+  prefill (runtime.steps.make_admit_step) that writes one request's cache
+  lane while every other lane passes through bit-identical. All shapes are
+  fixed (prompts pad to ``prompt_pad_len``, decode is always (B, 1)), so
+  the jitted steps never recompile across admissions.
+
+Position sentinel contract (models/attention.py): position -1 marks a dead
+cell — a pad token inside a left-packed prompt or an idle decode lane. Dead
+cells are masked out of attention and their KV-cache writes are dropped,
+which is what makes the slot-insert prefill and the masked decode step
+lane-safe. Both schedulers therefore pack prompts with per-request real
+positions 0..len-1 (pads -1), so a short prompt packed next to longer ones
+decodes exactly as if it were served alone.
+"""
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,13 +49,27 @@ class Request:
 
 
 @dataclasses.dataclass
+class RequestLatency:
+    """Per-request latency in model-call steps (every prefill/admit or
+    decode call increments the global step counter by one — a wall-clock-
+    free proxy that includes queueing delay)."""
+    first_token_step: int       # step whose output produced token 1
+    finish_step: int            # step whose output produced the last token
+
+
+@dataclasses.dataclass
 class ServeStats:
     prefill_calls: int = 0
     decode_steps: int = 0
     tokens_generated: int = 0
     wall_s: float = 0.0
-    cache_bytes: int = 0        # peak KV-cache footprint of one batch group
+    cache_bytes: int = 0        # PEAK live KV-cache bytes across the run
     tokens_per_s: float = 0.0
+    # fraction of (decode step x slot) cells occupied by a live request;
+    # denominator uses batch_slots so half-empty tail groups count as idle
+    slot_utilization: float = 0.0
+    request_latency: Dict[int, RequestLatency] = \
+        dataclasses.field(default_factory=dict)
 
 
 def _tree_bytes(tree) -> int:
@@ -36,51 +77,311 @@ def _tree_bytes(tree) -> int:
                if hasattr(x, "dtype"))
 
 
+def _check_capacity(requests: List[Request], max_len: Optional[int]) -> None:
+    """Reject requests whose decode would write past a ``max_len``-slot
+    cache segment (the final token is emitted without a write, so the last
+    write lands at position len(prompt) + quota - 2). Writes past the
+    segment are scatter-dropped by design (dead-cell contract), which would
+    silently truncate the attended context — an error beats degraded
+    output. ``max_len`` None (capacity unknown to the caller) skips the
+    check; sliding-window ring caches wrap and never overflow."""
+    if max_len is None:
+        return
+    for r in requests:
+        if r.max_new_tokens <= 0:
+            continue                # zero-quota: never occupies a lane
+        need = len(r.prompt) + r.max_new_tokens - 1
+        if need > max_len:
+            raise ValueError(
+                f"request {r.rid}: prompt ({len(r.prompt)}) + "
+                f"max_new_tokens ({r.max_new_tokens}) needs {need} cache "
+                f"slots but the cache holds max_len={max_len}; later KV "
+                "writes would be silently dropped")
+
+
+def _pack_prompts(group: List[Request], T: int
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Left-pad prompts to length T. Returns (tokens (B,T), positions (B,T))
+    with real positions 0..len-1 and the -1 dead-cell sentinel on pads."""
+    toks = np.zeros((len(group), T), np.int32)
+    posm = np.full((len(group), T), -1, np.int32)
+    for i, r in enumerate(group):
+        n = len(r.prompt)
+        if n == 0:
+            raise ValueError(f"request {r.rid}: empty prompt (an all-dead "
+                             f"lane has no last-token logits to decode from)")
+        if n > T:
+            raise ValueError(f"request {r.rid}: prompt length {n} exceeds "
+                             f"the packing length {T}")
+        toks[i, T - n:] = r.prompt
+        posm[i, T - n:] = np.arange(n)
+    return toks, posm
+
+
+class _Book:
+    """Shared emission / latency / utilization bookkeeping."""
+
+    def __init__(self, stats: ServeStats, batch_slots: int):
+        self.stats = stats
+        self.slots = batch_slots
+        self.step = 0               # global model-call counter
+        self.cells = 0
+        self.active_cells = 0
+
+    def emit(self, r: Request, tok: int) -> None:
+        r.tokens_out.append(int(tok))
+        self.stats.tokens_generated += 1
+        lat = self.stats.request_latency.get(r.rid)
+        if lat is None:
+            self.stats.request_latency[r.rid] = RequestLatency(
+                first_token_step=self.step, finish_step=self.step)
+        else:
+            lat.finish_step = self.step
+        if len(r.tokens_out) >= r.max_new_tokens:
+            r.done = True
+
+    def track_cache(self, cache) -> None:
+        self.stats.cache_bytes = max(self.stats.cache_bytes,
+                                     _tree_bytes(cache))
+
+    def count_decode(self, n_active: int) -> None:
+        self.stats.decode_steps += 1
+        self.cells += self.slots
+        self.active_cells += n_active
+
+    def finalize(self, t_start: float) -> ServeStats:
+        s = self.stats
+        s.wall_s = time.perf_counter() - t_start
+        s.tokens_per_s = s.tokens_generated / max(s.wall_s, 1e-9)
+        s.slot_utilization = (self.active_cells / self.cells
+                              if self.cells else 0.0)
+        return s
+
+
+# ---------------------------------------------------------------------------
+# Static group batching (legacy mode, kept for comparison + compatibility)
+# ---------------------------------------------------------------------------
+
 def serve_batch(prefill_fn: Callable, decode_fn: Callable, init_cache_fn,
                 requests: List[Request], *, batch_slots: int,
-                greedy: bool = True) -> ServeStats:
-    """Static-batch serving: pack up to ``batch_slots`` requests (padded to a
-    common prompt length), prefill once, then decode in lockstep until every
-    request has produced max_new_tokens.
+                max_len: Optional[int] = None) -> ServeStats:
+    """Static-batch serving: pack up to ``batch_slots`` requests (prompts
+    left-padded to the group max, pads carrying the -1 position sentinel),
+    prefill once, then decode the group in lockstep until every request has
+    produced its max_new_tokens. Freed lanes idle until the group drains.
+    Decoding is greedy (argmax), as in :class:`Scheduler`.
 
-    prefill_fn(params-bound): (tokens (B,T), cache) -> (logits, cache)
-    decode_fn: (tokens (B,1), pos (B,1), cache) -> (logits, cache)
+    prefill_fn: (tokens (B,T), positions (B,T), cache) -> (logits, cache)
+    decode_fn:  (tokens (B,1), pos (B,1), cache) -> (logits, cache)
     """
+    _check_capacity(requests, max_len)
     stats = ServeStats()
+    book = _Book(stats, batch_slots)
     t_start = time.perf_counter()
-    for lo in range(0, len(requests), batch_slots):
-        group = requests[lo:lo + batch_slots]
-        B = len(group)
+    # zero-quota requests retire without consuming a group slot (as in the
+    # continuous scheduler) — filtered before slicing AND before packing,
+    # so an empty prompt on a zero-quota request is not an error either
+    for r in requests:
+        if r.max_new_tokens <= 0:
+            r.done = True
+    live = [r for r in requests if r.max_new_tokens > 0]
+    for lo in range(0, len(live), batch_slots):
+        group = live[lo:lo + batch_slots]
         T = max(len(r.prompt) for r in group)
-        toks = np.zeros((B, T), np.int32)
-        for i, r in enumerate(group):
-            toks[i, T - len(r.prompt):] = r.prompt      # left-pad
-        for r in group:                                 # empty-quota requests
-            if r.max_new_tokens <= 0:
-                r.done = True
-        cache = init_cache_fn(B)
-        stats.cache_bytes = max(stats.cache_bytes, _tree_bytes(cache))
-        logits, cache = prefill_fn(jnp.asarray(toks), cache)
+        toks, posm = _pack_prompts(group, T)
+        cache = init_cache_fn(len(group))
+        book.track_cache(cache)
+        logits, cache = prefill_fn(jnp.asarray(toks), jnp.asarray(posm),
+                                   cache)
         stats.prefill_calls += 1
-        pos = np.full((B, 1), T, np.int32)
+        book.step += 1
+        book.track_cache(cache)
+        # each lane decodes at ITS next position (prompt length), not the
+        # padded group length — pads are dead cells, not context
+        pos = np.array([[len(r.prompt)] for r in group], np.int32)
         cur = np.asarray(jnp.argmax(logits[:, -1:], axis=-1), np.int32)
         steps = max((r.max_new_tokens for r in group), default=0)
         for _ in range(steps):
             for i, r in enumerate(group):
                 if not r.done:
-                    r.tokens_out.append(int(cur[i, 0]))
-                    stats.tokens_generated += 1
-                    if len(r.tokens_out) >= r.max_new_tokens:
-                        r.done = True
+                    book.emit(r, cur[i, 0])
             # check BEFORE decoding: once every request hit its quota the
             # group must not pay for (or emit tokens from) another step
             if all(r.done for r in group):
                 break
+            n_active = sum(not r.done for r in group)
             logits, cache = decode_fn(jnp.asarray(cur), jnp.asarray(pos),
                                       cache)
-            stats.decode_steps += 1
+            book.count_decode(n_active)
+            book.step += 1
+            book.track_cache(cache)
             cur = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
             pos = pos + 1
-    stats.wall_s = time.perf_counter() - t_start
-    stats.tokens_per_s = stats.tokens_generated / max(stats.wall_s, 1e-9)
-    return stats
+    return book.finalize(t_start)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    """Fixed-shape per-slot decode state threaded through the jitted steps:
+    one row per lane. ``pos`` == -1 marks an idle lane (its decode output is
+    discarded and its cache writes are position-dropped)."""
+    tokens: np.ndarray          # (B, 1) int32 current token per lane
+    pos: np.ndarray             # (B, 1) int32 its absolute position (-1 idle)
+    cache: Any                  # model cache pytree with B lanes
+
+
+class Scheduler:
+    """Slot-scheduled continuous batching over a fixed pool of decode lanes.
+
+    Admission policy: FIFO and greedy — before every decode step, if at
+    least one lane is free and the queue is non-empty, ALL free lanes are
+    (re)filled in one slot-insert prefill call. Prompts are left-padded to
+    the fixed ``prompt_pad_len`` and non-admitted lanes carry all -1
+    positions, so one jitted admit step serves every admission without
+    recompiling and without perturbing the resident lanes' caches.
+
+    admit_fn: (tokens (B,P), positions (B,P), admit_mask (B,), cache)
+              -> (last_logits (B,1,V) | (B,P,V), cache)
+    decode_fn: (tokens (B,1), pos (B,1), cache) -> (logits (B,1,V), cache)
+    init_cache_fn: (batch,) -> model cache pytree
+
+    Only greedy (argmax) decoding is implemented — the parity property
+    "continuous == static == served alone, token for token" is only
+    well-defined for deterministic sampling.
+    """
+
+    def __init__(self, admit_fn: Callable, decode_fn: Callable,
+                 init_cache_fn: Callable, *, batch_slots: int,
+                 prompt_pad_len: Optional[int] = None,
+                 max_len: Optional[int] = None):
+        if batch_slots < 1:
+            raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
+        self.admit_fn = admit_fn
+        self.decode_fn = decode_fn
+        self.init_cache_fn = init_cache_fn
+        self.batch_slots = batch_slots
+        self.prompt_pad_len = prompt_pad_len
+        self.max_len = max_len          # per-lane cache slots (None: unchecked)
+
+    def run(self, requests: List[Request]) -> ServeStats:
+        _check_capacity(requests, self.max_len)
+        stats = ServeStats()
+        book = _Book(stats, self.batch_slots)
+        t_start = time.perf_counter()
+        queue: collections.deque[Request] = collections.deque()
+        for r in requests:
+            if r.max_new_tokens <= 0:
+                r.done = True                # never occupies a lane
+            else:
+                queue.append(r)
+        pad = self.prompt_pad_len or max(
+            (len(r.prompt) for r in queue), default=1)
+        B = self.batch_slots
+        lanes: List[Optional[Request]] = [None] * B
+        state = DecodeState(tokens=np.zeros((B, 1), np.int32),
+                            pos=np.full((B, 1), -1, np.int32),
+                            cache=self.init_cache_fn(B))
+        book.track_cache(state.cache)
+
+        while queue or any(r is not None for r in lanes):
+            free = [i for i in range(B) if lanes[i] is None]
+            if free and queue:
+                state = self._admit(free, queue, pad, lanes, state, book)
+                continue        # immediate retirees may have freed lanes
+            state = self._decode(lanes, state, book)
+        return book.finalize(t_start)
+
+    def _admit(self, free, queue, pad, lanes, state: DecodeState,
+               book: _Book) -> DecodeState:
+        B = self.batch_slots
+        group, slots = [], []
+        for i in free:
+            if not queue:
+                break
+            group.append(queue.popleft())
+            slots.append(i)
+        toks = np.zeros((B, pad), np.int32)
+        posm = np.full((B, pad), -1, np.int32)
+        g_toks, g_posm = _pack_prompts(group, pad)
+        admit_mask = np.zeros((B,), bool)
+        for j, i in enumerate(slots):
+            toks[i], posm[i] = g_toks[j], g_posm[j]
+            admit_mask[i] = True
+            lanes[i] = group[j]
+        logits, cache = self.admit_fn(jnp.asarray(toks), jnp.asarray(posm),
+                                      jnp.asarray(admit_mask), state.cache)
+        book.stats.prefill_calls += 1
+        book.step += 1
+        book.track_cache(cache)
+        first = np.asarray(jnp.argmax(logits[:, -1:], axis=-1), np.int32)
+        tokens, pos = state.tokens.copy(), state.pos.copy()
+        for i in slots:
+            r = lanes[i]
+            tokens[i, 0] = first[i, 0]
+            pos[i, 0] = len(r.prompt)
+            book.emit(r, tokens[i, 0])
+            if r.done:                       # quota 1: retire before decoding
+                lanes[i] = None
+                pos[i, 0] = -1
+        return DecodeState(tokens, pos, cache)
+
+    def _decode(self, lanes, state: DecodeState, book: _Book) -> DecodeState:
+        active = [i for i, r in enumerate(lanes) if r is not None]
+        logits, cache = self.decode_fn(jnp.asarray(state.tokens),
+                                       jnp.asarray(state.pos), state.cache)
+        book.count_decode(len(active))
+        book.step += 1
+        book.track_cache(cache)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        tokens, pos = state.tokens.copy(), state.pos.copy()
+        for i in active:
+            r = lanes[i]
+            tokens[i, 0] = nxt[i, 0]
+            pos[i, 0] += 1
+            book.emit(r, tokens[i, 0])
+            if r.done:
+                lanes[i] = None
+                pos[i, 0] = -1
+        return DecodeState(tokens, pos, cache)
+
+
+def serve_continuous(admit_fn: Callable, decode_fn: Callable, init_cache_fn,
+                     requests: List[Request], *, batch_slots: int,
+                     prompt_pad_len: Optional[int] = None,
+                     max_len: Optional[int] = None) -> ServeStats:
+    """Continuous-batching counterpart of :func:`serve_batch` (see
+    :class:`Scheduler` for the step-function contracts)."""
+    return Scheduler(admit_fn, decode_fn, init_cache_fn,
+                     batch_slots=batch_slots, prompt_pad_len=prompt_pad_len,
+                     max_len=max_len).run(requests)
+
+
+def serve(prefill_step: Callable, admit_step: Callable,
+          decode_step: Callable, init_cache_fn, params,
+          requests: List[Request], *, scheduler: str = "static",
+          batch_slots: int, prompt_pad_len: Optional[int] = None,
+          max_len: Optional[int] = None) -> ServeStats:
+    """Dispatch to a scheduler, binding ``params`` into step functions with
+    the ``runtime.steps.make_*_step`` signatures (params first):
+
+      prefill_step(params, tokens, cache, positions) — static mode
+      admit_step(params, tokens, positions, admit_mask, cache) — continuous
+      decode_step(params, tokens, pos, cache)
+
+    The unused step for the chosen scheduler may be None.
+    """
+    if scheduler == "continuous":
+        return serve_continuous(
+            lambda t, pm, m, c: admit_step(params, t, pm, m, c),
+            lambda t, p, c: decode_step(params, t, p, c),
+            init_cache_fn, requests, batch_slots=batch_slots,
+            prompt_pad_len=prompt_pad_len, max_len=max_len)
+    if scheduler != "static":
+        raise ValueError(f"unknown scheduler {scheduler!r}")
+    return serve_batch(lambda t, pm, c: prefill_step(params, t, c, pm),
+                       lambda t, p, c: decode_step(params, t, p, c),
+                       init_cache_fn, requests, batch_slots=batch_slots,
+                       max_len=max_len)

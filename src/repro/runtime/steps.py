@@ -4,7 +4,9 @@ benchmarks).
 ``make_train_step`` supports microbatch gradient accumulation (lax.scan over
 microbatches — per-device activation memory scales 1/M), global-norm
 clipping, Adam, and optional PEG-int8 cross-pod gradient compression.
-``make_*_serve_step`` build prefill / decode steps with KV-cache threading.
+``make_prefill_step`` / ``make_decode_step`` build serve steps with KV-cache
+threading; ``make_admit_step`` is the continuous-batching slot-insert
+prefill (reset admitted lanes + prefill, other lanes bit-preserved).
 """
 from __future__ import annotations
 
@@ -87,11 +89,41 @@ def make_train_step(cfg: ModelConfig, *, lr_schedule, microbatches: int = 1,
 
 def make_prefill_step(cfg: ModelConfig, *, dist=None,
                       ctx_factory: Optional[Callable] = None, chunked=None):
-    def prefill(params, tokens, cache, embeds=None):
+    """prefill(params, tokens, cache[, positions]) -> (last_logits, cache).
+
+    ``positions`` (B, T) carries the dead-cell sentinel: pads in a
+    left-packed ragged prompt are position -1 (masked from attention, cache
+    write dropped) so packing never perturbs a request's own lane. None
+    keeps the legacy arange positions (no pads).
+    """
+    def prefill(params, tokens, cache, positions=None, embeds=None):
         ctx = ctx_factory() if ctx_factory is not None else None
-        return tfm.prefill(cfg, params, tokens, cache, embeds=embeds,
-                           ctx=ctx, dist=dist, chunked=chunked)
+        return tfm.prefill(cfg, params, tokens, cache, positions=positions,
+                           embeds=embeds, ctx=ctx, dist=dist, chunked=chunked)
     return prefill
+
+
+def make_admit_step(cfg: ModelConfig, *, dist=None,
+                    ctx_factory: Optional[Callable] = None, chunked=None):
+    """Slot-insert prefill for continuous batching (one jitted step, fixed
+    shapes — admissions never recompile).
+
+    admit(params, tokens (B, P), positions (B, P), admit_mask (B,), cache)
+        -> (last_logits (B, 1, V), cache)
+
+    Admitted lanes are first reset (pos -> -1 across every layer's cache,
+    see transformer.cache_reset_slots) and then prefilled with their
+    left-padded prompt (real positions 0..len-1, pads -1). Non-admitted
+    lanes carry ALL -1 positions: they neither attend nor write, so their
+    cache lanes pass through bit-identical while requests are admitted
+    mid-flight.
+    """
+    def admit(params, tokens, positions, admit_mask, cache):
+        ctx = ctx_factory() if ctx_factory is not None else None
+        cache = tfm.cache_reset_slots(cache, admit_mask)
+        return tfm.prefill(cfg, params, tokens, cache, positions=positions,
+                           ctx=ctx, dist=dist, chunked=chunked)
+    return admit
 
 
 def make_decode_step(cfg: ModelConfig, *, dist=None,

@@ -1,0 +1,32 @@
+"""Shared stub-model helpers for the serving-loop test files
+(test_serve_loop.py: static scheduler; test_scheduler.py: continuous).
+
+The stub LM is deterministic — next_token = (2 * tok + 1) % VOCAB — so both
+schedulers can be checked token-for-token against ``golden`` without a real
+model.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+VOCAB = 32
+
+
+def next_tok(tok: int) -> int:
+    return (2 * tok + 1) % VOCAB
+
+
+def next_arr(toks):
+    return (2 * np.asarray(toks) + 1) % VOCAB
+
+
+def onehot(tokens):
+    return jnp.eye(VOCAB, dtype=jnp.float32)[jnp.asarray(tokens) % VOCAB]
+
+
+def golden(prompt, n):
+    """Expected greedy continuation of length n."""
+    out, tok = [], int(prompt[-1])
+    for _ in range(n):
+        tok = next_tok(tok)
+        out.append(tok)
+    return out

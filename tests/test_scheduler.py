@@ -1,0 +1,471 @@
+"""Continuous-batching scheduler tests (runtime.serve_loop.Scheduler).
+
+Three layers of coverage:
+
+* Golden stub-model tests mirroring tests/test_serve_loop.py: the
+  continuous scheduler emits exactly the greedy continuation per request,
+  retires requests immediately, and admits queued requests into freed
+  lanes (observable through prefill_calls / decode_steps / utilization).
+* Property tests — a seeded random sweep that always runs, plus hypothesis
+  versions (skipped when hypothesis is absent): no token lost or
+  duplicated, every request retires, continuous == static token-for-token.
+* Real-model invariants on gemma2-2b-reduced for BOTH cache types
+  (KVCache and int8 QuantKVCache): a slot-insert prefill never perturbs
+  the other lanes' caches (lane-hash compare), a short prompt packed with
+  longer ones decodes exactly as served alone (the pad dead-cell
+  contract), scheduler parity incl. the deploy-int8 path, and a
+  recompile guard across admissions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as tfm
+from repro.runtime import (Request, Scheduler, ServeStats, serve,
+                           serve_batch, serve_continuous)
+from repro.runtime.steps import (make_admit_step, make_decode_step,
+                                 make_prefill_step)
+from serve_testlib import golden as _golden
+from serve_testlib import next_arr as _next_arr
+from serve_testlib import onehot as _onehot
+
+pytestmark = pytest.mark.serve
+
+
+class StubModel:
+    """Deterministic next_token = (2 * tok + 1) % VOCAB, with admit/decode
+    call recording so scheduling decisions are observable."""
+
+    def __init__(self):
+        self.admit_masks = []
+        self.decode_calls = 0
+
+    def init_cache(self, batch):
+        return {"kv": jnp.zeros((batch, 4), jnp.float32)}
+
+    def admit(self, tokens, positions, admit_mask, cache):
+        self.admit_masks.append(np.asarray(admit_mask).copy())
+        return _onehot(_next_arr(tokens)), cache
+
+    def decode(self, tokens, pos, cache):
+        self.decode_calls += 1
+        return _onehot(_next_arr(tokens)), cache
+
+
+def _serve_cont(requests, batch_slots=4, prompt_pad_len=None):
+    m = StubModel()
+    stats = serve_continuous(m.admit, m.decode, m.init_cache, requests,
+                             batch_slots=batch_slots,
+                             prompt_pad_len=prompt_pad_len)
+    return m, stats
+
+
+def _stub_static(requests, batch_slots):
+    def prefill(tokens, positions, cache):
+        return _onehot(_next_arr(tokens)), cache
+
+    def decode(tokens, pos, cache):
+        return _onehot(_next_arr(tokens)), cache
+
+    return serve_batch(prefill, decode,
+                       lambda b: {"kv": jnp.zeros((b, 4), jnp.float32)},
+                       requests, batch_slots=batch_slots)
+
+
+class TestGoldenContinuous:
+    def test_greedy_continuation_matches_golden(self):
+        reqs = [Request(rid=i, prompt=np.asarray([3 + i, 5 + i]),
+                        max_new_tokens=6) for i in range(3)]
+        _, stats = _serve_cont(reqs)
+        for r in reqs:
+            assert r.tokens_out == _golden(r.prompt, 6)
+            assert r.done
+        assert stats.tokens_generated == 18
+
+    def test_single_slot_serializes_fifo(self):
+        reqs = [Request(rid=0, prompt=np.asarray([3]), max_new_tokens=4),
+                Request(rid=1, prompt=np.asarray([4]), max_new_tokens=4)]
+        m, stats = _serve_cont(reqs, batch_slots=1)
+        for r in reqs:
+            assert r.tokens_out == _golden(r.prompt, 4)
+        assert stats.prefill_calls == 2           # one admit per request
+        assert stats.decode_steps == 6            # 3 each (tok 1 = prefill)
+        assert stats.slot_utilization == 1.0
+        # FIFO: request 0 finishes before request 1 starts
+        lat = stats.request_latency
+        assert lat[0].finish_step < lat[1].first_token_step
+
+    def test_admission_into_freed_lane_midflight(self):
+        """2 lanes, 3 requests: the third request is admitted into the lane
+        the 1-quota request frees, while the 5-quota request keeps decoding
+        — no lockstep group barrier."""
+        reqs = [Request(rid=0, prompt=np.asarray([3]), max_new_tokens=1),
+                Request(rid=1, prompt=np.asarray([4]), max_new_tokens=5),
+                Request(rid=2, prompt=np.asarray([5]), max_new_tokens=3)]
+        m, stats = _serve_cont(reqs, batch_slots=2)
+        for r in reqs:
+            assert r.tokens_out == _golden(r.prompt, r.max_new_tokens)
+            assert r.done
+        # admit #1 fills both lanes; r0 retires off its prefill token, so
+        # admit #2 slots r2 into the freed lane before the first decode
+        assert stats.prefill_calls == 2
+        np.testing.assert_array_equal(m.admit_masks[0], [True, True])
+        np.testing.assert_array_equal(m.admit_masks[1], [True, False])
+        # r1 needs 4 decode steps; r2 rides along in 2 of them
+        assert stats.decode_steps == 4
+        assert stats.slot_utilization == pytest.approx(6 / 8)
+        # static lockstep on the same workload pays more idle cells
+        static = _stub_static(
+            [Request(rid=i, prompt=r.prompt, max_new_tokens=r.max_new_tokens)
+             for i, r in enumerate(reqs)], batch_slots=2)
+        assert stats.decode_steps < static.decode_steps \
+            or stats.slot_utilization > static.slot_utilization
+
+    def test_zero_quota_never_occupies_a_lane(self):
+        reqs = [Request(rid=0, prompt=np.asarray([3]), max_new_tokens=0),
+                Request(rid=1, prompt=np.asarray([4]), max_new_tokens=2)]
+        m, stats = _serve_cont(reqs, batch_slots=2)
+        assert reqs[0].tokens_out == [] and reqs[0].done
+        assert reqs[1].tokens_out == _golden([4], 2)
+        assert stats.tokens_generated == 2
+        np.testing.assert_array_equal(m.admit_masks[0], [True, False])
+
+    def test_invalid_batch_slots_raises(self):
+        reqs = [Request(rid=0, prompt=np.asarray([1]), max_new_tokens=1)]
+        with pytest.raises(ValueError, match="batch_slots"):
+            _serve_cont(reqs, batch_slots=0)
+
+    def test_prompt_longer_than_pad_len_raises(self):
+        reqs = [Request(rid=0, prompt=np.asarray([1, 2, 3]),
+                        max_new_tokens=1)]
+        with pytest.raises(ValueError, match="exceeds"):
+            _serve_cont(reqs, batch_slots=1, prompt_pad_len=2)
+
+    def test_cache_capacity_guard(self):
+        """With max_len given, both schedulers reject a request whose decode
+        would write past the cache (writes would be silently dropped);
+        the boundary case — last write at slot max_len-1 — is accepted."""
+        from repro.runtime import serve_continuous
+        m = StubModel()
+
+        def run(quota, max_len):
+            return serve_continuous(
+                m.admit, m.decode, m.init_cache,
+                [Request(rid=0, prompt=np.asarray([3, 4]),
+                         max_new_tokens=quota)],
+                batch_slots=1, max_len=max_len)
+
+        run(7, 8)                               # 2 + 7 - 1 == 8: fits
+        with pytest.raises(ValueError, match="silently dropped"):
+            run(8, 8)                           # last write at slot 8
+        with pytest.raises(ValueError, match="silently dropped"):
+            serve_batch(lambda t, pm, c: (_onehot(_next_arr(t)), c),
+                        lambda t, p, c: (_onehot(_next_arr(t)), c),
+                        m.init_cache,
+                        [Request(rid=0, prompt=np.asarray([3, 4]),
+                                 max_new_tokens=8)],
+                        batch_slots=1, max_len=8)
+
+    def test_empty_prompt_raises(self):
+        """An empty prompt has no last-token logits to decode from — both
+        schedulers must reject it instead of emitting garbage."""
+        with pytest.raises(ValueError, match="empty prompt"):
+            _serve_cont([Request(rid=0, prompt=np.asarray([], np.int32),
+                                 max_new_tokens=2)], batch_slots=1)
+        with pytest.raises(ValueError, match="empty prompt"):
+            _stub_static([Request(rid=0, prompt=np.asarray([], np.int32),
+                                  max_new_tokens=2),
+                          Request(rid=1, prompt=np.asarray([4]),
+                                  max_new_tokens=2)], batch_slots=2)
+
+    def test_zero_quota_empty_prompt_consistent_across_schedulers(self):
+        """A zero-quota request never needs a lane, so an empty prompt on
+        it is NOT an error — in either scheduler (they must agree for
+        --parity to be meaningful)."""
+        def reqs():
+            return [Request(rid=0, prompt=np.asarray([], np.int32),
+                            max_new_tokens=0),
+                    Request(rid=1, prompt=np.asarray([4]),
+                            max_new_tokens=2)]
+        c = reqs()
+        _serve_cont(c, batch_slots=2)
+        s = reqs()
+        _stub_static(s, batch_slots=2)
+        for rc, rs in zip(c, s):
+            assert rc.done and rs.done
+            assert rc.tokens_out == rs.tokens_out
+        assert c[1].tokens_out == _golden([4], 2)
+
+
+def _run_property(reqspecs, batch_slots):
+    """Shared property body: serve the spec'd workload continuously and
+    check token conservation + golden outputs + full retirement."""
+    reqs = [Request(rid=i, prompt=np.arange(1, plen + 1, dtype=np.int32),
+                    max_new_tokens=quota)
+            for i, (plen, quota) in enumerate(reqspecs)]
+    _, stats = _serve_cont(reqs, batch_slots=batch_slots)
+    for r in reqs:
+        assert r.done
+        assert r.tokens_out == _golden(r.prompt, max(r.max_new_tokens, 0))
+    assert stats.tokens_generated == sum(len(r.tokens_out) for r in reqs)
+    assert len(stats.request_latency) == sum(
+        1 for r in reqs if r.max_new_tokens > 0)
+    # continuous == static, token for token
+    static_reqs = [Request(rid=r.rid, prompt=r.prompt,
+                           max_new_tokens=r.max_new_tokens) for r in reqs]
+    _stub_static(static_reqs, batch_slots)
+    for r, s in zip(reqs, static_reqs):
+        assert r.tokens_out == s.tokens_out
+
+
+class TestSchedulerProperties:
+    def test_seeded_random_sweep(self):
+        """Hypothesis-free sweep so the properties run everywhere."""
+        rng = np.random.RandomState(0)
+        for _ in range(25):
+            n = rng.randint(1, 9)
+            specs = [(rng.randint(1, 6), rng.randint(0, 7))
+                     for _ in range(n)]
+            _run_property(specs, batch_slots=rng.randint(1, 5))
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                # pragma: no cover - dev-only dependency
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    class TestSchedulerHypothesis:
+        @settings(max_examples=60, deadline=None)
+        @given(st.lists(st.tuples(st.integers(1, 5), st.integers(0, 8)),
+                        min_size=1, max_size=10),
+               st.integers(1, 5))
+        def test_no_token_lost_or_duplicated(self, specs, slots):
+            _run_property(specs, batch_slots=slots)
+else:                              # keep the skip visible in test reports
+    @pytest.mark.skip(reason="hypothesis not installed "
+                             "(see requirements-dev.txt)")
+    def test_no_token_lost_or_duplicated():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Real-model invariants (gemma2-2b-reduced: GLU, RMSNorm, softcap, and a
+# ring-buffer sliding-window cache on the local_attn layers)
+# ---------------------------------------------------------------------------
+
+MAX_LEN = 32
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("gemma2-2b").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0), stacked=True,
+                             dtype=jnp.float32)
+    return cfg, params
+
+
+_STEP_CACHE = {}
+
+
+def _steps(cfg, ctx_factory=None):
+    """Jitted (admit, decode, prefill), memoized per (arch, ctx) so repeated
+    _serve calls inside a test reuse compilations instead of re-jitting."""
+    key = (cfg.name, ctx_factory)
+    if key not in _STEP_CACHE:
+        _STEP_CACHE[key] = (
+            jax.jit(make_admit_step(cfg, ctx_factory=ctx_factory)),
+            jax.jit(make_decode_step(cfg, ctx_factory=ctx_factory)),
+            jax.jit(make_prefill_step(cfg, ctx_factory=ctx_factory)))
+    return _STEP_CACHE[key]
+
+
+def _serve(cfg, params, reqs, *, scheduler, kv_bits, batch_slots,
+           ctx_factory=None):
+    admit, decode, prefill = _steps(cfg, ctx_factory)
+
+    def init(b):
+        return tfm.init_cache(cfg, b, MAX_LEN, dtype=jnp.float32,
+                              kv_bits=kv_bits)
+
+    return serve(prefill, admit, decode, init, params, reqs,
+                 scheduler=scheduler, batch_slots=batch_slots)
+
+
+def _mk_reqs(rng, cfg, lens_quotas):
+    return [Request(rid=i,
+                    prompt=rng.randint(1, cfg.vocab_size, size=n)
+                    .astype(np.int32),
+                    max_new_tokens=q)
+            for i, (n, q) in enumerate(lens_quotas)]
+
+
+def _lane_bytes(cache, lane):
+    """Concatenated raw bytes of one batch lane across every cache leaf
+    (scan leaves carry batch on axis 1, tail leaves on axis 0)."""
+    parts = []
+    for c in cache["scan"]:
+        parts.extend(np.asarray(leaf[:, lane]).tobytes() for leaf in c)
+    for c in cache["tail"]:
+        parts.extend(np.asarray(leaf[lane]).tobytes() for leaf in c)
+    return b"".join(parts)
+
+
+class TestLaneInvariants:
+    @pytest.mark.parametrize("kv_bits", [16, 8])
+    def test_slot_insert_preserves_other_lanes(self, tiny, kv_bits):
+        """Admitting into lane 1 leaves lanes 0 and 2 BIT-IDENTICAL across
+        every cache leaf (k/v payloads, int8 scales, positions) — for the
+        f32 cache and the int8 QuantKVCache."""
+        cfg, params = tiny
+        admit, decode, _ = _steps(cfg)
+        B, T = 3, 6
+        rng = np.random.RandomState(1)
+        cache = tfm.init_cache(cfg, B, MAX_LEN, dtype=jnp.float32,
+                               kv_bits=kv_bits)
+        toks = rng.randint(1, cfg.vocab_size, size=(B, T)).astype(np.int32)
+        posm = np.tile(np.arange(T, dtype=np.int32), (B, 1))
+        logits, cache = admit(params, toks, posm,
+                              np.ones((B,), bool), cache)
+        cur = np.asarray(jnp.argmax(logits[:, -1:], -1), np.int32)
+        pos = np.full((B, 1), T, np.int32)
+        for _ in range(2):      # give lanes non-trivial decode state
+            logits, cache = decode(params, cur, pos, cache)
+            cur = np.asarray(jnp.argmax(logits, -1), np.int32)
+            pos = pos + 1
+        before = {i: _lane_bytes(cache, i) for i in range(B)}
+
+        toks2 = np.zeros((B, T), np.int32)
+        posm2 = np.full((B, T), -1, np.int32)
+        toks2[1, 2:] = rng.randint(1, cfg.vocab_size, size=4)
+        posm2[1, 2:] = np.arange(4)
+        _, cache2 = admit(params, toks2, posm2,
+                          np.asarray([False, True, False]), cache)
+        after = {i: _lane_bytes(cache2, i) for i in range(B)}
+        assert after[0] == before[0]
+        assert after[2] == before[2]
+        assert after[1] != before[1]            # the admitted lane changed
+
+    @pytest.mark.parametrize("kv_bits", [16, 8])
+    def test_short_prompt_packed_with_longer_matches_alone(self, tiny,
+                                                           kv_bits):
+        """The left-pad regression: a short prompt packed next to longer
+        ones must produce the same greedy tokens as serving it alone (pads
+        are dead cells — no attention, no cache writes, real positions)."""
+        cfg, params = tiny
+        rng = np.random.RandomState(2)
+        packed = _mk_reqs(rng, cfg, [(3, 6), (9, 6), (7, 6)])
+        alone = [Request(rid=r.rid, prompt=r.prompt,
+                         max_new_tokens=r.max_new_tokens) for r in packed]
+        _serve(cfg, params, packed, scheduler="static", kv_bits=kv_bits,
+               batch_slots=3)
+        for r in alone:
+            _serve(cfg, params, [r], scheduler="static", kv_bits=kv_bits,
+                   batch_slots=1)
+        for p, a in zip(packed, alone):
+            assert p.tokens_out == a.tokens_out, f"rid {p.rid}"
+
+    @pytest.mark.parametrize("kv_bits", [16, 8])
+    def test_continuous_matches_static_greedy(self, tiny, kv_bits):
+        """Scheduler parity on a skewed ragged workload that forces
+        mid-flight admissions and ring-buffer slot reuse (positions cross
+        the local_attn window)."""
+        cfg, params = tiny
+        rng = np.random.RandomState(3)
+        spec = [(5, 2), (9, 12), (3, 1), (7, 4), (4, 8), (6, 2)]
+        static = _mk_reqs(rng, cfg, spec)
+        cont = [Request(rid=r.rid, prompt=r.prompt,
+                        max_new_tokens=r.max_new_tokens) for r in static]
+        s_stats = _serve(cfg, params, static, scheduler="static",
+                         kv_bits=kv_bits, batch_slots=2)
+        c_stats = _serve(cfg, params, cont, scheduler="continuous",
+                         kv_bits=kv_bits, batch_slots=2)
+        for s, c in zip(static, cont):
+            assert s.tokens_out == c.tokens_out, f"rid {s.rid}"
+            assert c.done
+        assert c_stats.tokens_generated == s_stats.tokens_generated
+        assert c_stats.slot_utilization >= s_stats.slot_utilization
+
+    def test_no_recompiles_across_admissions(self, tiny):
+        """The jitted admit / decode steps trace exactly once for the whole
+        run even though requests with ragged prompts and skewed quotas are
+        admitted mid-flight (fixed shapes + traced slot data)."""
+        cfg, params = tiny
+        traces = {"admit": 0, "decode": 0}
+        base_admit = make_admit_step(cfg)
+        base_decode = make_decode_step(cfg)
+
+        def admit_fn(params, t, pm, m, c):
+            traces["admit"] += 1
+            return base_admit(params, t, pm, m, c)
+
+        def decode_fn(params, t, p, c):
+            traces["decode"] += 1
+            return base_decode(params, t, p, c)
+
+        admit_j = jax.jit(admit_fn)
+        decode_j = jax.jit(decode_fn)
+        rng = np.random.RandomState(4)
+        reqs = _mk_reqs(rng, cfg, [(4, 2), (6, 5), (2, 1), (5, 3), (3, 4)])
+        stats = serve_continuous(
+            lambda t, pm, m, c: admit_j(params, t, pm, m, c),
+            lambda t, p, c: decode_j(params, t, p, c),
+            lambda b: tfm.init_cache(cfg, b, MAX_LEN, dtype=jnp.float32),
+            reqs, batch_slots=2)
+        assert stats.prefill_calls >= 3         # several admission rounds
+        assert traces == {"admit": 1, "decode": 1}
+
+
+@pytest.mark.deploy
+class TestDeploySchedulerParity:
+    """Scheduler parity on the integer deployment path: packed int8 weights
+    + Pallas kernels, with the f32 cache and the int8 KV cache (fused
+    decode kernel). Mirrors the gemma_deploy setup in tests/test_deploy.py.
+    """
+
+    @pytest.fixture(scope="class")
+    def deployed(self):
+        from repro.core import Mode, QuantCtx, build_deploy, peg_policy
+        from repro.core.pipeline import ptq
+        cfg = get_config("gemma2-2b").reduced()
+        key = jax.random.PRNGKey(0)
+        params = tfm.init_params(cfg, key, stacked=True, dtype=jnp.float32)
+        pol = peg_policy(4)
+        flat = tfm.init_params(cfg, key, stacked=False, dtype=jnp.float32)
+        calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(10),
+                                               (2, 8), 0, cfg.vocab_size)}]
+
+        def fwd(p, b, ctx):
+            logits, _ = tfm.forward(cfg, p, b["tokens"], ctx=ctx)
+            return logits
+
+        qm = ptq(fwd, flat, calib, pol, collect_inputs=True)
+        shared = {}
+        for site, qp in qm.act_state.items():
+            base = ("layer/" + site.split("/", 1)[1]
+                    if site.startswith("layer") else site)
+            shared.setdefault(base, qp)
+        packed, acts = build_deploy(cfg, params, pol, shared)
+
+        def ctx_factory():
+            return QuantCtx(policy=pol, mode=Mode.DEPLOY, act_state=shared,
+                            deploy_acts=acts)
+        return cfg, packed, ctx_factory
+
+    @pytest.mark.parametrize("kv_bits", [16, 8])
+    def test_continuous_matches_static_int8(self, deployed, kv_bits):
+        cfg, packed, ctx_factory = deployed
+        rng = np.random.RandomState(5)
+        spec = [(4, 2), (8, 6), (3, 1), (6, 4)]
+        static = _mk_reqs(rng, cfg, spec)
+        cont = [Request(rid=r.rid, prompt=r.prompt,
+                        max_new_tokens=r.max_new_tokens) for r in static]
+        _serve(cfg, packed, static, scheduler="static", kv_bits=kv_bits,
+               batch_slots=2, ctx_factory=ctx_factory)
+        _serve(cfg, packed, cont, scheduler="continuous", kv_bits=kv_bits,
+               batch_slots=2, ctx_factory=ctx_factory)
+        for s, c in zip(static, cont):
+            assert s.tokens_out == c.tokens_out, f"rid {s.rid}"

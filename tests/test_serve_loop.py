@@ -1,21 +1,20 @@
 """Golden-output tests for runtime.serve_loop.serve_batch using a tiny
 deterministic stub model: next_token = (2 * token + 1) % VOCAB. Covers
-left-pad packing, per-request max_new_tokens (straggler off-by-one), the
-done-flag/decode accounting, and ServeStats bookkeeping."""
+left-pad packing (pads carry the -1 position sentinel), per-request
+max_new_tokens (straggler off-by-one), the done-flag/decode accounting, and
+ServeStats bookkeeping (peak cache bytes, slot utilization, per-request
+latency). The continuous scheduler's counterpart lives in
+tests/test_scheduler.py."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.runtime import Request, ServeStats, serve_batch
+from serve_testlib import golden as _golden
+from serve_testlib import next_arr as _next_arr
+from serve_testlib import onehot as _onehot
 
-VOCAB = 32
-
-
-def _next(tok: int) -> int:
-    return (2 * tok + 1) % VOCAB
-
-
-def _onehot(tokens):
-    return jnp.eye(VOCAB, dtype=jnp.float32)[jnp.asarray(tokens) % VOCAB]
+pytestmark = pytest.mark.serve
 
 
 class StubModel:
@@ -24,13 +23,15 @@ class StubModel:
 
     def __init__(self):
         self.prefill_tokens = []          # packed (B, T) matrices seen
+        self.prefill_positions = []       # packed (B, T) position maps seen
 
     def init_cache(self, batch):
         return {"steps": jnp.zeros((), jnp.int32),
                 "kv": jnp.zeros((batch, 4), jnp.float32)}
 
-    def prefill(self, tokens, cache):
+    def prefill(self, tokens, positions, cache):
         self.prefill_tokens.append(np.asarray(tokens))
+        self.prefill_positions.append(np.asarray(positions))
         logits = _onehot(_next_arr(np.asarray(tokens)))    # (B, T, V)
         return logits, cache
 
@@ -38,19 +39,6 @@ class StubModel:
         logits = _onehot(_next_arr(np.asarray(tokens)))    # (B, 1, V)
         cache = dict(cache, steps=cache["steps"] + 1)
         return logits, cache
-
-
-def _next_arr(toks):
-    return (2 * toks + 1) % VOCAB
-
-
-def _golden(prompt, n):
-    """Expected greedy continuation of length n."""
-    out, tok = [], int(prompt[-1])
-    for _ in range(n):
-        tok = _next(tok)
-        out.append(tok)
-    return out
 
 
 def _serve(requests, batch_slots=4):
@@ -81,6 +69,18 @@ class TestGoldenOutputs:
         np.testing.assert_array_equal(toks[1], [1, 2, 3])
         # padded request still decodes from ITS last prompt token
         assert reqs[0].tokens_out == _golden([7], 2)
+
+    def test_pad_positions_are_dead_cells(self):
+        """Pads carry the -1 position sentinel; real tokens get 0..len-1
+        regardless of padding (so attention/RoPE see the un-padded
+        request — the serve-alone-equivalence contract)."""
+        reqs = [Request(rid=0, prompt=np.asarray([7]), max_new_tokens=1),
+                Request(rid=1, prompt=np.asarray([1, 2, 3]),
+                        max_new_tokens=1)]
+        m, _ = _serve(reqs)
+        posm = m.prefill_positions[0]
+        np.testing.assert_array_equal(posm[0], [-1, -1, 0])
+        np.testing.assert_array_equal(posm[1], [0, 1, 2])
 
     def test_groups_split_by_batch_slots(self):
         reqs = [Request(rid=i, prompt=np.asarray([i + 1]), max_new_tokens=3)
@@ -146,6 +146,8 @@ class TestStatsAccounting:
         assert stats.tokens_per_s > 0
         # the stub cache: one int32 scalar + (4, 4) f32 = 4 + 64 bytes
         assert stats.cache_bytes == 4 + 4 * 4 * 4
+        # uniform quotas, full group: every decode cell is occupied
+        assert stats.slot_utilization == 1.0
 
     def test_cache_bytes_tracks_peak_group(self):
         reqs = [Request(rid=0, prompt=np.asarray([1]), max_new_tokens=1),
@@ -153,3 +155,49 @@ class TestStatsAccounting:
                 Request(rid=2, prompt=np.asarray([3]), max_new_tokens=1)]
         _, stats = _serve(reqs, batch_slots=2)    # groups of 2 then 1
         assert stats.cache_bytes == 4 + 2 * 4 * 4  # the B=2 group dominates
+
+    def test_cache_bytes_tracks_peak_live_cache(self):
+        """cache_bytes reflects the largest LIVE cache at any point in the
+        run, not just the init_cache_fn snapshot (a model whose cache grows
+        while serving is measured at its peak)."""
+        class GrowingStub(StubModel):
+            def decode(self, tokens, pos, cache):
+                logits, cache = super().decode(tokens, pos, cache)
+                n = int(cache["steps"])
+                cache = dict(cache,
+                             kv=jnp.zeros((tokens.shape[0], 4 + 4 * n),
+                                          jnp.float32))
+                return logits, cache
+
+        m = GrowingStub()
+        reqs = [Request(rid=0, prompt=np.asarray([3]), max_new_tokens=4)]
+        stats = serve_batch(m.prefill, m.decode, m.init_cache, reqs,
+                            batch_slots=1)
+        # 3 decode steps -> final kv is (1, 16) f32 = 64 bytes + 4 scalar
+        assert stats.cache_bytes == 4 + 16 * 4
+
+    def test_slot_utilization_drops_on_skewed_quotas(self):
+        """Static lockstep: in a group of {1, 5} quotas the 1-quota lane is
+        already retired (its token came from prefill) for all 4 decode
+        steps -> 4 of 8 cells occupied."""
+        reqs = [Request(rid=0, prompt=np.asarray([3]), max_new_tokens=1),
+                Request(rid=1, prompt=np.asarray([4]), max_new_tokens=5)]
+        _, stats = _serve(reqs, batch_slots=2)
+        assert stats.decode_steps == 4
+        assert stats.slot_utilization == pytest.approx(4 / 8)
+
+    def test_request_latency_records_first_and_finish(self):
+        """Model-call steps: prefill is step 1, decode d is step 1 + d.
+        Group 2's requests see their queueing delay in first_token_step."""
+        reqs = [Request(rid=0, prompt=np.asarray([3]), max_new_tokens=3),
+                Request(rid=1, prompt=np.asarray([4]), max_new_tokens=1)]
+        _, stats = _serve(reqs, batch_slots=1)
+        lat0 = stats.request_latency[0]
+        lat1 = stats.request_latency[1]
+        assert (lat0.first_token_step, lat0.finish_step) == (1, 3)
+        # request 1 waits for group 1: its prefill is model-call 4
+        assert (lat1.first_token_step, lat1.finish_step) == (4, 4)
+        # zero-quota requests never enter the latency map
+        zq = [Request(rid=9, prompt=np.asarray([3]), max_new_tokens=0)]
+        _, stats = _serve(zq)
+        assert 9 not in stats.request_latency
