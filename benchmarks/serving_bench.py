@@ -16,6 +16,14 @@ and the int8 QuantKVCache (``kv_bits=8``, dynamic per-slot scales +
 as part of the bench — a speedup with diverging tokens would be a bug, not
 a result.
 
+A second section benches PAGED vs dense caches on a skewed-LENGTH
+workload (most requests short, a few long): dense lanes must each carry
+the worst-case ``max_len`` segment, so peak cache bytes are
+``batch_slots x max_len`` regardless of what is actually live, while the
+block pool (``runtime.block_pool``) maps blocks per LIVE token — the
+paged rows record peak allocated bytes + tokens/s for both the f32 and
+int8 block pools, with paged == dense greedy parity asserted in-bench.
+
 ``python -m benchmarks.serving_bench`` (or benchmarks/run.py --sections
 serving) also writes machine-readable ``BENCH_serving.json``.
 """
@@ -29,7 +37,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as tfm
-from repro.runtime import Request, serve
+from repro.runtime import BlockPool, Request, blocks_for_tokens, serve
 from repro.runtime.steps import (make_admit_step, make_decode_step,
                                  make_prefill_step)
 
@@ -42,6 +50,15 @@ SHORT_QUOTA = 4
 LONG_QUOTA = 96
 MAX_LEN = 128
 REPEATS = 3          # timed repeats; best tokens/s wins (CPU wall jitter)
+
+# paged-vs-dense section: skewed LENGTHS — every 4th request is long, so
+# dense worst-case sizing (every lane carries PAGED_MAX_LEN slots) is ~4x
+# the live footprint the block pool actually maps
+PAGED_BLOCK_SIZE = 8
+PAGED_MAX_LEN = 96
+PAGED_SHORT = (6, 10)        # (prompt_len, quota) for short requests
+PAGED_LONG = (48, 40)
+PAGED_NUM_BLOCKS = 40        # vs dense worst case 8 * ceil(96/8) = 96
 
 
 def _requests(cfg):
@@ -115,18 +132,118 @@ def bench():
         stat, cont = rows[-2], rows[-1]
         cont["speedup_vs_static"] = round(
             cont["tokens_per_s"] / max(stat["tokens_per_s"], 1e-9), 2)
+    rows += bench_paged()
+    return rows
+
+
+def _paged_requests(cfg):
+    rng = np.random.RandomState(1)
+    reqs = []
+    for i in range(N_REQUESTS):
+        plen, quota = PAGED_LONG if i % 4 == 3 else PAGED_SHORT
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.randint(1, cfg.vocab_size, size=plen)
+            .astype(np.int32),
+            max_new_tokens=quota))
+    return reqs
+
+
+def bench_paged():
+    """Paged vs dense caches, continuous scheduler, skewed-length
+    workload. Records peak cache bytes (dense: the whole pytree; paged:
+    allocated blocks only) + tokens/s for f32 and int8 pools."""
+    cfg = get_config("gemma2-2b").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0), stacked=True,
+                             dtype=jnp.float32)
+    nb_lane = blocks_for_tokens(PAGED_MAX_LEN, PAGED_BLOCK_SIZE)
+    rows = []
+    for kv_bits in (16, 8):
+        steps = (jax.jit(make_admit_step(cfg), donate_argnums=(4,)),
+                 jax.jit(make_decode_step(cfg), donate_argnums=(3,)),
+                 jax.jit(make_prefill_step(cfg)))
+        admit, decode, prefill = steps
+
+        def run(reqs, paged):
+            pool = None
+            if paged:
+                pool = BlockPool(PAGED_NUM_BLOCKS, PAGED_BLOCK_SIZE,
+                                 BATCH_SLOTS, nb_lane)
+
+            def init(b):
+                if not paged:
+                    return tfm.init_cache(cfg, b, PAGED_MAX_LEN,
+                                          dtype=jnp.float32,
+                                          kv_bits=kv_bits)
+                return tfm.init_cache(cfg, b, PAGED_MAX_LEN,
+                                      dtype=jnp.float32, kv_bits=kv_bits,
+                                      paged=True,
+                                      block_size=PAGED_BLOCK_SIZE,
+                                      num_blocks=PAGED_NUM_BLOCKS,
+                                      mapped=False)
+            return serve(prefill, admit, decode, init, params, reqs,
+                         scheduler="continuous", batch_slots=BATCH_SLOTS,
+                         max_len=PAGED_MAX_LEN, block_pool=pool)
+
+        def warm(paged):
+            reqs = [Request(rid=0, prompt=np.ones(4, np.int32),
+                            max_new_tokens=2) for _ in range(BATCH_SLOTS)]
+            run(reqs, paged)
+
+        outs = {}
+        for paged in (False, True):
+            warm(paged)
+            stats = None
+            for _ in range(REPEATS):
+                reqs = _paged_requests(cfg)
+                s = run(reqs, paged)
+                if stats is None or s.tokens_per_s > stats.tokens_per_s:
+                    stats = s
+            name = "paged" if paged else "dense"
+            outs[name] = [r.tokens_out for r in reqs]
+            rows.append({
+                "name": f"serve_{name}_cache_kv{kv_bits}",
+                "cache": name,
+                "kv_bits": kv_bits,
+                "batch_slots": BATCH_SLOTS,
+                "requests": N_REQUESTS,
+                "prompt_lens": [PAGED_SHORT[0], PAGED_LONG[0]],
+                "quotas": [PAGED_SHORT[1], PAGED_LONG[1]],
+                "max_len": PAGED_MAX_LEN,
+                "tokens": stats.tokens_generated,
+                "decode_steps": stats.decode_steps,
+                "wall_s": round(stats.wall_s, 3),
+                "tokens_per_s": round(stats.tokens_per_s, 1),
+                "slot_utilization": round(stats.slot_utilization, 3),
+                "peak_cache_bytes": stats.cache_bytes,
+                **({"block_size": PAGED_BLOCK_SIZE,
+                    "num_blocks": PAGED_NUM_BLOCKS,
+                    "peak_blocks_in_use": stats.blocks_in_use,
+                    "block_fragmentation":
+                        round(stats.block_fragmentation, 3)}
+                   if paged else {}),
+            })
+        assert outs["dense"] == outs["paged"], \
+            "paged == dense greedy parity violated under benchmark workload"
+        dense_row, paged_row = rows[-2], rows[-1]
+        paged_row["cache_bytes_vs_dense"] = round(
+            paged_row["peak_cache_bytes"]
+            / max(dense_row["peak_cache_bytes"], 1), 3)
     return rows
 
 
 def report(rows) -> str:
     hdr = ("name,kv_bits,tokens,decode_steps,wall_s,tokens_per_s,"
-           "slot_utilization,speedup_vs_static")
+           "slot_utilization,peak_cache_bytes,speedup_vs_static,"
+           "cache_bytes_vs_dense")
     lines = [hdr]
     for r in rows:
         lines.append(
             f"{r['name']},{r['kv_bits']},{r['tokens']},{r['decode_steps']},"
             f"{r['wall_s']},{r['tokens_per_s']},{r['slot_utilization']},"
-            f"{r.get('speedup_vs_static', '')}")
+            f"{r.get('peak_cache_bytes', '')},"
+            f"{r.get('speedup_vs_static', '')},"
+            f"{r.get('cache_bytes_vs_dense', '')}")
     return "\n".join(lines)
 
 

@@ -1,9 +1,15 @@
 #!/usr/bin/env bash
 # Tier-1 verify (see ROADMAP.md): the full fast test suite from the repo
-# root with src/ on the path. Extra args pass through to pytest, e.g.
-#   scripts/tier1.sh -m deploy        # just the integer-deployment tests
-#   scripts/tier1.sh -m serve         # serving-runtime scheduler tests
+# root with src/ on the path. Extra args pass through to pytest verbatim,
+# including combined marker selections (quote the expression):
+#   scripts/tier1.sh -m deploy              # integer-deployment tests
+#   scripts/tier1.sh -m serve               # serving-runtime schedulers
+#   scripts/tier1.sh -m paged               # paged KV-cache subsystem
+#   scripts/tier1.sh -m "deploy or serve"   # combined selection
 #   scripts/tier1.sh -m "not slow"
+# The marker set is documented in pytest.ini.
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"
+# ${1+"$@"} (not bare "$@") keeps zero-arg invocations safe under set -u
+# on pre-4.4 bash, so marker-less and marker-combined runs both work.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q ${1+"$@"}

@@ -27,6 +27,19 @@ Module map (which kernel serves which paper equation):
                    schedule: the S grid is walked twice because the online-
                    softmax denominator only exists after the last chunk).
                    Halves decode-time cache HBM bytes vs bf16.
+  paged_attend_decode — block-PAGED twins of the decode attention paths
+                   (``paged_attend_decode`` bf16/f32,
+                   ``paged_int8_attend_decode`` int8 with the same Fig.-1
+                   site treatment / eq.-(3)-style zero-point corrections as
+                   int8_attend_decode). The grid walks each lane's logical
+                   blocks; the block table rides as a scalar-prefetch
+                   operand so every K/V DMA targets the lane's *physical*
+                   arena block, and cell validity is DERIVED from (logical
+                   index, q_pos) — stale cells of reallocated blocks are
+                   unreadable by construction. This is the deployment
+                   payoff squared: int8 halves bytes per token, paging
+                   makes bytes proportional to live tokens
+                   (runtime/block_pool.py, BENCH_serving.json paged rows).
 
 Simulate vs deploy: the ``*_fake_quant`` variants back ``Mode.APPLY`` / QAT
 (f32 in, f32 out — quantization error only); the emitting variants back

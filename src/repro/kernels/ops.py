@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from repro.kernels import fused_ln_quant as _lnq
 from repro.kernels import int8_attend_decode as _iad
 from repro.kernels import int8_matmul as _imm
+from repro.kernels import paged_attend_decode as _pad
 from repro.kernels import peg_quant as _peg
 from repro.kernels import ref as _ref
 
@@ -186,6 +187,78 @@ def int8_attend_decode(q_q, q_scale, k_q, k_scale, v_q, v_scale, k_pos,
         window=window, logit_softcap=logit_softcap, sm_quant=sm_quant,
         sm_qmin=sm_qmin, sm_qmax=sm_qmax, smo_quant=smo_quant,
         smo_qmin=smo_qmin, smo_qmax=smo_qmax, chunk=c,
+        interpret=_interp(interpret))
+
+
+# ---------------------------------------------------------------------------
+# Paged KV-cache decode attention (block-pool serving path)
+# ---------------------------------------------------------------------------
+
+def _lane_blocks(block_table, s_cap, block_size):
+    """Slice the table to the logical blocks this layer can touch: a
+    sliding-window layer's capacity (s_cap = min(max_len, window)) needs
+    only the first ceil(s_cap / bs) columns, so its kernel grid never walks
+    (or DMAs) blocks only global layers use."""
+    nb = -(-s_cap // block_size)
+    return block_table[:, :nb]
+
+
+@functools.partial(jax.jit, static_argnames=("s_cap", "window",
+                                             "logit_softcap", "sm_qmin",
+                                             "sm_qmax", "smo_qmin",
+                                             "smo_qmax", "interpret"))
+def paged_attend_decode(q, k_arena, v_arena, block_table, q_pos, *,
+                        s_cap: int, window: Optional[int] = None,
+                        logit_softcap: Optional[float] = None,
+                        sm_quant=None, sm_qmin: int = 0, sm_qmax: int = 255,
+                        smo_quant=None, smo_qmin: int = 0,
+                        smo_qmax: int = 255,
+                        interpret: Optional[bool] = None):
+    """Decode attention over a paged bf16/f32 KV cache (see
+    paged_attend_decode.py). q (B, KV, G, hd) with the attention scale
+    folded in; arenas (N, bs, KV, hd); block_table (B, nb) int32; q_pos
+    (B,) int32 (-1 = idle lane). ``s_cap`` is the layer's logical capacity.
+    Returns (B, KV, G, hd) f32.
+    """
+    return _pad.paged_attend_decode(
+        q, k_arena, v_arena,
+        _lane_blocks(block_table, s_cap, k_arena.shape[1]), q_pos,
+        s_cap=s_cap, window=window, logit_softcap=logit_softcap,
+        sm_quant=sm_quant, sm_qmin=sm_qmin, sm_qmax=sm_qmax,
+        smo_quant=smo_quant, smo_qmin=smo_qmin, smo_qmax=smo_qmax,
+        interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("s_cap", "window",
+                                             "logit_softcap", "sm_qmin",
+                                             "sm_qmax", "smo_qmin",
+                                             "smo_qmax", "interpret"))
+def paged_int8_attend_decode(q_q, q_scale, k_arena, k_scale, v_arena,
+                             v_scale, block_table, q_pos, *, s_cap: int,
+                             q_zp=None, k_zp=None, v_zp=None,
+                             window: Optional[int] = None,
+                             logit_softcap: Optional[float] = None,
+                             sm_quant=None, sm_qmin: int = 0,
+                             sm_qmax: int = 255, smo_quant=None,
+                             smo_qmin: int = 0, smo_qmax: int = 255,
+                             interpret: Optional[bool] = None):
+    """Decode attention over a paged int8 KV cache — the paged twin of
+    :func:`int8_attend_decode` (same zero-point handling; scales traced).
+    k_arena/v_arena (N, bs, KV, hd) int8; k_scale/v_scale (N, bs, KV) f32.
+    Returns (B, KV, G, hd) f32.
+    """
+    if q_zp is None:
+        q_zp = jnp.zeros_like(q_scale)
+    if k_zp is None:
+        k_zp = jnp.zeros(q_scale.shape[:2], jnp.float32)
+    if v_zp is None:
+        v_zp = jnp.zeros(q_scale.shape[:2], jnp.float32)
+    return _pad.paged_int8_attend_decode(
+        q_q, q_scale, q_zp, k_zp, v_zp, k_arena, k_scale, v_arena, v_scale,
+        _lane_blocks(block_table, s_cap, k_arena.shape[1]), q_pos,
+        s_cap=s_cap, window=window, logit_softcap=logit_softcap,
+        sm_quant=sm_quant, sm_qmin=sm_qmin, sm_qmax=sm_qmax,
+        smo_quant=smo_quant, smo_qmin=smo_qmin, smo_qmax=smo_qmax,
         interpret=_interp(interpret))
 
 

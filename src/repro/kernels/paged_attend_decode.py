@@ -1,0 +1,311 @@
+"""Pallas TPU kernels: decode attention over a BLOCK-PAGED KV cache.
+
+The paged serving cache (models/attention.py: ``PagedKVCache`` /
+``PagedQuantKVCache``) stores each layer's K/V as one shared arena of
+``num_blocks`` blocks of ``block_size`` token cells — no batch axis; a
+``(B, nb)`` int32 block table (-1 = unmapped) says which physical blocks
+back which decode lane. These kernels are the paged twins of the dense
+decode paths: same online-softmax accumulation, GQA layout, sliding-window
+/ soft-capping semantics, in-kernel ``softmax_in`` / ``softmax_out``
+fake-quant sites (the latter via the same two-pass S schedule), and — for
+the int8 variant — the same zero-point rowsum/colsum corrections as
+``int8_attend_decode``.
+
+Two things are paged-specific:
+
+* **Block gather via scalar prefetch.** The grid's last axis walks the
+  lane's logical blocks; the block table rides in SMEM as a scalar-prefetch
+  operand so each K/V BlockSpec index map picks the *physical* arena block
+  ``table[b, step]`` for the DMA. Unmapped entries clip to block 0 and are
+  fully masked, so only mapped blocks contribute.
+
+* **Derived positions.** Cell validity is NOT read from stored per-cell
+  positions (a freshly grown block may carry a previous owner's stale
+  cells). Because a lane writes positions 0..q_pos contiguously and cell
+  ``L`` of the logical view holds position ``p = q_pos - ((q_pos - L) mod
+  S)`` (S = the layer's logical capacity, ``min(max_len, window)`` for
+  ring layers), the kernel reconstructs every position from (L, q_pos, S)
+  alone: ``valid = (L < S) & (p >= 0) [& window]``. Stale cells derive
+  ``p < 0`` or ``L >= S`` and can never be read — allocation order, not
+  memset, provides isolation. An idle lane (q_pos = -1) derives an
+  all-invalid mask and contributes nothing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(*refs, nb: int, bs: int, s_cap: int,
+                  window: Optional[int], logit_softcap: Optional[float],
+                  quantized: bool, has_smq: bool, has_smo: bool,
+                  sm_qmin: int, sm_qmax: int, smo_qmin: int, smo_qmax: int):
+    refs = list(refs)
+    tbl_ref = refs.pop(0)                   # (B, nb) scalar-prefetch
+    qp_ref = refs.pop(0)                    # (B,)   scalar-prefetch
+    smq_ref = refs.pop(0) if has_smq else None
+    smo_ref = refs.pop(0) if has_smo else None
+    if quantized:
+        (q_ref, qs_ref, qz_ref, kz_ref, vz_ref, k_ref, ks_ref, v_ref,
+         vs_ref, o_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref) = refs
+
+    b = pl.program_id(0)
+    kk = pl.program_id(2)
+    blk = jax.lax.rem(kk, nb)               # logical block (2-pass folds)
+
+    @pl.when(kk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # logits for this block (recomputed in the second pass when two-pass)
+    k = k_ref[0, :, 0, :]                              # (bs, hd)
+    if quantized:
+        q = q_ref[0, 0]                                # (G, hd) int8
+        hd = q.shape[-1]
+        s32 = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        # zero-point corrections, identical to int8_attend_decode:
+        #   sum (q - zq)(k - zk) = q.k - zq colsum(k) - zk rowsum(q)
+        #                          + hd zq zk
+        zq = qz_ref[0, 0][:, None]                     # (G, 1)
+        zk = kz_ref[0, 0]                              # scalar (this head)
+        kcol = jnp.sum(k.astype(jnp.int32), axis=-1).astype(jnp.float32)
+        qrow = jnp.sum(q.astype(jnp.int32), axis=-1).astype(jnp.float32)
+        acc32 = (s32.astype(jnp.float32) - zq * kcol[None, :]
+                 - zk * qrow[:, None] + hd * zq * zk)
+        s = (acc32 * qs_ref[0, 0][:, None]
+             * ks_ref[0, :, 0][None, :])               # (G, bs)
+    else:
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, hd), scale folded
+        s = jax.lax.dot_general(q, k.astype(jnp.float32),
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    if has_smq:
+        sm_s = smq_ref[0]
+        sm_z = smq_ref[1]
+        sq = jnp.clip(jnp.round(s / sm_s) + sm_z, sm_qmin, sm_qmax)
+        s = (sq - sm_z) * sm_s
+
+    # derived positions: cell L of the logical view holds position
+    # q_pos - ((q_pos - L) mod S) — exact for written cells, invalid
+    # (p < 0 or L >= S) for everything a lane has not written.
+    qp = qp_ref[b]
+    cell = jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    L = blk * bs + cell                                # (1, bs)
+    p = qp - jnp.mod(qp - L, s_cap)
+    valid = (L < s_cap) & (p >= 0) & (tbl_ref[b, blk] >= 0)
+    if window is not None:
+        valid &= p > qp - window
+    s = jnp.where(valid, s, NEG_INF)                   # (1,bs) -> (G,bs)
+
+    def _pv(pmat):
+        """p @ V with the variant's dequant: per-slot v scales + static
+        zero-point row correction for int8, plain f32 for bf16."""
+        vblk = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:
+            pv = pmat * vs_ref[0, :, 0][None, :]
+            zv = vz_ref[0, 0]
+            return (jax.lax.dot_general(pv, vblk, (((1,), (0,)), ((), ())))
+                    - zv * jnp.sum(pv, axis=-1)[:, None])
+        return jax.lax.dot_general(pmat, vblk, (((1,), (0,)), ((), ())))
+
+    @pl.when(kk < nb)
+    def _stats_pass():
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(jnp.maximum(m_prev, jnp.max(s, axis=-1)),
+                            NEG_INF)
+        pmat = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        m_ref[:, 0] = m_new
+        l_ref[:, 0] = l_ref[:, 0] * corr + jnp.sum(pmat, axis=-1)
+        if not has_smo:
+            acc_ref[...] = acc_ref[...] * corr[:, None] + _pv(pmat)
+
+    if has_smo:
+        @pl.when(kk >= nb)
+        def _emit_pass():
+            # second pass: (m, l) final — quantize the normalized probs on
+            # the softmax_out grid (not renormalized, as in simulate).
+            pmat = jnp.exp(s - m_ref[:, 0][:, None]) / \
+                jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+            so_s = smo_ref[0]
+            so_z = smo_ref[1]
+            pq = jnp.clip(jnp.round(pmat / so_s) + so_z, smo_qmin, smo_qmax)
+            pmat = (pq - so_z) * so_s
+            acc_ref[...] += _pv(pmat)
+
+        @pl.when(kk == 2 * nb - 1)
+        def _done_two_pass():
+            o_ref[0, 0] = acc_ref[...]
+    else:
+        @pl.when(kk == nb - 1)
+        def _done():
+            o_ref[0, 0] = acc_ref[...] / \
+                jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+
+
+def _paged_call(kernel_operands, in_specs, *, b, kv, g, hd, nb, bs, s_cap,
+                window, logit_softcap, quantized, sm_quant, smo_quant,
+                sm_qmin, sm_qmax, smo_qmin, smo_qmax, block_table, q_pos,
+                interpret):
+    has_smq = sm_quant is not None
+    has_smo = smo_quant is not None
+    n_steps = 2 * nb if has_smo else nb
+    operands = []
+    specs = []
+    if has_smq:
+        operands.append(sm_quant.astype(jnp.float32))
+        specs.append(pl.BlockSpec((2,), lambda i, j, kk, tbl, qp: (0,)))
+    if has_smo:
+        operands.append(smo_quant.astype(jnp.float32))
+        specs.append(pl.BlockSpec((2,), lambda i, j, kk, tbl, qp: (0,)))
+    operands += kernel_operands
+    specs += in_specs
+    kernel = functools.partial(
+        _paged_kernel, nb=nb, bs=bs, s_cap=s_cap, window=window,
+        logit_softcap=logit_softcap, quantized=quantized, has_smq=has_smq,
+        has_smo=has_smo, sm_qmin=sm_qmin, sm_qmax=sm_qmax,
+        smo_qmin=smo_qmin, smo_qmax=smo_qmax)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kv, n_steps),
+        in_specs=specs,
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda i, j, kk, tbl, qp: (i, j, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),   # running max
+                        pltpu.VMEM((g, 1), jnp.float32),   # running denom
+                        pltpu.VMEM((g, hd), jnp.float32)])  # numerator
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), jnp.float32),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(jnp.asarray(block_table, jnp.int32), jnp.asarray(q_pos, jnp.int32),
+      *operands)
+
+
+def _arena_maps(nb, has_smo):
+    """K/V arena index maps: physical block = table[lane, logical step];
+    the two-pass schedule re-walks K while V pins to the first block during
+    the stats pass (fetched once per program there), exactly as in
+    int8_attend_decode. Unmapped (-1) entries clip to block 0 — their cells
+    all derive invalid, so the garbage is masked."""
+    if has_smo:
+        ck = lambda kk: jax.lax.rem(kk, nb)
+        cv = lambda kk: jnp.maximum(kk - nb, 0)
+    else:
+        ck = cv = lambda kk: kk
+    k_map = lambda i, j, kk, tbl, qp: (jnp.maximum(tbl[i, ck(kk)], 0),
+                                       0, j, 0)
+    v_map = lambda i, j, kk, tbl, qp: (jnp.maximum(tbl[i, cv(kk)], 0),
+                                       0, j, 0)
+    ks_map = lambda i, j, kk, tbl, qp: (jnp.maximum(tbl[i, ck(kk)], 0), 0, j)
+    vs_map = lambda i, j, kk, tbl, qp: (jnp.maximum(tbl[i, cv(kk)], 0), 0, j)
+    return k_map, v_map, ks_map, vs_map
+
+
+def paged_attend_decode(q: jnp.ndarray, k_arena: jnp.ndarray,
+                        v_arena: jnp.ndarray, block_table: jnp.ndarray,
+                        q_pos: jnp.ndarray, *, s_cap: int,
+                        window: Optional[int] = None,
+                        logit_softcap: Optional[float] = None,
+                        sm_quant: Optional[jnp.ndarray] = None,
+                        sm_qmin: int = 0, sm_qmax: int = 255,
+                        smo_quant: Optional[jnp.ndarray] = None,
+                        smo_qmin: int = 0, smo_qmax: int = 255,
+                        interpret: bool = False) -> jnp.ndarray:
+    """One decode step over a paged bf16/f32 KV cache.
+
+    q: (B, KV, G, hd) queries grouped per kv head, attention scale already
+    folded in; k_arena/v_arena: (N, bs, KV, hd) shared arenas; block_table:
+    (B, nb) int32 physical block per logical block (-1 = unmapped), where
+    ``nb * bs`` covers ``s_cap`` (the layer's logical capacity =
+    min(max_len, window) for ring layers); q_pos: (B,) query positions
+    (-1 = idle lane -> zero contribution). Returns (B, KV, G, hd) f32.
+    """
+    b, kv, g, hd = q.shape
+    bs = k_arena.shape[1]
+    nb = block_table.shape[1]
+    assert nb * bs >= s_cap, f"table covers {nb * bs} < s_cap={s_cap}"
+    k_map, v_map, _, _ = _arena_maps(nb, smo_quant is not None)
+    operands = [q.astype(jnp.float32), k_arena, v_arena]
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd),
+                     lambda i, j, kk, tbl, qp: (i, j, 0, 0)),      # q
+        pl.BlockSpec((1, bs, 1, hd), k_map),                       # k arena
+        pl.BlockSpec((1, bs, 1, hd), v_map),                       # v arena
+    ]
+    return _paged_call(
+        operands, in_specs, b=b, kv=kv, g=g, hd=hd, nb=nb, bs=bs,
+        s_cap=s_cap, window=window, logit_softcap=logit_softcap,
+        quantized=False, sm_quant=sm_quant, smo_quant=smo_quant,
+        sm_qmin=sm_qmin, sm_qmax=sm_qmax, smo_qmin=smo_qmin,
+        smo_qmax=smo_qmax, block_table=block_table, q_pos=q_pos,
+        interpret=interpret)
+
+
+def paged_int8_attend_decode(q_q: jnp.ndarray, q_scale: jnp.ndarray,
+                             q_zp: jnp.ndarray, k_zp: jnp.ndarray,
+                             v_zp: jnp.ndarray, k_arena: jnp.ndarray,
+                             k_scale: jnp.ndarray, v_arena: jnp.ndarray,
+                             v_scale: jnp.ndarray,
+                             block_table: jnp.ndarray,
+                             q_pos: jnp.ndarray, *, s_cap: int,
+                             window: Optional[int] = None,
+                             logit_softcap: Optional[float] = None,
+                             sm_quant: Optional[jnp.ndarray] = None,
+                             sm_qmin: int = 0, sm_qmax: int = 255,
+                             smo_quant: Optional[jnp.ndarray] = None,
+                             smo_qmin: int = 0, smo_qmax: int = 255,
+                             interpret: bool = False) -> jnp.ndarray:
+    """One decode step over a paged int8 KV cache (the paged twin of
+    :func:`repro.kernels.int8_attend_decode.int8_attend_decode`).
+
+    q_q: (B, KV, G, hd) int8; q_scale/q_zp: (B, KV, G) f32 (attention scale
+    folded into q_scale; zero-points corrected in-kernel from rowsum/colsum
+    scalars); k_zp/v_zp: (B, KV) f32 static per-head cache-grid zero-points;
+    k_arena/v_arena: (N, bs, KV, hd) int8 arenas; k_scale/v_scale:
+    (N, bs, KV) f32 per-head per-cell scales; block_table/q_pos as in
+    :func:`paged_attend_decode`. Returns (B, KV, G, hd) f32.
+    """
+    b, kv, g, hd = q_q.shape
+    bs = k_arena.shape[1]
+    nb = block_table.shape[1]
+    assert nb * bs >= s_cap, f"table covers {nb * bs} < s_cap={s_cap}"
+    k_map, v_map, ks_map, vs_map = _arena_maps(nb, smo_quant is not None)
+    operands = [q_q, q_scale.astype(jnp.float32), q_zp.astype(jnp.float32),
+                k_zp.astype(jnp.float32), v_zp.astype(jnp.float32),
+                k_arena, k_scale.astype(jnp.float32), v_arena,
+                v_scale.astype(jnp.float32)]
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd),
+                     lambda i, j, kk, tbl, qp: (i, j, 0, 0)),      # q_q
+        pl.BlockSpec((1, 1, g), lambda i, j, kk, tbl, qp: (i, j, 0)),  # q_s
+        pl.BlockSpec((1, 1, g), lambda i, j, kk, tbl, qp: (i, j, 0)),  # q_z
+        pl.BlockSpec((1, 1), lambda i, j, kk, tbl, qp: (i, j)),        # k_z
+        pl.BlockSpec((1, 1), lambda i, j, kk, tbl, qp: (i, j)),        # v_z
+        pl.BlockSpec((1, bs, 1, hd), k_map),                       # k arena
+        pl.BlockSpec((1, bs, 1), ks_map),                          # k scales
+        pl.BlockSpec((1, bs, 1, hd), v_map),                       # v arena
+        pl.BlockSpec((1, bs, 1), vs_map),                          # v scales
+    ]
+    return _paged_call(
+        operands, in_specs, b=b, kv=kv, g=g, hd=hd, nb=nb, bs=bs,
+        s_cap=s_cap, window=window, logit_softcap=logit_softcap,
+        quantized=True, sm_quant=sm_quant, smo_quant=smo_quant,
+        sm_qmin=sm_qmin, sm_qmax=sm_qmax, smo_qmin=smo_qmin,
+        smo_qmax=smo_qmax, block_table=block_table, q_pos=q_pos,
+        interpret=interpret)

@@ -140,6 +140,93 @@ def int8_attend_decode_ref(q_q, q_scale, k_q, k_scale, v_q, v_scale, k_pos,
     return jnp.einsum("bkgs,bskd->bkgd", p, vh)
 
 
+def paged_positions_ref(block_table, q_pos, *, s_cap, block_size):
+    """Derived key positions (B, nb*bs) of a block-paged lane.
+
+    A lane writes positions 0..q_pos contiguously, so logical cell ``L``
+    holds position ``p = q_pos - ((q_pos - L) mod S)`` when that is >= 0
+    (and L < S); everything else — unwritten cells, stale cells of freshly
+    grown blocks, unmapped blocks, idle lanes (q_pos = -1) — derives -1.
+    This is the validity rule both paged kernels implement.
+    """
+    nb = block_table.shape[1]
+    L = jnp.arange(nb * block_size, dtype=jnp.int32)[None, :]
+    qp = jnp.asarray(q_pos, jnp.int32)[:, None]
+    p = qp - jnp.mod(qp - L, s_cap)
+    mapped = jnp.repeat(block_table >= 0, block_size, axis=1)
+    valid = (L < s_cap) & (p >= 0) & mapped
+    return jnp.where(valid, p, -1)
+
+
+def paged_gather_ref(arena, block_table):
+    """(N, bs, ...) arena + (B, nb) block table -> (B, nb*bs, ...) dense
+    per-lane view (unmapped blocks gather block 0's payload — callers mask
+    with :func:`paged_positions_ref`)."""
+    phys = jnp.clip(block_table, 0, arena.shape[0] - 1)
+    g = arena[phys]                                    # (B, nb, bs, ...)
+    return g.reshape(g.shape[0], -1, *arena.shape[2:])
+
+
+def paged_attend_decode_ref(q, k_arena, v_arena, block_table, q_pos, *,
+                            s_cap, window=None, logit_softcap=None,
+                            sm_quant=None, sm_qmin=0, sm_qmax=255,
+                            smo_quant=None, smo_qmin=0, smo_qmax=255):
+    """Gather-then-attend oracle for the paged bf16/f32 decode kernel.
+
+    q: (B, KV, G, hd) with the attention scale folded in; arenas
+    (N, bs, KV, hd); block_table (B, nb); q_pos (B,). Returns
+    (B, KV, G, hd) f32.
+    """
+    bs = k_arena.shape[1]
+    k = paged_gather_ref(k_arena, block_table).astype(jnp.float32)
+    v = paged_gather_ref(v_arena, block_table).astype(jnp.float32)
+    kp = paged_positions_ref(block_table, q_pos, s_cap=s_cap,
+                             block_size=bs)
+    s = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32), k)
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    if sm_quant is not None:
+        sm_s, sm_z = sm_quant[0], sm_quant[1]
+        sq = jnp.clip(jnp.round(s / sm_s) + sm_z, sm_qmin, sm_qmax)
+        s = (sq - sm_z) * sm_s
+    kpb = kp[:, None, None, :]
+    qpb = jnp.asarray(q_pos)[:, None, None, None]
+    valid = (kpb >= 0) & (kpb <= qpb)
+    if window is not None:
+        valid &= kpb > qpb - window
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    if smo_quant is not None:        # fake-quant probs, NOT renormalized
+        so_s, so_z = smo_quant[0], smo_quant[1]
+        pq = jnp.clip(jnp.round(p / so_s) + so_z, smo_qmin, smo_qmax)
+        p = (pq - so_z) * so_s
+    return jnp.einsum("bkgs,bskd->bkgd", p, v)
+
+
+def paged_int8_attend_decode_ref(q_q, q_scale, k_arena, k_scale, v_arena,
+                                 v_scale, block_table, q_pos, *, s_cap,
+                                 q_zp=None, k_zp=None, v_zp=None,
+                                 window=None, logit_softcap=None,
+                                 sm_quant=None, sm_qmin=0, sm_qmax=255,
+                                 smo_quant=None, smo_qmin=0, smo_qmax=255):
+    """Gather-then-dequantize oracle for the paged int8 decode kernel:
+    delegates the attention math to :func:`int8_attend_decode_ref` over the
+    dense per-lane view + derived positions."""
+    bs = k_arena.shape[1]
+    kp = paged_positions_ref(block_table, q_pos, s_cap=s_cap,
+                             block_size=bs)
+    return int8_attend_decode_ref(
+        q_q, q_scale,
+        paged_gather_ref(k_arena, block_table),
+        paged_gather_ref(k_scale, block_table),
+        paged_gather_ref(v_arena, block_table),
+        paged_gather_ref(v_scale, block_table),
+        kp, q_pos, q_zp=q_zp, k_zp=k_zp, v_zp=v_zp, window=window,
+        logit_softcap=logit_softcap, sm_quant=sm_quant, sm_qmin=sm_qmin,
+        sm_qmax=sm_qmax, smo_quant=smo_quant, smo_qmin=smo_qmin,
+        smo_qmax=smo_qmax)
+
+
 def ln_fake_quant_ref(x, gamma, beta, scale, zp, *, qmin, qmax, eps=1e-6):
     xf = x.astype(jnp.float32)
     mu = jnp.mean(xf, -1, keepdims=True)

@@ -18,10 +18,20 @@ slot-scheduled continuous-batching runtime (in-flight admission into freed
 decode lanes, see repro.runtime.serve_loop); ``--parity`` serves the same
 requests under both schedulers and verifies identical greedy tokens.
 
+``--paged-kv`` switches every attention layer's cache to the block-paged
+layout (``--block-size`` cells per block): the continuous scheduler owns a
+block pool (``--num-blocks``, default = the dense worst case) that
+allocates on admission, grows lanes at decode and frees on retirement —
+HBM cache bytes then scale with LIVE tokens instead of
+batch_slots x max_len; the static scheduler serves through a fully mapped
+identity table (dense-equivalent paging). With ``--parity`` the same
+requests are additionally served on the dense cache and greedy tokens are
+verified identical (paged == dense), on top of the scheduler parity check.
+
 CPU smoke:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
       --requests 8 --new-tokens 8 [--quantize [--deploy-int8 [--kv-bits 8]]] \
-      [--scheduler continuous [--parity]]
+      [--scheduler continuous [--parity]] [--paged-kv [--block-size 16]]
 """
 from __future__ import annotations
 
@@ -72,23 +82,50 @@ def main(argv=None):
     ap.add_argument("--kv-bits", type=int, default=16, choices=(8, 16),
                     help="8: int8 KV cache + fused int8 decode attention "
                          "(requires --deploy-int8); 16: bf16/f32 cache")
+    ap.add_argument("--paged-kv", action="store_true",
+                    help="block-paged KV cache: continuous scheduling "
+                         "allocates blocks per LIVE token (block pool + "
+                         "per-lane block tables); static serves through a "
+                         "fully mapped identity table")
+    ap.add_argument("--block-size", type=int, default=16, metavar="N",
+                    help="token cells per KV block (with --paged-kv)")
+    ap.add_argument("--num-blocks", type=int, default=0, metavar="N",
+                    help="physical blocks in the paged pool (0 = dense "
+                         "worst case batch_slots x ceil(max_len/bs); "
+                         "smaller values exercise admission backpressure; "
+                         "continuous scheduler only)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.deploy_int8 and not args.quantize:
         ap.error("--deploy-int8 requires --quantize")
     if args.kv_bits == 8 and not args.deploy_int8:
         ap.error("--kv-bits 8 requires --deploy-int8")
+    if args.block_size < 1:
+        ap.error("--block-size must be >= 1")
+    from repro.runtime import BlockPool, blocks_for_tokens
+    from repro.runtime.serve_loop import _check_capacity
+    nb_lane = blocks_for_tokens(args.max_len, args.block_size)
+    full_blocks = args.batch_slots * nb_lane
+    num_blocks = args.num_blocks or full_blocks
+    if args.num_blocks and not args.paged_kv:
+        ap.error("--num-blocks requires --paged-kv")
+    if args.paged_kv and args.scheduler == "static" \
+            and num_blocks < full_blocks:
+        ap.error("static paged serving needs the dense worst case "
+                 f"(--num-blocks >= {full_blocks}); pool-constrained "
+                 "admission is a continuous-scheduler feature")
     # fail before model build on workloads the serve loop would reject
     # (same shared check serve() re-runs on the real requests)
-    from repro.runtime.serve_loop import _check_capacity
+    probe_pool = BlockPool(num_blocks, args.block_size, args.batch_slots,
+                           nb_lane) if args.paged_kv else None
     try:
         _check_capacity([Request(rid=-1,
                                  prompt=np.zeros(args.prompt_len, np.int32),
                                  max_new_tokens=max(args.new_tokens,
                                                     args.skew))],
-                        args.max_len)
+                        args.max_len, probe_pool)
     except ValueError as e:
-        ap.error(f"--max-len too small: {e}")
+        ap.error(f"--max-len / --num-blocks too small: {e}")
 
     cfg = get_config(args.arch)
     dist = None
@@ -200,24 +237,50 @@ def main(argv=None):
                                         else args.new_tokens))
                 for i in range(args.requests)]
 
-    def init_cache(batch):
+    def init_cache(batch, paged, scheduler):
+        if not paged:
+            return tfm.init_cache(cfg, batch, args.max_len, dtype=dtype,
+                                  kv_bits=args.kv_bits)
+        if scheduler == "static":
+            # fully mapped identity table (dense-equivalent paging; the
+            # static loop has no pool to grow from)
+            return tfm.init_cache(cfg, batch, args.max_len, dtype=dtype,
+                                  kv_bits=args.kv_bits, paged=True,
+                                  block_size=args.block_size)
         return tfm.init_cache(cfg, batch, args.max_len, dtype=dtype,
-                              kv_bits=args.kv_bits)
+                              kv_bits=args.kv_bits, paged=True,
+                              block_size=args.block_size,
+                              num_blocks=num_blocks, mapped=False)
 
-    def run(scheduler, requests):
-        return serve(prefill, admit, decode, init_cache, params, requests,
-                     scheduler=scheduler, batch_slots=args.batch_slots,
-                     max_len=args.max_len)
+    def run(scheduler, requests, paged=None):
+        paged = args.paged_kv if paged is None else paged
+        pool = None
+        if paged and scheduler == "continuous":
+            pool = BlockPool(num_blocks, args.block_size, args.batch_slots,
+                             nb_lane)
+        return serve(prefill, admit, decode,
+                     lambda b: init_cache(b, paged, scheduler), params,
+                     requests, scheduler=scheduler,
+                     batch_slots=args.batch_slots,
+                     max_len=args.max_len, block_pool=pool)
 
     requests = make_requests()
     stats = run(args.scheduler, requests)
+    if args.paged_kv and args.scheduler == "continuous":
+        paged_note = (f", blocks {stats.blocks_in_use}/{num_blocks} "
+                      f"(frag {stats.block_fragmentation:.0%}, "
+                      f"block-size {args.block_size})")
+    elif args.paged_kv:
+        paged_note = f", paged identity-mapped (block-size {args.block_size})"
+    else:
+        paged_note = ""
     print(f"[serve:{args.scheduler}] {stats.tokens_generated} tokens, "
           f"{stats.decode_steps} decode steps, "
           f"{stats.prefill_calls} prefills, {stats.wall_s:.2f}s "
           f"({stats.tokens_per_s:.1f} tok/s), "
           f"slot-utilization {stats.slot_utilization:.0%}, "
           f"peak kv-cache {stats.cache_bytes / 1024:.0f} KiB "
-          f"(kv-bits {args.kv_bits})")
+          f"(kv-bits {args.kv_bits}{paged_note})")
 
     if args.parity:
         other = ("static" if args.scheduler == "continuous"
@@ -232,6 +295,17 @@ def main(argv=None):
         print(f"[parity] OK: {args.scheduler} and {other} schedulers "
               f"emit identical greedy tokens for all "
               f"{len(requests)} requests")
+        if args.paged_kv:
+            dense_reqs = make_requests()
+            run(args.scheduler, dense_reqs, paged=False)
+            mismatch = [r.rid for r, d in zip(requests, dense_reqs)
+                        if r.tokens_out != d.tokens_out]
+            if mismatch:
+                raise SystemExit(f"[parity] FAIL: request ids {mismatch} "
+                                 f"diverge between paged and dense caches")
+            print(f"[parity] OK: paged and dense caches emit identical "
+                  f"greedy tokens for all {len(requests)} requests "
+                  f"(kv-bits {args.kv_bits})")
     return stats
 
 

@@ -72,6 +72,33 @@ class QuantKVCache(NamedTuple):
     pos: jnp.ndarray
 
 
+class PagedKVCache(NamedTuple):
+    """Block-paged bf16/f32 KV cache: k/v (N, bs, KV, hd) — one shared
+    arena of N physical blocks of bs token cells, NO batch axis. Which
+    blocks back which decode lane is data: the (B, max_blocks) int32 block
+    table (-1 = unmapped) that travels inside the whole-model cache pytree
+    (runtime.block_pool.BlockPool allocates it host-side), so lanes own
+    bytes proportional to their LIVE tokens, not to max_len. ``pos``
+    (N, bs) keeps the per-cell dead-cell sentinel (-1) of :class:`KVCache`;
+    the read paths additionally derive validity from (logical index,
+    q_pos) alone — see paged_key_positions — so a freshly grown block's
+    stale cells are unreadable even before any write touches them."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+    pos: jnp.ndarray
+
+
+class PagedQuantKVCache(NamedTuple):
+    """Paged int8 KV cache: :class:`QuantKVCache` payloads/scales laid out
+    over the shared block arena of :class:`PagedKVCache` — k_q/v_q
+    (N, bs, KV, hd) int8, k_s/v_s (N, bs, KV) f32, pos (N, bs)."""
+    k_q: jnp.ndarray
+    v_q: jnp.ndarray
+    k_s: jnp.ndarray
+    v_s: jnp.ndarray
+    pos: jnp.ndarray
+
+
 def init_kv_cache(batch: int, max_len: int, cfg: AttnConfig,
                   dtype=jnp.bfloat16) -> KVCache:
     size = min(max_len, cfg.window) if cfg.window else max_len
@@ -91,6 +118,35 @@ def init_quant_kv_cache(batch: int, max_len: int,
         k_s=jnp.zeros((batch, size, kv), jnp.float32),
         v_s=jnp.zeros((batch, size, kv), jnp.float32),
         pos=jnp.full((batch, size), -1, jnp.int32))
+
+
+def init_paged_kv_cache(num_blocks: int, block_size: int, cfg: AttnConfig,
+                        dtype=jnp.bfloat16) -> PagedKVCache:
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return PagedKVCache(
+        k=jnp.zeros((num_blocks, block_size, kv, hd), dtype),
+        v=jnp.zeros((num_blocks, block_size, kv, hd), dtype),
+        pos=jnp.full((num_blocks, block_size), -1, jnp.int32))
+
+
+def init_paged_quant_kv_cache(num_blocks: int, block_size: int,
+                              cfg: AttnConfig) -> PagedQuantKVCache:
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return PagedQuantKVCache(
+        k_q=jnp.zeros((num_blocks, block_size, kv, hd), jnp.int8),
+        v_q=jnp.zeros((num_blocks, block_size, kv, hd), jnp.int8),
+        k_s=jnp.zeros((num_blocks, block_size, kv), jnp.float32),
+        v_s=jnp.zeros((num_blocks, block_size, kv), jnp.float32),
+        pos=jnp.full((num_blocks, block_size), -1, jnp.int32))
+
+
+def paged_capacity(block_table, block_size: int,
+                   window: Optional[int]) -> int:
+    """A layer's logical capacity S over a paged cache: the block table
+    covers max_blocks*bs cells; ring (sliding-window) layers wrap at the
+    window exactly like the dense sized-to-window cache."""
+    cap = block_table.shape[-1] * block_size
+    return min(cap, window) if window else cap
 
 
 def quantize_kv(x, grid_scale=None, zero_point=None):
@@ -319,6 +375,101 @@ def _write_kv(cache, k_new, v_new, pw, slots, bidx, kvq):
         pos=cache.pos.at[bidx, slots].set(pw, mode="drop"))
 
 
+def _write_paged_kv(cache, k_new, v_new, pw, block_table, window, kvq):
+    """Scatter new K/V tokens into the paged arena via the lane's block
+    table. The logical cell is ``pw % S`` (the dense _write_slots wrap
+    rule — global layers never wrap in a capacity-checked workload); its
+    physical block comes from the lane's table. Dead cells (pw < 0) and
+    unmapped blocks route to ``num_blocks`` so the scatter DROPS them —
+    the same lane-safety contract as the dense path. Quantized arenas
+    quantize in place exactly like _write_kv."""
+    num_blocks, bs = cache.pos.shape
+    s_cap = paged_capacity(block_table, bs, window)
+    L = jnp.mod(jnp.maximum(pw, 0), s_cap)
+    phys = jnp.take_along_axis(block_table, L // bs, axis=1)      # (B, T)
+    dead = (pw < 0) | (phys < 0)
+    phys = jnp.where(dead, num_blocks, phys)
+    cell = L % bs
+    if isinstance(cache, PagedQuantKVCache):
+        if kvq is None:
+            kq, ks = quantize_kv(k_new)
+            vq, vs = quantize_kv(v_new)
+        else:
+            kq, ks = quantize_kv(k_new, kvq.k_grid, kvq.k_zp)
+            vq, vs = quantize_kv(v_new, kvq.v_grid, kvq.v_zp)
+        return PagedQuantKVCache(
+            k_q=cache.k_q.at[phys, cell].set(kq, mode="drop"),
+            v_q=cache.v_q.at[phys, cell].set(vq, mode="drop"),
+            k_s=cache.k_s.at[phys, cell].set(ks, mode="drop"),
+            v_s=cache.v_s.at[phys, cell].set(vs, mode="drop"),
+            pos=cache.pos.at[phys, cell].set(pw, mode="drop"))
+    return PagedKVCache(
+        k=cache.k.at[phys, cell].set(k_new.astype(cache.k.dtype),
+                                     mode="drop"),
+        v=cache.v.at[phys, cell].set(v_new.astype(cache.v.dtype),
+                                     mode="drop"),
+        pos=cache.pos.at[phys, cell].set(pw, mode="drop"))
+
+
+def paged_key_positions(block_table, q_pos, s_cap: int, block_size: int):
+    """Derived key positions (B, nb*bs) of each lane's dense block view.
+
+    A lane writes positions 0..q_pos contiguously (left-pad dead cells are
+    dropped, not stored), so logical cell L holds position
+    ``p = q_pos - ((q_pos - L) mod S)`` — reconstructed validity that can
+    never read a reallocated block's stale cells, because stale cells
+    derive p < 0 / L >= S. Idle lanes (q_pos = -1) derive all -1.
+    """
+    nb = -(-s_cap // block_size)
+    L = jnp.arange(nb * block_size, dtype=jnp.int32)[None, :]
+    qp = jnp.asarray(q_pos, jnp.int32).reshape(-1, 1)
+    p = qp - jnp.mod(qp - L, s_cap)
+    mapped = jnp.repeat(block_table[:, :nb] >= 0, block_size, axis=1)
+    valid = (L < s_cap) & (p >= 0) & mapped
+    return jnp.where(valid, p, -1)
+
+
+def paged_gather_kv(cache, block_table, window, kvq=None):
+    """Dense (B, nb*bs, KV, hd) f32 view of each lane's mapped blocks (the
+    fallback read path when the paged kernels cannot express a site) —
+    quantized arenas dequantize on gather. Pair with paged_key_positions
+    to mask unwritten/stale cells."""
+    num_blocks, bs = cache.pos.shape
+    s_cap = paged_capacity(block_table, bs, window)
+    nb = -(-s_cap // bs)
+    phys = jnp.clip(block_table[:, :nb], 0, num_blocks - 1)
+
+    def g(arena):
+        x = arena[phys]                                # (B, nb, bs, ...)
+        return x.reshape(x.shape[0], nb * bs, *arena.shape[2:])
+
+    if isinstance(cache, PagedQuantKVCache):
+        kq = g(cache.k_q).astype(jnp.float32)
+        vq = g(cache.v_q).astype(jnp.float32)
+        if kvq is not None:
+            kq = kq - jnp.asarray(kvq.k_zp, jnp.float32)[..., None]
+            vq = vq - jnp.asarray(kvq.v_zp, jnp.float32)[..., None]
+        return kq * g(cache.k_s)[..., None], vq * g(cache.v_s)[..., None]
+    return g(cache.k).astype(jnp.float32), g(cache.v).astype(jnp.float32)
+
+
+def reset_paged_lanes(cache, lane_mask, block_table):
+    """Empty every block mapped by the masked lanes: ``pos`` -> -1 on those
+    blocks' cells (payload bytes stay, as in reset_kv_lanes — an empty
+    position masks the cell out of every read path). Works for unstacked
+    (N, bs) and stacked (n_super, N, bs) arena layouts; the block table
+    itself is host-owned (runtime.block_pool) and not touched here."""
+    num_blocks = cache.pos.shape[-2]
+    mask = jnp.asarray(lane_mask, bool)[:, None]
+    blocks = jnp.where(mask & (block_table >= 0), block_table,
+                       num_blocks).reshape(-1)
+    if cache.pos.ndim == 3:           # stacked scan leaf (n_super, N, bs)
+        pos = cache.pos.at[:, blocks].set(-1, mode="drop")
+    else:
+        pos = cache.pos.at[blocks].set(-1, mode="drop")
+    return cache._replace(pos=pos)
+
+
 def reset_kv_lanes(cache, lane_mask, batch_axis: int = 0):
     """Empty the masked batch lanes of a (Quant)KVCache for slot reuse:
     ``pos`` -> -1 on those lanes. Payload bytes (and int8 scales) are left in
@@ -371,6 +522,53 @@ def _q_site_quant(ctx, prefix):
             acfg.qmin, acfg.qmax, shift)
 
 
+def _decode_site_params(ctx, prefix):
+    """The in-kernel softmax site operands shared by the dense and paged
+    decode kernels: (sm_kwargs dict, q_site) — or None when a calibrated
+    site is not per-tensor expressible (caller falls back)."""
+    sm_quant = smo_quant = None
+    sm_qmin = sm_qmax = smo_qmin = smo_qmax = 0
+    q_site = None
+    if _sites_active(ctx):
+        sm = _site_quant(ctx, f"{prefix}/softmax_in")
+        smo = _site_quant(ctx, f"{prefix}/softmax_out")
+        if sm is False or smo is False:
+            return None
+        sm_quant, sm_qmin, sm_qmax = sm
+        smo_quant, smo_qmin, smo_qmax = smo
+        q_site = _q_site_quant(ctx, prefix)
+    return (dict(sm_quant=sm_quant, sm_qmin=sm_qmin, sm_qmax=sm_qmax,
+                 smo_quant=smo_quant, smo_qmin=smo_qmin,
+                 smo_qmax=smo_qmax), q_site)
+
+
+def _quantize_decode_q(qg, q_site):
+    """(q_q int8, scales (B, KV, G), zero-points | None) for the decode
+    kernels: the calibrated ``{prefix}/q`` site grid when available
+    (already fake-quantized queries enter EXACTLY), else dynamic symmetric
+    per-head quantization."""
+    B, KV, G, _ = qg.shape
+    if q_site is not None:
+        # re-use the site's affine grid (shifted to int8): already
+        # fake-quantized queries enter the kernel exactly
+        s_q, z_q, qmin, qmax, shift = q_site
+        q_q = (jnp.clip(jnp.round(qg / s_q) + z_q, qmin, qmax)
+               - shift).astype(jnp.int8)
+        return q_q, jnp.full((B, KV, G), s_q), jnp.full((B, KV, G),
+                                                        z_q - shift)
+    amax = jnp.max(jnp.abs(qg), axis=-1)
+    qs = jnp.maximum(amax / 127.0, jnp.finfo(jnp.float32).tiny)
+    q_q = jnp.clip(jnp.round(qg / qs[..., None]), -127, 127).astype(jnp.int8)
+    return q_q, qs, None
+
+
+def _kv_zero_points(kvq, B, KV):
+    if kvq is None:
+        return None, None
+    return (jnp.broadcast_to(jnp.asarray(kvq.k_zp, jnp.float32), (B, KV)),
+            jnp.broadcast_to(jnp.asarray(kvq.v_zp, jnp.float32), (B, KV)))
+
+
 def _quant_decode_attend(q, cache: QuantKVCache, q_pos, cfg: AttnConfig,
                          ctx, prefix, kvq=None):
     """Decode step through the fused int8 attention kernel.
@@ -385,47 +583,75 @@ def _quant_decode_attend(q, cache: QuantKVCache, q_pos, cfg: AttnConfig,
     """
     if not cfg.causal:
         return None           # kernel masks causally; _mask handles the rest
-    sm_quant = smo_quant = None
-    sm_qmin = sm_qmax = smo_qmin = smo_qmax = 0
-    q_site = None
-    if _sites_active(ctx):
-        sm = _site_quant(ctx, f"{prefix}/softmax_in")
-        smo = _site_quant(ctx, f"{prefix}/softmax_out")
-        if sm is False or smo is False:
-            return None
-        sm_quant, sm_qmin, sm_qmax = sm
-        smo_quant, smo_qmin, smo_qmax = smo
-        q_site = _q_site_quant(ctx, prefix)
+    site = _decode_site_params(ctx, prefix)
+    if site is None:
+        return None
+    sm_kwargs, q_site = site
     from repro.kernels import ops as kops
     B, T, H, hd = q.shape
     KV, G = cfg.num_kv_heads, cfg.q_groups
     qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
-    if q_site is not None:
-        # re-use the site's affine grid (shifted to int8): already
-        # fake-quantized queries enter the kernel exactly
-        s_q, z_q, qmin, qmax, shift = q_site
-        q_q = (jnp.clip(jnp.round(qg / s_q) + z_q, qmin, qmax)
-               - shift).astype(jnp.int8)
-        qs = jnp.full((B, KV, G), s_q)
-        qz = jnp.full((B, KV, G), z_q - shift)
-    else:
-        # dynamic symmetric per-head quantization
-        amax = jnp.max(jnp.abs(qg), axis=-1)
-        qs = jnp.maximum(amax / 127.0, jnp.finfo(jnp.float32).tiny)
-        q_q = jnp.clip(jnp.round(qg / qs[..., None]), -127,
-                       127).astype(jnp.int8)
-        qz = None
-    kz = vz = None
-    if kvq is not None:
-        kz = jnp.broadcast_to(jnp.asarray(kvq.k_zp, jnp.float32), (B, KV))
-        vz = jnp.broadcast_to(jnp.asarray(kvq.v_zp, jnp.float32), (B, KV))
+    q_q, qs, qz = _quantize_decode_q(qg, q_site)
+    kz, vz = _kv_zero_points(kvq, B, KV)
     out = kops.int8_attend_decode(
         q_q, qs * cfg.scale, cache.k_q, cache.k_s, cache.v_q, cache.v_s,
         cache.pos, q_pos[:, 0], q_zp=qz, k_zp=kz, v_zp=vz,
         window=cfg.window,
-        logit_softcap=cfg.logit_softcap, sm_quant=sm_quant,
-        sm_qmin=sm_qmin, sm_qmax=sm_qmax, smo_quant=smo_quant,
-        smo_qmin=smo_qmin, smo_qmax=smo_qmax)
+        logit_softcap=cfg.logit_softcap, **sm_kwargs)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def _paged_quant_decode_attend(q, cache: PagedQuantKVCache, block_table,
+                               q_pos, cfg: AttnConfig, ctx, prefix,
+                               kvq=None):
+    """Decode step through the paged int8 attention kernel — the
+    :func:`_quant_decode_attend` twin over a block-paged arena (same site
+    grids, zero-point corrections and fallback rule; block gather + the
+    derived-position mask happen in-kernel)."""
+    if not cfg.causal:
+        return None
+    site = _decode_site_params(ctx, prefix)
+    if site is None:
+        return None
+    sm_kwargs, q_site = site
+    from repro.kernels import ops as kops
+    B, T, H, hd = q.shape
+    KV, G = cfg.num_kv_heads, cfg.q_groups
+    bs = cache.pos.shape[1]
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    q_q, qs, qz = _quantize_decode_q(qg, q_site)
+    kz, vz = _kv_zero_points(kvq, B, KV)
+    out = kops.paged_int8_attend_decode(
+        q_q, qs * cfg.scale, cache.k_q, cache.k_s, cache.v_q, cache.v_s,
+        block_table, q_pos[:, 0],
+        s_cap=paged_capacity(block_table, bs, cfg.window),
+        q_zp=qz, k_zp=kz, v_zp=vz, window=cfg.window,
+        logit_softcap=cfg.logit_softcap, **sm_kwargs)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def _paged_decode_attend(q, cache: PagedKVCache, block_table, q_pos,
+                         cfg: AttnConfig, ctx, prefix):
+    """Decode step through the paged bf16/f32 attention kernel. Applies
+    the softmax_in/softmax_out sites in-kernel when they are per-tensor
+    (matching _dense_attend's placement); returns None when a site is
+    calibrated per-channel/PEG — the caller gathers the lane's blocks and
+    takes the dense path so the site still applies exactly."""
+    if not cfg.causal:
+        return None
+    site = _decode_site_params(ctx, prefix)
+    if site is None:
+        return None
+    sm_kwargs, _ = site
+    from repro.kernels import ops as kops
+    B, T, H, hd = q.shape
+    KV, G = cfg.num_kv_heads, cfg.q_groups
+    bs = cache.pos.shape[1]
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32) * cfg.scale
+    out = kops.paged_attend_decode(
+        qg, cache.k, cache.v, block_table, q_pos[:, 0],
+        s_cap=paged_capacity(block_table, bs, cfg.window),
+        window=cfg.window, logit_softcap=cfg.logit_softcap, **sm_kwargs)
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
@@ -435,12 +661,17 @@ def _quant_decode_attend(q, cache: QuantKVCache, q_pos, cfg: AttnConfig,
 
 def attention_block(p, x, positions, cfg: AttnConfig, *, ctx=None,
                     prefix="attn", cache: Optional[KVCache] = None,
-                    chunked: Optional[bool] = None
+                    chunked: Optional[bool] = None, block_table=None
                     ) -> Tuple[jnp.ndarray, Optional[KVCache]]:
     """x: (B, T, D). p: dict with wq (D,H*hd), wk/wv (D,KV*hd), wo (H*hd,D).
 
     Training/prefill: cache=None or empty cache to fill.
     Decode: T == 1 (or small), cache holds past KV; returns updated cache.
+
+    Paged caches (PagedKVCache / PagedQuantKVCache) additionally need
+    ``block_table`` (B, max_blocks) int32 — writes scatter through it and
+    decode runs the paged kernels (gather + derived-position mask
+    in-kernel).
 
     DEPLOY: ``x`` may arrive as a QTensor (int8 LN output) with packed
     projection weights — QKV and Wo then run on the int8 matmul kernel.
@@ -479,19 +710,48 @@ def attention_block(p, x, positions, cfg: AttnConfig, *, ctx=None,
     out = None
     positions = jnp.broadcast_to(positions, (B, T))
     if cache is not None:
-        quantized = isinstance(cache, QuantKVCache)
+        paged = isinstance(cache, (PagedKVCache, PagedQuantKVCache))
+        quantized = isinstance(cache, (QuantKVCache, PagedQuantKVCache))
         kvq = ctx.deploy_act(f"{prefix}/kv") \
             if (quantized and ctx is not None) else None
-        S = cache.pos.shape[1]
+        if paged:
+            if block_table is None:
+                raise ValueError("paged KV cache needs the block_table "
+                                 "threaded from the whole-model cache")
+            S = paged_capacity(block_table, cache.pos.shape[1], cfg.window)
+        else:
+            S = cache.pos.shape[1]
         bidx = jnp.arange(B)[:, None]
         if T > 1:
             # Prefill: attend over the fresh K/V (window enforced by mask),
             # then write the last min(T, S) tokens into the cache.
             keep = min(T, S)
             kw, vw, pw = k[:, -keep:], v[:, -keep:], positions[:, -keep:]
-            slots = _write_slots(pw, S, cfg.window)
-            new_cache = _write_kv(cache, kw, vw, pw, slots, bidx, kvq)
+            if paged:
+                new_cache = _write_paged_kv(cache, kw, vw, pw, block_table,
+                                            cfg.window, kvq)
+            else:
+                slots = _write_slots(pw, S, cfg.window)
+                new_cache = _write_kv(cache, kw, vw, pw, slots, bidx, kvq)
             k_att, v_att, kpos_att = k, v, positions
+        elif paged:
+            # Paged decode: write the new token through the block table,
+            # attend through the paged kernel (site fallback: gather the
+            # lane's blocks into a dense view + derived positions).
+            new_cache = _write_paged_kv(cache, k, v, positions, block_table,
+                                        cfg.window, kvq)
+            if quantized:
+                out = _paged_quant_decode_attend(q, new_cache, block_table,
+                                                 positions, cfg, ctx,
+                                                 prefix, kvq)
+            else:
+                out = _paged_decode_attend(q, new_cache, block_table,
+                                           positions, cfg, ctx, prefix)
+            if out is None:
+                k_att, v_att = paged_gather_kv(new_cache, block_table,
+                                               cfg.window, kvq)
+                kpos_att = paged_key_positions(block_table, positions[:, 0],
+                                               S, cache.pos.shape[1])
         else:
             # Decode: write the new token, attend over the cache.
             slots = _write_slots(positions, S, cfg.window)

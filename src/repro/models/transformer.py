@@ -31,10 +31,13 @@ from repro.models import ffn as ffn_lib
 from repro.models import moe as moe_lib
 from repro.models import rglru as rglru_lib
 from repro.models import rwkv6 as rwkv_lib
-from repro.models.attention import (AttnConfig, KVCache, QuantKVCache,
+from repro.models.attention import (AttnConfig, KVCache, PagedKVCache,
+                                    PagedQuantKVCache, QuantKVCache,
                                     attention_block, init_attention_params,
-                                    init_kv_cache, init_quant_kv_cache,
-                                    reset_kv_lanes)
+                                    init_kv_cache, init_paged_kv_cache,
+                                    init_paged_quant_kv_cache,
+                                    init_quant_kv_cache, reset_kv_lanes,
+                                    reset_paged_lanes)
 from repro.models.common import (cross_entropy, embed_init, layer_norm,
                                  rms_norm, softcap, split_keys)
 
@@ -211,14 +214,15 @@ def _attn_input(cfg: ModelConfig, p, x, ctx, prefix):
 
 
 def block_apply(cfg: ModelConfig, kind: str, p, x, positions, *, ctx=None,
-                prefix="layer", cache=None, dist=None, chunked=None):
+                prefix="layer", cache=None, dist=None, chunked=None,
+                block_table=None):
     """One transformer block of the given kind. Returns (x, new_cache)."""
     if kind in ("attn", "local_attn"):
         acfg = attn_cfg_for(cfg, kind)
         h = _attn_input(cfg, p, x, ctx, prefix)
         attn_out, new_cache = attention_block(
             p["attn"], h, positions, acfg, ctx=ctx, prefix=f"{prefix}/attn",
-            cache=cache, chunked=chunked)
+            cache=cache, chunked=chunked, block_table=block_table)
         if cfg.post_norm:
             attn_out = _norm(cfg, p["post_ln1"], attn_out)
         x = x + attn_out
@@ -311,12 +315,23 @@ def init_block_params(cfg: ModelConfig, kind: str, key, dtype):
 
 
 def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
-                     dtype=jnp.bfloat16, kv_bits: int = 16):
+                     dtype=jnp.bfloat16, kv_bits: int = 16,
+                     paged_blocks: Optional[Tuple[int, int]] = None):
     if kind in ("attn", "local_attn"):
         acfg = attn_cfg_for(cfg, kind)
+        if paged_blocks is not None:
+            num_blocks, block_size = paged_blocks
+            if kv_bits == 8:
+                return init_paged_quant_kv_cache(num_blocks, block_size,
+                                                 acfg)
+            return init_paged_kv_cache(num_blocks, block_size, acfg, dtype)
         if kv_bits == 8:
             return init_quant_kv_cache(batch, max_len, acfg)
         return init_kv_cache(batch, max_len, acfg, dtype)
+    if paged_blocks is not None:
+        raise ValueError(
+            f"paged KV cache supports attention layers only, got {kind!r} "
+            "(recurrent state has no block layout)")
     if kind == "rec":
         return rglru_lib.init_rglru_state(batch, cfg.d_rnn or cfg.d_model)
     if kind == "rwkv":
@@ -363,25 +378,80 @@ def init_params(cfg: ModelConfig, key, *, stacked: bool = True,
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
-               stacked: bool = True, dtype=jnp.bfloat16, kv_bits: int = 16):
+               stacked: bool = True, dtype=jnp.bfloat16, kv_bits: int = 16,
+               paged: bool = False, block_size: int = 16,
+               num_blocks: Optional[int] = None,
+               mapped: Optional[bool] = None):
     """kv_bits=8 stores attention caches as int8 QuantKVCache (deployment
-    serving path); 16 keeps the bf16/f32 KVCache."""
+    serving path); 16 keeps the bf16/f32 KVCache.
+
+    ``paged=True`` switches every attention layer to the block-paged
+    layout: one shared arena of ``num_blocks`` blocks of ``block_size``
+    token cells per layer (default: the dense worst case,
+    ``batch * ceil(max_len / block_size)``) plus a single
+    ``"block_table"`` (batch, max_blocks_per_lane) entry in the returned
+    pytree. ``mapped`` (default: True iff ``num_blocks`` was left at the
+    worst case) pre-maps the identity table — lane i owns blocks
+    [i*nb, (i+1)*nb) — which makes the paged cache a drop-in dense
+    equivalent (the static scheduler path); pool-managed serving starts
+    unmapped and lets runtime.block_pool.BlockPool own the table.
+    """
     plan = cfg.layer_plan
     n_pat = len(cfg.block_pattern)
     n_tail = len(cfg.tail_pattern)
     n_super = (len(plan) - n_tail) // n_pat
+    paged_blocks = None
+    table = None
+    if paged:
+        nb_lane = -(-max_len // block_size)
+        if mapped is None:
+            mapped = num_blocks is None
+        if num_blocks is None:
+            num_blocks = batch * nb_lane
+        paged_blocks = (num_blocks, block_size)
+        if mapped:
+            if num_blocks < batch * nb_lane:
+                raise ValueError(
+                    f"mapped paged cache needs num_blocks >= "
+                    f"batch*{nb_lane} = {batch * nb_lane}, got {num_blocks}")
+            table = jnp.arange(batch * nb_lane,
+                               dtype=jnp.int32).reshape(batch, nb_lane)
+        else:
+            table = jnp.full((batch, nb_lane), -1, jnp.int32)
+
+    def blk(kind):
+        return init_block_cache(cfg, kind, batch, max_len, dtype, kv_bits,
+                                paged_blocks)
+
     if stacked:
         groups = []
         for kind in cfg.block_pattern:
-            per = [init_block_cache(cfg, kind, batch, max_len, dtype, kv_bits)
-                   for _ in range(n_super)]
+            per = [blk(kind) for _ in range(n_super)]
             groups.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
-        tail = [init_block_cache(cfg, kind, batch, max_len, dtype, kv_bits)
-                for kind in cfg.tail_pattern]
-        return {"scan": groups, "tail": tail}
-    return {"layers": [init_block_cache(cfg, kind, batch, max_len, dtype,
-                                        kv_bits)
-                       for kind in plan]}
+        tail = [blk(kind) for kind in cfg.tail_pattern]
+        cache = {"scan": groups, "tail": tail}
+    else:
+        cache = {"layers": [blk(kind) for kind in plan]}
+    if paged:
+        cache["block_table"] = table
+    return cache
+
+
+def paged_block_bytes(cache) -> int:
+    """HBM bytes per physical block, summed over every paged arena in the
+    cache pytree (stacked leaves count all their layers) — multiply by the
+    pool's blocks_in_use for the live paged footprint."""
+    total = 0
+    for node in _cache_nodes(cache):
+        if isinstance(node, (PagedKVCache, PagedQuantKVCache)):
+            n = node.pos.shape[-2]
+            total += sum(leaf.size * leaf.dtype.itemsize for leaf in node) // n
+    return total
+
+
+def _cache_nodes(cache):
+    return (cache.get("layers") or
+            list(cache.get("scan", [])) + list(cache.get("tail", [])))
 
 
 def cache_reset_slots(cache, lane_mask):
@@ -389,16 +459,21 @@ def cache_reset_slots(cache, lane_mask):
     reuse (continuous batching): every attention cache's ``pos`` becomes -1
     on those lanes, so the next occupant starts from an empty lane while the
     other lanes are untouched. Works for both cache layouts (stacked scan
-    leaves carry batch on axis 1) and both cache types (KVCache /
+    leaves carry batch on axis 1) and every cache type (KVCache /
     QuantKVCache — the int8 per-head per-slot scale layout is preserved;
-    stale payload bytes are unreadable once pos == -1).
+    stale payload bytes are unreadable once pos == -1 — and the paged
+    variants, where the masked lanes' *mapped blocks* are emptied through
+    the cache's block table).
 
     Recurrent state (rglru / rwkv6) has no per-slot validity sentinel, so
     those caches are not supported by the continuous scheduler.
     """
     lane_mask = jnp.asarray(lane_mask, bool)
+    table = cache.get("block_table")
 
     def _reset(c, axis):
+        if isinstance(c, (PagedKVCache, PagedQuantKVCache)):
+            return reset_paged_lanes(c, lane_mask, table)
         if isinstance(c, (KVCache, QuantKVCache)):
             return reset_kv_lanes(c, lane_mask, batch_axis=axis)
         raise ValueError(
@@ -407,9 +482,13 @@ def cache_reset_slots(cache, lane_mask):
             "per-slot validity to reset)")
 
     if "layers" in cache:
-        return {"layers": [_reset(c, 0) for c in cache["layers"]]}
-    return {"scan": [_reset(c, 1) for c in cache["scan"]],
-            "tail": [_reset(c, 0) for c in cache["tail"]]}
+        out = {"layers": [_reset(c, 0) for c in cache["layers"]]}
+    else:
+        out = {"scan": [_reset(c, 1) for c in cache["scan"]],
+               "tail": [_reset(c, 0) for c in cache["tail"]]}
+    if table is not None:
+        out["block_table"] = table
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -499,6 +578,10 @@ def forward(cfg: ModelConfig, params, tokens, *, embeds=None, ctx=None,
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(T_full, dtype=jnp.int32),
                                      (B, T_full))
+    # the paged caches' (B, max_blocks) block table is shared by every
+    # layer: thread it alongside the per-layer cache leaves and hand it
+    # back unchanged (allocation is host-side, runtime.block_pool)
+    block_table = cache.get("block_table") if cache is not None else None
 
     if "layers" in params:                      # unrolled path
         new_layer_caches = []
@@ -508,14 +591,17 @@ def forward(cfg: ModelConfig, params, tokens, *, embeds=None, ctx=None,
             def _blk(p, x, c, kind=kind, i=i):
                 return block_apply(cfg, kind, p, x, positions, ctx=ctx,
                                    prefix=f"layer{i}", cache=c, dist=dist,
-                                   chunked=chunked)
+                                   chunked=chunked, block_table=block_table)
             if remat:
                 _blk = jax.checkpoint(
                     _blk, policy=jax.checkpoint_policies.nothing_saveable)
             x, nc = _blk(params["layers"][i], x, c)
             new_layer_caches.append(nc)
-        new_cache = ({"layers": new_layer_caches} if cache is not None
-                     else None)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"layers": new_layer_caches}
+            if block_table is not None:
+                new_cache["block_table"] = block_table
         logits = _head(cfg, params, x, ctx, dist=dist)
         return logits, new_cache
 
@@ -529,7 +615,7 @@ def forward(cfg: ModelConfig, params, tokens, *, embeds=None, ctx=None,
             c = c_slices[j] if c_slices is not None else None
             x, nc = block_apply(cfg, kind, p_slices[j], x, positions,
                                 ctx=ctx, prefix="layer", cache=c, dist=dist,
-                                chunked=chunked)
+                                chunked=chunked, block_table=block_table)
             new_cs.append(nc)
         return x, (new_cs if c_slices is not None else None)
 
@@ -564,12 +650,15 @@ def forward(cfg: ModelConfig, params, tokens, *, embeds=None, ctx=None,
         c = cache["tail"][i] if cache is not None else None
         p_tail = params["tail"][i]
         x, nc = block_apply(cfg, kind, p_tail, x, positions, ctx=ctx,
-                            prefix="tail", cache=c, dist=dist, chunked=chunked)
+                            prefix="tail", cache=c, dist=dist,
+                            chunked=chunked, block_table=block_table)
         new_tail_caches.append(nc)
 
     new_cache = None
     if cache is not None:
         new_cache = {"scan": new_scan_caches, "tail": new_tail_caches}
+        if block_table is not None:
+            new_cache["block_table"] = block_table
     logits = _head(cfg, params, x, ctx, dist=dist)
     return logits, new_cache
 

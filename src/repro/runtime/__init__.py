@@ -1,3 +1,4 @@
+from repro.runtime.block_pool import BlockPool, blocks_for_tokens
 from repro.runtime.fault_tolerance import (PreemptionGuard, RestartPolicy,
                                            StragglerWatchdog)
 from repro.runtime.serve_loop import (DecodeState, Request, RequestLatency,

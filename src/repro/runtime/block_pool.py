@@ -1,0 +1,165 @@
+"""Host-side block-pool allocator for the paged KV cache.
+
+The paged cache (models/attention.py: PagedKVCache / PagedQuantKVCache)
+stores every attention layer's K/V as one shared HBM arena of
+``num_blocks`` fixed-size blocks of ``block_size`` token cells. Which
+physical block backs which token of which decode lane is pure *data*: a
+``(batch_slots, max_blocks_per_lane)`` int32 block table (-1 = unmapped)
+that the jitted admit / decode steps receive inside the cache pytree, so
+allocation never changes traced shapes and the steps still trace exactly
+once.
+
+This module is the allocator behind that table. It is deliberately
+host-side (numpy): the continuous scheduler (runtime/serve_loop.Scheduler)
+allocates on admission, grows lanes incrementally as decode crosses block
+boundaries, and releases a lane's blocks the moment its request retires —
+all between jitted step calls.
+
+Invariants the rest of the subsystem builds on:
+
+* **Prefix mapping.** A lane's mapped blocks are always the contiguous
+  logical prefix ``table[lane, 0:n]``. A lane that has written positions
+  ``0..p`` has ``n >= p // block_size + 1``, so every logical cell a read
+  path can derive as valid (see the derived-position rule in
+  models/attention.py) is backed by a mapped block. Sliding-window layers
+  write logical cell ``p % S_w`` whose block index never exceeds
+  ``p // block_size`` — the same prefix covers them.
+
+* **Reservation-backed growth (backpressure, no deadlock).** Admission
+  reserves the request's WORST-CASE block count up front
+  (``ceil((prompt + quota - 1) / block_size)``) and only admits when the
+  reservation fits; decode-time growth then draws from that reservation
+  and can never fail mid-flight. A request whose reservation does not fit
+  stays at the head of the queue (FIFO backpressure) until a retirement
+  frees blocks. Reservations are bookkeeping only — HBM-resident bytes
+  are ``blocks_in_use * block_bytes``, which is what the paged
+  ``ServeStats.cache_bytes`` reports.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+
+def blocks_for_tokens(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to back token cells 0..n_tokens-1 (0 -> 0 blocks)."""
+    return -(-max(n_tokens, 0) // block_size)
+
+
+class BlockPool:
+    """Free-list allocator over ``num_blocks`` physical KV-cache blocks.
+
+    ``table`` is the (batch_slots, max_blocks_per_lane) int32 block table
+    the jitted steps consume (-1 = unmapped). All mutation happens through
+    ``reserve_and_alloc`` / ``grow`` / ``free_lane`` so the prefix-mapping
+    and reservation invariants cannot be broken from outside.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, batch_slots: int,
+                 max_blocks_per_lane: int):
+        if num_blocks < 1 or block_size < 1:
+            raise ValueError(
+                f"need num_blocks >= 1 and block_size >= 1, got "
+                f"{num_blocks}/{block_size}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.batch_slots = batch_slots
+        self.max_blocks_per_lane = max_blocks_per_lane
+        self.reset()
+
+    def reset(self) -> None:
+        self._free: List[int] = list(range(self.num_blocks - 1, -1, -1))
+        self.table = np.full((self.batch_slots, self.max_blocks_per_lane),
+                             -1, np.int32)
+        self._n_mapped = np.zeros((self.batch_slots,), np.int64)
+        self._reserved = np.zeros((self.batch_slots,), np.int64)
+        # set on every table mutation; the scheduler clears it after
+        # re-uploading the table, skipping the per-step host->device
+        # transfer on the (common) steps where no block was mapped or freed
+        self.dirty = True
+
+    # -- gauges -------------------------------------------------------------
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    @property
+    def blocks_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_reserved(self) -> int:
+        """Outstanding worst-case claims (>= blocks_in_use)."""
+        return int(self._reserved.sum())
+
+    def fragmentation(self, live_tokens: int) -> float:
+        """Fraction of allocated token cells not holding a live token —
+        the internal (within-block) waste of the current allocation."""
+        cells = self.blocks_in_use * self.block_size
+        if cells == 0:
+            return 0.0
+        return 1.0 - min(live_tokens, cells) / cells
+
+    def lane_blocks(self, lane: int) -> np.ndarray:
+        return self.table[lane, :int(self._n_mapped[lane])].copy()
+
+    # -- allocation ---------------------------------------------------------
+
+    def can_reserve(self, n_blocks: int) -> bool:
+        """True if a worst-case claim of ``n_blocks`` fits next to every
+        outstanding reservation (admission backpressure test)."""
+        return (n_blocks <= self.max_blocks_per_lane
+                and self.blocks_reserved + n_blocks <= self.num_blocks)
+
+    def reserve_and_alloc(self, lane: int, n_alloc: int,
+                          n_reserve: int) -> bool:
+        """Admission: claim ``n_reserve`` worst-case blocks for ``lane`` and
+        map the first ``n_alloc`` (the prompt's blocks) now. Returns False —
+        with no state change — when the reservation does not fit (the
+        request stays queued)."""
+        n_reserve = max(n_reserve, n_alloc)
+        if self._reserved[lane] or self._n_mapped[lane]:
+            raise RuntimeError(f"lane {lane} still holds blocks/reservation")
+        if not self.can_reserve(n_reserve):
+            return False
+        self._reserved[lane] = n_reserve
+        self._map(lane, n_alloc)
+        return True
+
+    def grow(self, lane: int, n_total: int) -> None:
+        """Decode growth: extend ``lane``'s mapped prefix to ``n_total``
+        blocks. Always succeeds within the lane's reservation (the
+        scheduler reserves worst case at admission)."""
+        if n_total > self._reserved[lane]:
+            raise RuntimeError(
+                f"lane {lane}: growth to {n_total} blocks exceeds its "
+                f"reservation of {int(self._reserved[lane])}")
+        if n_total > self._n_mapped[lane]:
+            self._map(lane, n_total - int(self._n_mapped[lane]))
+
+    def _map(self, lane: int, n_new: int) -> None:
+        if n_new > len(self._free):      # pragma: no cover - guarded above
+            raise RuntimeError(
+                f"free list underflow: need {n_new}, have {len(self._free)} "
+                "(reservation invariant violated)")
+        start = int(self._n_mapped[lane])
+        for j in range(n_new):
+            self.table[lane, start + j] = self._free.pop()
+        self._n_mapped[lane] = start + n_new
+        self.dirty = True
+
+    def free_lane(self, lane: int) -> int:
+        """Retirement: return every mapped block of ``lane`` to the free
+        list, clear its reservation and table row. Returns the number of
+        blocks released."""
+        n = int(self._n_mapped[lane])
+        for j in range(n - 1, -1, -1):
+            self._free.append(int(self.table[lane, j]))
+        self.table[lane, :n] = -1
+        self._n_mapped[lane] = 0
+        self._reserved[lane] = 0
+        if n:
+            self.dirty = True
+        return n

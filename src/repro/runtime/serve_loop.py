@@ -38,6 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime.block_pool import BlockPool, blocks_for_tokens
+
 
 @dataclasses.dataclass
 class Request:
@@ -63,11 +65,21 @@ class ServeStats:
     decode_steps: int = 0
     tokens_generated: int = 0
     wall_s: float = 0.0
-    cache_bytes: int = 0        # PEAK live KV-cache bytes across the run
+    # PEAK live KV-cache bytes across the run. Dense lanes: the whole cache
+    # pytree (every lane owns max_len slots). Paged serving: ALLOCATED
+    # block bytes only (blocks_in_use x per-block bytes across layers) —
+    # bytes scale with live tokens, which is the paged win this stat makes
+    # visible.
+    cache_bytes: int = 0
     tokens_per_s: float = 0.0
     # fraction of (decode step x slot) cells occupied by a live request;
     # denominator uses batch_slots so half-empty tail groups count as idle
     slot_utilization: float = 0.0
+    # paged-pool gauges (0 for dense serving): peak mapped blocks, and the
+    # fraction of allocated token cells not holding a live token at that
+    # peak (internal fragmentation of the block_size granularity)
+    blocks_in_use: int = 0
+    block_fragmentation: float = 0.0
     request_latency: Dict[int, RequestLatency] = \
         dataclasses.field(default_factory=dict)
 
@@ -77,26 +89,52 @@ def _tree_bytes(tree) -> int:
                if hasattr(x, "dtype"))
 
 
-def _check_capacity(requests: List[Request], max_len: Optional[int]) -> None:
+def _paged_block_bytes(cache) -> int:
+    """Per-physical-block bytes of a paged model cache (0 for anything
+    else, e.g. the stub caches the scheduler tests drive)."""
+    if not isinstance(cache, dict):
+        return 0
+    from repro.models.transformer import paged_block_bytes
+    return paged_block_bytes(cache)
+
+
+def _check_capacity(requests: List[Request], max_len: Optional[int],
+                    pool: Optional[BlockPool] = None) -> None:
     """Reject requests whose decode would write past a ``max_len``-slot
     cache segment (the final token is emitted without a write, so the last
     write lands at position len(prompt) + quota - 2). Writes past the
     segment are scatter-dropped by design (dead-cell contract), which would
     silently truncate the attended context — an error beats degraded
     output. ``max_len`` None (capacity unknown to the caller) skips the
-    check; sliding-window ring caches wrap and never overflow."""
-    if max_len is None:
+    check; sliding-window ring caches wrap and never overflow.
+
+    With a paged ``pool``, the same up-front rule extends to pool capacity:
+    a request whose worst case exceeds ``num_blocks`` (or the per-lane
+    block-table width) could never be admitted — backpressure would queue
+    it forever — so it raises here instead.
+    """
+    if max_len is None and pool is None:
         return
     for r in requests:
         if r.max_new_tokens <= 0:
             continue                # zero-quota: never occupies a lane
         need = len(r.prompt) + r.max_new_tokens - 1
-        if need > max_len:
+        if max_len is not None and need > max_len:
             raise ValueError(
                 f"request {r.rid}: prompt ({len(r.prompt)}) + "
                 f"max_new_tokens ({r.max_new_tokens}) needs {need} cache "
                 f"slots but the cache holds max_len={max_len}; later KV "
                 "writes would be silently dropped")
+        if pool is not None:
+            nb = blocks_for_tokens(need, pool.block_size)
+            lane_cap = pool.max_blocks_per_lane * pool.block_size
+            if nb > pool.num_blocks or need > lane_cap:
+                raise ValueError(
+                    f"request {r.rid}: prompt ({len(r.prompt)}) + "
+                    f"max_new_tokens ({r.max_new_tokens}) needs {nb} cache "
+                    f"blocks but the pool holds num_blocks="
+                    f"{pool.num_blocks} (lane capacity {lane_cap} cells); "
+                    "later KV writes would be silently dropped")
 
 
 def _pack_prompts(group: List[Request], T: int
@@ -143,6 +181,16 @@ class _Book:
     def track_cache(self, cache) -> None:
         self.stats.cache_bytes = max(self.stats.cache_bytes,
                                      _tree_bytes(cache))
+
+    def track_pool(self, pool: BlockPool, live_tokens: int,
+                   block_bytes: int) -> None:
+        """Paged serving: peak ALLOCATED bytes + pool gauges (fragmentation
+        is sampled at the blocks_in_use peak)."""
+        s = self.stats
+        s.cache_bytes = max(s.cache_bytes, pool.blocks_in_use * block_bytes)
+        if pool.blocks_in_use >= s.blocks_in_use:
+            s.blocks_in_use = pool.blocks_in_use
+            s.block_fragmentation = pool.fragmentation(live_tokens)
 
     def count_decode(self, n_active: int) -> None:
         self.stats.decode_steps += 1
@@ -251,23 +299,42 @@ class Scheduler:
     Only greedy (argmax) decoding is implemented — the parity property
     "continuous == static == served alone, token for token" is only
     well-defined for deterministic sampling.
+
+    **Paged mode** (``block_pool`` given): the scheduler owns a
+    :class:`~repro.runtime.block_pool.BlockPool` whose block table rides
+    inside the cache pytree (``cache["block_table"]``). Admission reserves
+    a request's worst-case block count and maps its prompt blocks (a
+    request whose reservation does not fit WAITS at the head of the queue
+    — FIFO backpressure the dense path never needed); decode grows a
+    lane's mapped prefix as its position crosses block boundaries (growth
+    draws from the reservation, so it cannot fail mid-flight); retirement
+    returns every block to the free list. All of it is host-side table
+    bookkeeping between jitted calls — shapes never change, the steps
+    still trace once.
     """
 
     def __init__(self, admit_fn: Callable, decode_fn: Callable,
                  init_cache_fn: Callable, *, batch_slots: int,
                  prompt_pad_len: Optional[int] = None,
-                 max_len: Optional[int] = None):
+                 max_len: Optional[int] = None,
+                 block_pool: Optional[BlockPool] = None):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
+        if block_pool is not None and block_pool.batch_slots != batch_slots:
+            raise ValueError(
+                f"block_pool is sized for {block_pool.batch_slots} lanes, "
+                f"scheduler has batch_slots={batch_slots}")
         self.admit_fn = admit_fn
         self.decode_fn = decode_fn
         self.init_cache_fn = init_cache_fn
         self.batch_slots = batch_slots
         self.prompt_pad_len = prompt_pad_len
         self.max_len = max_len          # per-lane cache slots (None: unchecked)
+        self.pool = block_pool
+        self._block_bytes = 0
 
     def run(self, requests: List[Request]) -> ServeStats:
-        _check_capacity(requests, self.max_len)
+        _check_capacity(requests, self.max_len, self.pool)
         stats = ServeStats()
         book = _Book(stats, self.batch_slots)
         t_start = time.perf_counter()
@@ -284,15 +351,68 @@ class Scheduler:
         state = DecodeState(tokens=np.zeros((B, 1), np.int32),
                             pos=np.full((B, 1), -1, np.int32),
                             cache=self.init_cache_fn(B))
-        book.track_cache(state.cache)
+        if self.pool is not None:
+            self.pool.reset()
+            self._block_bytes = _paged_block_bytes(state.cache)
+            self._sync_table(state.cache)
+        self._track(state.cache, lanes, state, book)
 
         while queue or any(r is not None for r in lanes):
             free = [i for i in range(B) if lanes[i] is None]
-            if free and queue:
+            if free and queue and self._head_fits(queue[0]):
                 state = self._admit(free, queue, pad, lanes, state, book)
                 continue        # immediate retirees may have freed lanes
+            if not any(r is not None for r in lanes):
+                # unreachable: _check_capacity guarantees an empty pool
+                # can always take the queue head
+                raise RuntimeError("paged backpressure deadlock: queue "
+                                   "head does not fit an empty pool")
             state = self._decode(lanes, state, book)
         return book.finalize(t_start)
+
+    # -- paged-pool plumbing (no-ops in dense mode) -------------------------
+
+    def _head_fits(self, r: Request) -> bool:
+        """Admission backpressure: the queue head's worst-case reservation
+        must fit or the whole admission waits (FIFO — later requests do not
+        overtake a starved head)."""
+        if self.pool is None:
+            return True
+        need = len(r.prompt) + r.max_new_tokens - 1
+        return self.pool.can_reserve(
+            blocks_for_tokens(need, self.pool.block_size))
+
+    def _reserve(self, lane: int, r: Request) -> bool:
+        if self.pool is None:
+            return True
+        bs = self.pool.block_size
+        return self.pool.reserve_and_alloc(
+            lane, blocks_for_tokens(len(r.prompt), bs),
+            blocks_for_tokens(len(r.prompt) + r.max_new_tokens - 1, bs))
+
+    def _release(self, lane: int) -> None:
+        if self.pool is not None:
+            self.pool.free_lane(lane)
+
+    def _sync_table(self, cache) -> None:
+        """Re-upload the block table only when the pool mutated it since
+        the last sync — steady-state decode steps (no admission, no growth,
+        no retirement) reuse the device table flowing through the jitted
+        step's outputs."""
+        if self.pool is not None and self.pool.dirty \
+                and isinstance(cache, dict):
+            cache["block_table"] = jnp.asarray(self.pool.table)
+            self.pool.dirty = False
+
+    def _track(self, cache, lanes, state: DecodeState, book: _Book) -> None:
+        if self.pool is None:
+            book.track_cache(cache)
+        else:
+            live = sum(int(state.pos[i, 0]) for i, r in enumerate(lanes)
+                       if r is not None and state.pos[i, 0] > 0)
+            book.track_pool(self.pool, live, self._block_bytes)
+
+    # -----------------------------------------------------------------------
 
     def _admit(self, free, queue, pad, lanes, state: DecodeState,
                book: _Book) -> DecodeState:
@@ -301,6 +421,8 @@ class Scheduler:
         for i in free:
             if not queue:
                 break
+            if not self._reserve(i, queue[0]):
+                break           # head-of-line backpressure: keep FIFO order
             group.append(queue.popleft())
             slots.append(i)
         toks = np.zeros((B, pad), np.int32)
@@ -311,11 +433,11 @@ class Scheduler:
             toks[i], posm[i] = g_toks[j], g_posm[j]
             admit_mask[i] = True
             lanes[i] = group[j]
+        self._sync_table(state.cache)
         logits, cache = self.admit_fn(jnp.asarray(toks), jnp.asarray(posm),
                                       jnp.asarray(admit_mask), state.cache)
         book.stats.prefill_calls += 1
         book.step += 1
-        book.track_cache(cache)
         first = np.asarray(jnp.argmax(logits[:, -1:], axis=-1), np.int32)
         tokens, pos = state.tokens.copy(), state.pos.copy()
         for i in slots:
@@ -323,18 +445,29 @@ class Scheduler:
             tokens[i, 0] = first[i, 0]
             pos[i, 0] = len(r.prompt)
             book.emit(r, tokens[i, 0])
-            if r.done:                       # quota 1: retire before decoding
+        # sample gauges BEFORE releasing quota-1 retirees: their blocks
+        # were mapped during this prefill, so the peak must include them
+        self._track(cache, lanes, DecodeState(tokens, pos, cache), book)
+        for i in slots:
+            if lanes[i].done:                # quota 1: retire before decoding
                 lanes[i] = None
                 pos[i, 0] = -1
+                self._release(i)
         return DecodeState(tokens, pos, cache)
 
     def _decode(self, lanes, state: DecodeState, book: _Book) -> DecodeState:
         active = [i for i, r in enumerate(lanes) if r is not None]
+        if self.pool is not None:
+            # incremental growth: map the block the coming write lands in
+            # (reservation-backed, cannot fail mid-flight)
+            bs = self.pool.block_size
+            for i in active:
+                self.pool.grow(i, int(state.pos[i, 0]) // bs + 1)
+            self._sync_table(state.cache)
         logits, cache = self.decode_fn(jnp.asarray(state.tokens),
                                        jnp.asarray(state.pos), state.cache)
         book.count_decode(len(active))
         book.step += 1
-        book.track_cache(cache)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         tokens, pos = state.tokens.copy(), state.pos.copy()
         for i in active:
@@ -342,28 +475,36 @@ class Scheduler:
             tokens[i, 0] = nxt[i, 0]
             pos[i, 0] += 1
             book.emit(r, tokens[i, 0])
-            if r.done:
+        # sample gauges BEFORE releasing retirees: a lane whose final write
+        # just grew a block still holds it during this step, and the peak
+        # must include it
+        self._track(cache, lanes, DecodeState(tokens, pos, cache), book)
+        for i in active:
+            if lanes[i].done:
                 lanes[i] = None
                 pos[i, 0] = -1
+                self._release(i)
         return DecodeState(tokens, pos, cache)
 
 
 def serve_continuous(admit_fn: Callable, decode_fn: Callable, init_cache_fn,
                      requests: List[Request], *, batch_slots: int,
                      prompt_pad_len: Optional[int] = None,
-                     max_len: Optional[int] = None) -> ServeStats:
+                     max_len: Optional[int] = None,
+                     block_pool: Optional[BlockPool] = None) -> ServeStats:
     """Continuous-batching counterpart of :func:`serve_batch` (see
     :class:`Scheduler` for the step-function contracts)."""
     return Scheduler(admit_fn, decode_fn, init_cache_fn,
                      batch_slots=batch_slots, prompt_pad_len=prompt_pad_len,
-                     max_len=max_len).run(requests)
+                     max_len=max_len, block_pool=block_pool).run(requests)
 
 
 def serve(prefill_step: Callable, admit_step: Callable,
           decode_step: Callable, init_cache_fn, params,
           requests: List[Request], *, scheduler: str = "static",
           batch_slots: int, prompt_pad_len: Optional[int] = None,
-          max_len: Optional[int] = None) -> ServeStats:
+          max_len: Optional[int] = None,
+          block_pool: Optional[BlockPool] = None) -> ServeStats:
     """Dispatch to a scheduler, binding ``params`` into step functions with
     the ``runtime.steps.make_*_step`` signatures (params first):
 
@@ -371,16 +512,23 @@ def serve(prefill_step: Callable, admit_step: Callable,
       admit_step(params, tokens, positions, admit_mask, cache) — continuous
       decode_step(params, tokens, pos, cache)
 
-    The unused step for the chosen scheduler may be None.
+    The unused step for the chosen scheduler may be None. ``block_pool``
+    (continuous only) switches the Scheduler to pool-managed paged
+    admission; the static scheduler serves paged caches through a fully
+    mapped identity table instead (init_cache(paged=True) default).
     """
     if scheduler == "continuous":
         return serve_continuous(
             lambda t, pm, m, c: admit_step(params, t, pm, m, c),
             lambda t, p, c: decode_step(params, t, p, c),
             init_cache_fn, requests, batch_slots=batch_slots,
-            prompt_pad_len=prompt_pad_len, max_len=max_len)
+            prompt_pad_len=prompt_pad_len, max_len=max_len,
+            block_pool=block_pool)
     if scheduler != "static":
         raise ValueError(f"unknown scheduler {scheduler!r}")
+    if block_pool is not None:
+        raise ValueError("block_pool is a continuous-scheduler feature; "
+                         "static paged serving uses a fully mapped table")
     return serve_batch(lambda t, pm, c: prefill_step(params, t, c, pm),
                        lambda t, p, c: decode_step(params, t, p, c),
                        init_cache_fn, requests, batch_slots=batch_slots,

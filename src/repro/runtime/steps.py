@@ -117,6 +117,12 @@ def make_admit_step(cfg: ModelConfig, *, dist=None,
     lanes carry ALL -1 positions: they neither attend nor write, so their
     cache lanes pass through bit-identical while requests are admitted
     mid-flight.
+
+    Paged caches need no extra plumbing here: the block table rides inside
+    the cache pytree (``cache["block_table"]``, updated host-side by the
+    scheduler's BlockPool between calls), cache_reset_slots empties the
+    admitted lanes' mapped *blocks*, and the prompt scatter routes through
+    the table — all data, so this step still traces exactly once.
     """
     def admit(params, tokens, positions, admit_mask, cache):
         ctx = ctx_factory() if ctx_factory is not None else None
