@@ -28,10 +28,17 @@ identity table (dense-equivalent paging). With ``--parity`` the same
 requests are additionally served on the dense cache and greedy tokens are
 verified identical (paged == dense), on top of the scheduler parity check.
 
+``--prefill-chunk N`` (continuous scheduler only) admits prompts in chunks
+of at most N tokens interleaved with resident decode steps (chunked
+prefill), so one long prompt never stalls the resident lanes for a whole
+monolithic prefill. ``--parity`` then additionally serves the requests
+unchunked and verifies chunked == unchunked greedy tokens.
+
 CPU smoke:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
       --requests 8 --new-tokens 8 [--quantize [--deploy-int8 [--kv-bits 8]]] \
-      [--scheduler continuous [--parity]] [--paged-kv [--block-size 16]]
+      [--scheduler continuous [--parity] [--prefill-chunk 16]] \
+      [--paged-kv [--block-size 16]]
 """
 from __future__ import annotations
 
@@ -48,11 +55,13 @@ from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as tfm
 from repro.parallel import make_dist, make_param_shardings
 from repro.runtime import Request, serve
-from repro.runtime.steps import (make_admit_step, make_decode_step,
-                                 make_prefill_step)
+from repro.runtime.steps import (make_admit_step, make_chunk_prefill_step,
+                                 make_decode_step, make_prefill_step)
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
+    """The serve CLI. Exposed as a function so tests (tests/test_docs.py)
+    can introspect the flag set and keep the docs from drifting."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
@@ -94,7 +103,17 @@ def main(argv=None):
                          "worst case batch_slots x ceil(max_len/bs); "
                          "smaller values exercise admission backpressure; "
                          "continuous scheduler only)")
+    ap.add_argument("--prefill-chunk", type=int, default=0, metavar="N",
+                    help="admit prompts in chunks of at most N tokens "
+                         "interleaved with resident decode steps (chunked "
+                         "prefill; 0 = monolithic slot-insert prefill; "
+                         "continuous scheduler only)")
     ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def main(argv=None):
+    ap = build_parser()
     args = ap.parse_args(argv)
     if args.deploy_int8 and not args.quantize:
         ap.error("--deploy-int8 requires --quantize")
@@ -102,6 +121,11 @@ def main(argv=None):
         ap.error("--kv-bits 8 requires --deploy-int8")
     if args.block_size < 1:
         ap.error("--block-size must be >= 1")
+    if args.prefill_chunk < 0:
+        ap.error("--prefill-chunk must be >= 0")
+    if args.prefill_chunk and args.scheduler != "continuous":
+        ap.error("--prefill-chunk requires --scheduler continuous "
+                 "(static groups prefill monolithically)")
     from repro.runtime import BlockPool, blocks_for_tokens
     from repro.runtime.serve_loop import _check_capacity
     nb_lane = blocks_for_tokens(args.max_len, args.block_size)
@@ -227,6 +251,9 @@ def main(argv=None):
     decode = jax.jit(make_decode_step(cfg, dist=dist,
                                       ctx_factory=ctx_factory),
                      donate_argnums=(3,))
+    chunk_step = jax.jit(make_chunk_prefill_step(cfg, dist=dist,
+                                                 ctx_factory=ctx_factory),
+                         donate_argnums=(4,))
 
     def make_requests():
         rng = np.random.RandomState(args.seed)
@@ -252,7 +279,7 @@ def main(argv=None):
                               block_size=args.block_size,
                               num_blocks=num_blocks, mapped=False)
 
-    def run(scheduler, requests, paged=None):
+    def run(scheduler, requests, paged=None, chunk=0):
         paged = args.paged_kv if paged is None else paged
         pool = None
         if paged and scheduler == "continuous":
@@ -262,10 +289,12 @@ def main(argv=None):
                      lambda b: init_cache(b, paged, scheduler), params,
                      requests, scheduler=scheduler,
                      batch_slots=args.batch_slots,
-                     max_len=args.max_len, block_pool=pool)
+                     max_len=args.max_len, block_pool=pool,
+                     chunk_step=chunk_step if chunk else None,
+                     prefill_chunk=chunk or None)
 
     requests = make_requests()
-    stats = run(args.scheduler, requests)
+    stats = run(args.scheduler, requests, chunk=args.prefill_chunk)
     if args.paged_kv and args.scheduler == "continuous":
         paged_note = (f", blocks {stats.blocks_in_use}/{num_blocks} "
                       f"(frag {stats.block_fragmentation:.0%}, "
@@ -274,13 +303,16 @@ def main(argv=None):
         paged_note = f", paged identity-mapped (block-size {args.block_size})"
     else:
         paged_note = ""
+    chunk_note = (f", chunked prefill ({stats.chunk_steps} chunk steps @ "
+                  f"<= {args.prefill_chunk} tokens)"
+                  if args.prefill_chunk else "")
     print(f"[serve:{args.scheduler}] {stats.tokens_generated} tokens, "
           f"{stats.decode_steps} decode steps, "
           f"{stats.prefill_calls} prefills, {stats.wall_s:.2f}s "
           f"({stats.tokens_per_s:.1f} tok/s), "
           f"slot-utilization {stats.slot_utilization:.0%}, "
           f"peak kv-cache {stats.cache_bytes / 1024:.0f} KiB "
-          f"(kv-bits {args.kv_bits}{paged_note})")
+          f"(kv-bits {args.kv_bits}{paged_note}{chunk_note})")
 
     if args.parity:
         other = ("static" if args.scheduler == "continuous"
@@ -295,9 +327,22 @@ def main(argv=None):
         print(f"[parity] OK: {args.scheduler} and {other} schedulers "
               f"emit identical greedy tokens for all "
               f"{len(requests)} requests")
+        if args.prefill_chunk:
+            unchunked_reqs = make_requests()
+            run(args.scheduler, unchunked_reqs)
+            mismatch = [r.rid for r, u in zip(requests, unchunked_reqs)
+                        if r.tokens_out != u.tokens_out]
+            if mismatch:
+                raise SystemExit(
+                    f"[parity] FAIL: request ids {mismatch} diverge "
+                    f"between chunked and unchunked prefill")
+            print(f"[parity] OK: chunked (<= {args.prefill_chunk} tokens) "
+                  f"and unchunked prefill emit identical greedy tokens "
+                  f"for all {len(requests)} requests")
         if args.paged_kv:
             dense_reqs = make_requests()
-            run(args.scheduler, dense_reqs, paged=False)
+            run(args.scheduler, dense_reqs, paged=False,
+                chunk=args.prefill_chunk)
             mismatch = [r.rid for r, d in zip(requests, dense_reqs)
                         if r.tokens_out != d.tokens_out]
             if mismatch:

@@ -659,9 +659,20 @@ def _paged_decode_attend(q, cache: PagedKVCache, block_table, q_pos,
 # Full attention block with projections + cache handling
 # ---------------------------------------------------------------------------
 
+def _prev_positions(positions):
+    """Per-lane position of the last token BEFORE this chunk (chunked
+    prefill): one less than the lane's first live position, or -1 for lanes
+    whose rows are all dead (idle lanes, and lanes starting chunk 1)."""
+    live = positions >= 0
+    big = jnp.where(live, positions, jnp.iinfo(jnp.int32).max)
+    start = jnp.min(big, axis=1)
+    return jnp.where(jnp.any(live, axis=1), start - 1, -1)
+
+
 def attention_block(p, x, positions, cfg: AttnConfig, *, ctx=None,
                     prefix="attn", cache: Optional[KVCache] = None,
-                    chunked: Optional[bool] = None, block_table=None
+                    chunked: Optional[bool] = None, block_table=None,
+                    append: bool = False
                     ) -> Tuple[jnp.ndarray, Optional[KVCache]]:
     """x: (B, T, D). p: dict with wq (D,H*hd), wk/wv (D,KV*hd), wo (H*hd,D).
 
@@ -672,6 +683,15 @@ def attention_block(p, x, positions, cfg: AttnConfig, *, ctx=None,
     ``block_table`` (B, max_blocks) int32 — writes scatter through it and
     decode runs the paged kernels (gather + derived-position mask
     in-kernel).
+
+    ``append=True`` is the chunked-prefill contract: the T tokens are ONE
+    chunk appended at each lane's current position, so queries attend over
+    the pre-write cache contents (the lane's earlier chunks) PLUS the fresh
+    chunk, instead of over the fresh tokens alone. Earlier chunks are read
+    back exactly as decode would read them (quantized caches dequantize on
+    the calibrated grid), and the chunk's own writes keep the dead-cell
+    scatter contract, so co-resident lanes pass through bit-identical per
+    chunk.
 
     DEPLOY: ``x`` may arrive as a QTensor (int8 LN output) with packed
     projection weights — QKV and Wo then run on the int8 matmul kernel.
@@ -724,7 +744,24 @@ def attention_block(p, x, positions, cfg: AttnConfig, *, ctx=None,
         bidx = jnp.arange(B)[:, None]
         if T > 1:
             # Prefill: attend over the fresh K/V (window enforced by mask),
-            # then write the last min(T, S) tokens into the cache.
+            # then write the last min(T, S) tokens into the cache. In
+            # append mode (chunked prefill) the pre-write cache view is
+            # snapshotted first: earlier chunks join the attended keys, and
+            # ring slots the chunk overwrites still show their OLD occupant
+            # (position p - S), which is exactly what earlier queries in
+            # the chunk may still attend within their window.
+            if append:
+                if paged:
+                    prev = _prev_positions(positions)
+                    k_past, v_past = paged_gather_kv(cache, block_table,
+                                                     cfg.window, kvq)
+                    kpos_past = paged_key_positions(block_table, prev, S,
+                                                    cache.pos.shape[1])
+                elif quantized:
+                    k_past, v_past = dequantize_kv(cache, kvq)
+                    kpos_past = cache.pos
+                else:
+                    k_past, v_past, kpos_past = cache.k, cache.v, cache.pos
             keep = min(T, S)
             kw, vw, pw = k[:, -keep:], v[:, -keep:], positions[:, -keep:]
             if paged:
@@ -733,7 +770,12 @@ def attention_block(p, x, positions, cfg: AttnConfig, *, ctx=None,
             else:
                 slots = _write_slots(pw, S, cfg.window)
                 new_cache = _write_kv(cache, kw, vw, pw, slots, bidx, kvq)
-            k_att, v_att, kpos_att = k, v, positions
+            if append:
+                k_att = jnp.concatenate([k_past.astype(k.dtype), k], axis=1)
+                v_att = jnp.concatenate([v_past.astype(v.dtype), v], axis=1)
+                kpos_att = jnp.concatenate([kpos_past, positions], axis=1)
+            else:
+                k_att, v_att, kpos_att = k, v, positions
         elif paged:
             # Paged decode: write the new token through the block table,
             # attend through the paged kernel (site fallback: gather the

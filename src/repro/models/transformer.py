@@ -215,14 +215,19 @@ def _attn_input(cfg: ModelConfig, p, x, ctx, prefix):
 
 def block_apply(cfg: ModelConfig, kind: str, p, x, positions, *, ctx=None,
                 prefix="layer", cache=None, dist=None, chunked=None,
-                block_table=None):
+                block_table=None, append=False):
     """One transformer block of the given kind. Returns (x, new_cache)."""
+    if append and kind not in ("attn", "local_attn"):
+        raise ValueError(
+            f"chunked (append) prefill supports attention blocks only, got "
+            f"{kind!r} (recurrent state cannot replay earlier chunks)")
     if kind in ("attn", "local_attn"):
         acfg = attn_cfg_for(cfg, kind)
         h = _attn_input(cfg, p, x, ctx, prefix)
         attn_out, new_cache = attention_block(
             p["attn"], h, positions, acfg, ctx=ctx, prefix=f"{prefix}/attn",
-            cache=cache, chunked=chunked, block_table=block_table)
+            cache=cache, chunked=chunked, block_table=block_table,
+            append=append)
         if cfg.post_norm:
             attn_out = _norm(cfg, p["post_ln1"], attn_out)
         x = x + attn_out
@@ -565,12 +570,15 @@ def _head(cfg: ModelConfig, params, x, ctx, dist=None):
 
 def forward(cfg: ModelConfig, params, tokens, *, embeds=None, ctx=None,
             dist: Optional[DistContext] = None, cache=None, positions=None,
-            remat: bool = False, chunked=None):
+            remat: bool = False, chunked=None, append: bool = False):
     """Returns (logits, new_cache). tokens: (B, T) int32.
 
     positions: (B, T) absolute positions (defaults to arange).
     cache: pytree from init_cache (stacked or unrolled layout must match
     params layout).
+    append: chunked-prefill mode — the tokens are one chunk appended at
+    each lane's current cache position; attention reads the cache (earlier
+    chunks) in addition to the fresh tokens (see models.attention).
     """
     B, T = tokens.shape
     x = _embed(cfg, params, tokens, embeds, ctx, dist=dist)
@@ -591,7 +599,8 @@ def forward(cfg: ModelConfig, params, tokens, *, embeds=None, ctx=None,
             def _blk(p, x, c, kind=kind, i=i):
                 return block_apply(cfg, kind, p, x, positions, ctx=ctx,
                                    prefix=f"layer{i}", cache=c, dist=dist,
-                                   chunked=chunked, block_table=block_table)
+                                   chunked=chunked, block_table=block_table,
+                                   append=append)
             if remat:
                 _blk = jax.checkpoint(
                     _blk, policy=jax.checkpoint_policies.nothing_saveable)
@@ -615,7 +624,8 @@ def forward(cfg: ModelConfig, params, tokens, *, embeds=None, ctx=None,
             c = c_slices[j] if c_slices is not None else None
             x, nc = block_apply(cfg, kind, p_slices[j], x, positions,
                                 ctx=ctx, prefix="layer", cache=c, dist=dist,
-                                chunked=chunked, block_table=block_table)
+                                chunked=chunked, block_table=block_table,
+                                append=append)
             new_cs.append(nc)
         return x, (new_cs if c_slices is not None else None)
 
@@ -651,7 +661,8 @@ def forward(cfg: ModelConfig, params, tokens, *, embeds=None, ctx=None,
         p_tail = params["tail"][i]
         x, nc = block_apply(cfg, kind, p_tail, x, positions, ctx=ctx,
                             prefix="tail", cache=c, dist=dist,
-                            chunked=chunked, block_table=block_table)
+                            chunked=chunked, block_table=block_table,
+                            append=append)
         new_tail_caches.append(nc)
 
     new_cache = None
@@ -680,7 +691,8 @@ def train_loss(cfg: ModelConfig, params, batch, *, ctx=None, dist=None,
 
 
 def prefill(cfg: ModelConfig, params, tokens, cache, *, positions=None,
-            ctx=None, embeds=None, dist=None, chunked=None):
+            ctx=None, embeds=None, dist=None, chunked=None,
+            append: bool = False):
     """Fill the cache from a prompt; returns (last_logits, cache).
 
     positions: optional (B, T) absolute positions. Left-packed ragged
@@ -689,10 +701,15 @@ def prefill(cfg: ModelConfig, params, tokens, cache, *, positions=None,
     padded request produces the same logits/cache lane as serving it alone.
     A lane whose positions are ALL -1 writes nothing — the slot-insert
     admission path of the continuous scheduler relies on this.
+
+    append=True appends the tokens as ONE chunk at each lane's current
+    cache position (chunked prefill): attention covers the cache contents
+    plus the fresh chunk, so a prompt split into chunks fills the cache —
+    and emits its last-token logits — exactly like a monolithic prefill.
     """
     logits, cache = forward(cfg, params, tokens, embeds=embeds, ctx=ctx,
                             dist=dist, cache=cache, positions=positions,
-                            chunked=chunked)
+                            chunked=chunked, append=append)
     return logits[:, -1:], cache
 
 

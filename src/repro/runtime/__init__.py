@@ -4,7 +4,7 @@ from repro.runtime.fault_tolerance import (PreemptionGuard, RestartPolicy,
 from repro.runtime.serve_loop import (DecodeState, Request, RequestLatency,
                                       Scheduler, ServeStats, serve,
                                       serve_batch, serve_continuous)
-from repro.runtime.steps import (make_admit_step, make_decode_step,
-                                 make_encoder_forward, make_prefill_step,
-                                 make_train_step)
+from repro.runtime.steps import (make_admit_step, make_chunk_prefill_step,
+                                 make_decode_step, make_encoder_forward,
+                                 make_prefill_step, make_train_step)
 from repro.runtime.train_loop import TrainLoopConfig, run_train_loop

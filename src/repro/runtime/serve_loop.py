@@ -19,6 +19,16 @@ Two schedulers share the Request / ServeStats bookkeeping:
   fixed (prompts pad to ``prompt_pad_len``, decode is always (B, 1)), so
   the jitted steps never recompile across admissions.
 
+  With ``prefill_chunk=N`` (chunked prefill) admission becomes host-side
+  bookkeeping only: an admitted lane enters a PREFILLING state and its
+  prompt is appended chunk by chunk — at most N tokens per model call
+  (runtime.steps.make_chunk_prefill_step) — interleaved 1:1 with the
+  resident lanes' decode steps, so one long prompt never stalls resident
+  decoding for a whole monolithic prefill. A lane becomes decodable only
+  after its last chunk, whose final-position logits emit its first token
+  (the admit-path contract), and the emitted tokens are identical to the
+  unchunked schedulers'.
+
 Position sentinel contract (models/attention.py): position -1 marks a dead
 cell — a pad token inside a left-packed prompt or an idle decode lane. Dead
 cells are masked out of attention and their KV-cache writes are dropped,
@@ -62,6 +72,9 @@ class RequestLatency:
 @dataclasses.dataclass
 class ServeStats:
     prefill_calls: int = 0
+    # chunked prefill only: number of chunk-step model calls (each also
+    # counts as a prefill_call); 0 when serving unchunked
+    chunk_steps: int = 0
     decode_steps: int = 0
     tokens_generated: int = 0
     wall_s: float = 0.0
@@ -137,6 +150,14 @@ def _check_capacity(requests: List[Request], max_len: Optional[int],
                     "later KV writes would be silently dropped")
 
 
+def _require_nonempty_prompt(r: Request) -> None:
+    """Shared by the monolithic and chunked admission paths so the
+    dead-lane/logits contract cannot drift between them."""
+    if len(r.prompt) == 0:
+        raise ValueError(f"request {r.rid}: empty prompt (an all-dead "
+                         f"lane has no last-token logits to decode from)")
+
+
 def _pack_prompts(group: List[Request], T: int
                   ) -> Tuple[np.ndarray, np.ndarray]:
     """Left-pad prompts to length T. Returns (tokens (B,T), positions (B,T))
@@ -145,9 +166,7 @@ def _pack_prompts(group: List[Request], T: int
     posm = np.full((len(group), T), -1, np.int32)
     for i, r in enumerate(group):
         n = len(r.prompt)
-        if n == 0:
-            raise ValueError(f"request {r.rid}: empty prompt (an all-dead "
-                             f"lane has no last-token logits to decode from)")
+        _require_nonempty_prompt(r)
         if n > T:
             raise ValueError(f"request {r.rid}: prompt length {n} exceeds "
                              f"the packing length {T}")
@@ -294,11 +313,25 @@ class Scheduler:
     admit_fn: (tokens (B,P), positions (B,P), admit_mask (B,), cache)
               -> (last_logits (B,1,V) | (B,P,V), cache)
     decode_fn: (tokens (B,1), pos (B,1), cache) -> (logits (B,1,V), cache)
+    chunk_fn:  (tokens (B,C), positions (B,C), reset_mask (B,), cache)
+              -> (last_logits (B,1,V), cache)       [chunked prefill only]
     init_cache_fn: (batch,) -> model cache pytree
 
     Only greedy (argmax) decoding is implemented — the parity property
     "continuous == static == served alone, token for token" is only
     well-defined for deterministic sampling.
+
+    **Chunked prefill** (``prefill_chunk=N`` + ``chunk_fn``): a lane's
+    lifecycle gains a PREFILLING state between admission and decode.
+    Admission marks the lane PREFILLING at prompt offset 0 (FIFO, greedy,
+    and — when paged — with the same worst-case reservation, but mapping
+    only the first chunk's blocks); every loop iteration then issues ONE
+    chunk step advancing ALL prefilling lanes by up to N prompt tokens,
+    followed by one decode step for the decodable lanes — a 1:1
+    interleave, so resident lanes keep emitting between chunks. The lane
+    becomes decodable after its last chunk (first token emitted from that
+    chunk's logits). Prefilling lanes are dead (pos -1) in the decode
+    step and count as idle in slot_utilization.
 
     **Paged mode** (``block_pool`` given): the scheduler owns a
     :class:`~repro.runtime.block_pool.BlockPool` whose block table rides
@@ -317,21 +350,35 @@ class Scheduler:
                  init_cache_fn: Callable, *, batch_slots: int,
                  prompt_pad_len: Optional[int] = None,
                  max_len: Optional[int] = None,
-                 block_pool: Optional[BlockPool] = None):
+                 block_pool: Optional[BlockPool] = None,
+                 chunk_fn: Optional[Callable] = None,
+                 prefill_chunk: Optional[int] = None):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         if block_pool is not None and block_pool.batch_slots != batch_slots:
             raise ValueError(
                 f"block_pool is sized for {block_pool.batch_slots} lanes, "
                 f"scheduler has batch_slots={batch_slots}")
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError(
+                    f"prefill_chunk must be >= 1, got {prefill_chunk}")
+            if chunk_fn is None:
+                raise ValueError("prefill_chunk requires a chunk_fn "
+                                 "(runtime.steps.make_chunk_prefill_step)")
         self.admit_fn = admit_fn
         self.decode_fn = decode_fn
+        self.chunk_fn = chunk_fn
         self.init_cache_fn = init_cache_fn
         self.batch_slots = batch_slots
         self.prompt_pad_len = prompt_pad_len
+        self.prefill_chunk = prefill_chunk
         self.max_len = max_len          # per-lane cache slots (None: unchecked)
         self.pool = block_pool
         self._block_bytes = 0
+        # per-lane PREFILLING state: next prompt offset to append, or None
+        # when the lane is idle / decodable (chunked prefill only)
+        self._pref: List[Optional[int]] = [None] * batch_slots
 
     def run(self, requests: List[Request]) -> ServeStats:
         _check_capacity(requests, self.max_len, self.pool)
@@ -348,6 +395,7 @@ class Scheduler:
             (len(r.prompt) for r in queue), default=1)
         B = self.batch_slots
         lanes: List[Optional[Request]] = [None] * B
+        self._pref = [None] * B
         state = DecodeState(tokens=np.zeros((B, 1), np.int32),
                             pos=np.full((B, 1), -1, np.int32),
                             cache=self.init_cache_fn(B))
@@ -360,14 +408,24 @@ class Scheduler:
         while queue or any(r is not None for r in lanes):
             free = [i for i in range(B) if lanes[i] is None]
             if free and queue and self._head_fits(queue[0]):
-                state = self._admit(free, queue, pad, lanes, state, book)
-                continue        # immediate retirees may have freed lanes
-            if not any(r is not None for r in lanes):
-                # unreachable: _check_capacity guarantees an empty pool
-                # can always take the queue head
+                if self.prefill_chunk is None:
+                    state = self._admit(free, queue, pad, lanes, state, book)
+                    continue    # immediate retirees may have freed lanes
+                self._admit_chunked(free, queue, lanes)
+            prefilling = any(off is not None for off in self._pref)
+            if prefilling:
+                state = self._chunk(lanes, state, book)
+            decodable = [i for i in range(B) if lanes[i] is not None
+                         and self._pref[i] is None]
+            if decodable:
+                state = self._decode(lanes, state, book)
+            elif not prefilling and not any(r is not None for r in lanes):
+                # no progress possible: nothing admitted, prefilling or
+                # decodable while the queue is non-empty. Unreachable:
+                # _check_capacity guarantees an empty pool can always take
+                # the queue head.
                 raise RuntimeError("paged backpressure deadlock: queue "
                                    "head does not fit an empty pool")
-            state = self._decode(lanes, state, book)
         return book.finalize(t_start)
 
     # -- paged-pool plumbing (no-ops in dense mode) -------------------------
@@ -383,11 +441,16 @@ class Scheduler:
             blocks_for_tokens(need, self.pool.block_size))
 
     def _reserve(self, lane: int, r: Request) -> bool:
+        """Worst-case reservation + prompt-block mapping at admission. In
+        chunked mode only the FIRST chunk's blocks are mapped now; _chunk
+        grows the prefix by O(chunk / block_size) blocks per chunk."""
         if self.pool is None:
             return True
         bs = self.pool.block_size
+        first = len(r.prompt) if self.prefill_chunk is None \
+            else min(len(r.prompt), self.prefill_chunk)
         return self.pool.reserve_and_alloc(
-            lane, blocks_for_tokens(len(r.prompt), bs),
+            lane, blocks_for_tokens(first, bs),
             blocks_for_tokens(len(r.prompt) + r.max_new_tokens - 1, bs))
 
     def _release(self, lane: int) -> None:
@@ -410,6 +473,9 @@ class Scheduler:
         else:
             live = sum(int(state.pos[i, 0]) for i, r in enumerate(lanes)
                        if r is not None and state.pos[i, 0] > 0)
+            # PREFILLING lanes carry pos -1 but already hold their written
+            # chunk tokens
+            live += sum(off for off in self._pref if off)
             book.track_pool(self.pool, live, self._block_bytes)
 
     # -----------------------------------------------------------------------
@@ -455,8 +521,78 @@ class Scheduler:
                 self._release(i)
         return DecodeState(tokens, pos, cache)
 
+    def _admit_chunked(self, free, queue, lanes) -> None:
+        """Chunked-prefill admission is pure host bookkeeping: mark each
+        admitted lane PREFILLING at prompt offset 0 (FIFO, head-of-line
+        backpressure as in _admit); the model work happens chunk by chunk
+        in _chunk, interleaved with resident decode steps."""
+        for i in free:
+            if not queue:
+                break
+            r = queue[0]
+            _require_nonempty_prompt(r)
+            if not self._reserve(i, r):
+                break           # head-of-line backpressure: keep FIFO order
+            queue.popleft()
+            lanes[i] = r
+            self._pref[i] = 0
+
+    def _chunk(self, lanes, state: DecodeState, book: _Book) -> DecodeState:
+        """One fixed-shape chunk step: append up to ``prefill_chunk`` prompt
+        tokens to every PREFILLING lane (left-padded into the fixed chunk
+        width; lanes starting chunk 1 are reset first via the step's
+        reset_mask). Lanes finishing their last chunk emit their first
+        token from the chunk's final-position logits and become decodable
+        (quota-1 requests retire immediately, as in _admit)."""
+        C = self.prefill_chunk
+        B = self.batch_slots
+        prefilling = [i for i in range(B) if self._pref[i] is not None]
+        toks = np.zeros((B, C), np.int32)
+        posm = np.full((B, C), -1, np.int32)
+        reset = np.zeros((B,), bool)
+        ends = {}
+        for i in prefilling:
+            r = lanes[i]
+            off = self._pref[i]
+            c = min(C, len(r.prompt) - off)
+            toks[i, C - c:] = r.prompt[off:off + c]
+            posm[i, C - c:] = np.arange(off, off + c, dtype=np.int32)
+            reset[i] = off == 0
+            ends[i] = off + c
+            if self.pool is not None:
+                # map the blocks this chunk's writes land in (reservation-
+                # backed, cannot fail mid-flight — same rule as _decode)
+                self.pool.grow(
+                    i, (off + c - 1) // self.pool.block_size + 1)
+        self._sync_table(state.cache)
+        logits, cache = self.chunk_fn(jnp.asarray(toks), jnp.asarray(posm),
+                                      jnp.asarray(reset), state.cache)
+        book.stats.prefill_calls += 1
+        book.stats.chunk_steps += 1
+        book.step += 1
+        last = np.asarray(jnp.argmax(logits[:, -1:], axis=-1), np.int32)
+        tokens, pos = state.tokens.copy(), state.pos.copy()
+        for i in prefilling:
+            r = lanes[i]
+            if ends[i] < len(r.prompt):
+                self._pref[i] = ends[i]     # more chunks to go
+                continue
+            self._pref[i] = None            # last chunk: lane is decodable
+            tokens[i, 0] = last[i, 0]
+            pos[i, 0] = len(r.prompt)
+            book.emit(r, tokens[i, 0])
+        # sample gauges BEFORE releasing quota-1 retirees (as in _admit)
+        self._track(cache, lanes, DecodeState(tokens, pos, cache), book)
+        for i in prefilling:
+            if self._pref[i] is None and lanes[i].done:
+                lanes[i] = None             # quota 1: retire immediately
+                pos[i, 0] = -1
+                self._release(i)
+        return DecodeState(tokens, pos, cache)
+
     def _decode(self, lanes, state: DecodeState, book: _Book) -> DecodeState:
-        active = [i for i, r in enumerate(lanes) if r is not None]
+        active = [i for i, r in enumerate(lanes)
+                  if r is not None and self._pref[i] is None]
         if self.pool is not None:
             # incremental growth: map the block the coming write lands in
             # (reservation-backed, cannot fail mid-flight)
@@ -491,12 +627,16 @@ def serve_continuous(admit_fn: Callable, decode_fn: Callable, init_cache_fn,
                      requests: List[Request], *, batch_slots: int,
                      prompt_pad_len: Optional[int] = None,
                      max_len: Optional[int] = None,
-                     block_pool: Optional[BlockPool] = None) -> ServeStats:
+                     block_pool: Optional[BlockPool] = None,
+                     chunk_fn: Optional[Callable] = None,
+                     prefill_chunk: Optional[int] = None) -> ServeStats:
     """Continuous-batching counterpart of :func:`serve_batch` (see
     :class:`Scheduler` for the step-function contracts)."""
     return Scheduler(admit_fn, decode_fn, init_cache_fn,
                      batch_slots=batch_slots, prompt_pad_len=prompt_pad_len,
-                     max_len=max_len, block_pool=block_pool).run(requests)
+                     max_len=max_len, block_pool=block_pool,
+                     chunk_fn=chunk_fn,
+                     prefill_chunk=prefill_chunk).run(requests)
 
 
 def serve(prefill_step: Callable, admit_step: Callable,
@@ -504,18 +644,24 @@ def serve(prefill_step: Callable, admit_step: Callable,
           requests: List[Request], *, scheduler: str = "static",
           batch_slots: int, prompt_pad_len: Optional[int] = None,
           max_len: Optional[int] = None,
-          block_pool: Optional[BlockPool] = None) -> ServeStats:
+          block_pool: Optional[BlockPool] = None,
+          chunk_step: Optional[Callable] = None,
+          prefill_chunk: Optional[int] = None) -> ServeStats:
     """Dispatch to a scheduler, binding ``params`` into step functions with
     the ``runtime.steps.make_*_step`` signatures (params first):
 
       prefill_step(params, tokens, cache, positions) — static mode
       admit_step(params, tokens, positions, admit_mask, cache) — continuous
+      chunk_step(params, tokens, positions, reset_mask, cache) — chunked
       decode_step(params, tokens, pos, cache)
 
     The unused step for the chosen scheduler may be None. ``block_pool``
     (continuous only) switches the Scheduler to pool-managed paged
     admission; the static scheduler serves paged caches through a fully
     mapped identity table instead (init_cache(paged=True) default).
+    ``prefill_chunk`` (continuous only, needs ``chunk_step``) admits
+    prompts in chunks of at most that many tokens, interleaved with
+    resident decode steps.
     """
     if scheduler == "continuous":
         return serve_continuous(
@@ -523,12 +669,18 @@ def serve(prefill_step: Callable, admit_step: Callable,
             lambda t, p, c: decode_step(params, t, p, c),
             init_cache_fn, requests, batch_slots=batch_slots,
             prompt_pad_len=prompt_pad_len, max_len=max_len,
-            block_pool=block_pool)
+            block_pool=block_pool,
+            chunk_fn=(None if chunk_step is None else
+                      lambda t, pm, m, c: chunk_step(params, t, pm, m, c)),
+            prefill_chunk=prefill_chunk)
     if scheduler != "static":
         raise ValueError(f"unknown scheduler {scheduler!r}")
     if block_pool is not None:
         raise ValueError("block_pool is a continuous-scheduler feature; "
                          "static paged serving uses a fully mapped table")
+    if prefill_chunk is not None:
+        raise ValueError("prefill_chunk is a continuous-scheduler feature; "
+                         "static groups prefill each group monolithically")
     return serve_batch(lambda t, pm, c: prefill_step(params, t, c, pm),
                        lambda t, p, c: decode_step(params, t, p, c),
                        init_cache_fn, requests, batch_slots=batch_slots,

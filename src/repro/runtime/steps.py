@@ -6,7 +6,9 @@ microbatches — per-device activation memory scales 1/M), global-norm
 clipping, Adam, and optional PEG-int8 cross-pod gradient compression.
 ``make_prefill_step`` / ``make_decode_step`` build serve steps with KV-cache
 threading; ``make_admit_step`` is the continuous-batching slot-insert
-prefill (reset admitted lanes + prefill, other lanes bit-preserved).
+prefill (reset admitted lanes + prefill, other lanes bit-preserved);
+``make_chunk_prefill_step`` is its chunked-prefill sibling (append one
+fixed-width chunk at each lane's current position).
 """
 from __future__ import annotations
 
@@ -130,6 +132,40 @@ def make_admit_step(cfg: ModelConfig, *, dist=None,
         return tfm.prefill(cfg, params, tokens, cache, positions=positions,
                            ctx=ctx, dist=dist, chunked=chunked)
     return admit
+
+
+def make_chunk_prefill_step(cfg: ModelConfig, *, dist=None,
+                            ctx_factory: Optional[Callable] = None,
+                            chunked=None):
+    """Chunked-prefill step for continuous batching: append ONE fixed-width
+    chunk of prompt tokens at each participating lane's current cache
+    position (one jitted step, fixed (B, C) shapes — traced exactly once
+    across arbitrarily many chunks and admissions).
+
+    chunk(params, tokens (B, C), positions (B, C), reset_mask (B,), cache)
+        -> (last_logits (B, 1, V), cache)
+
+    ``reset_mask`` marks lanes starting their FIRST chunk — their cache
+    lanes are emptied first (pos -> -1, exactly the admit-step reset).
+    Every row is the lane's next chunk, left-padded into the fixed width C
+    (real positions off..off+c-1, pads -1); lanes not prefilling this step
+    carry ALL -1 positions and pass through bit-identical. Attention runs
+    in append mode (models.attention): queries see the cache (the lane's
+    earlier chunks) plus the fresh chunk, so after the last chunk the
+    lane's cache and last-token logits match a monolithic slot-insert
+    prefill — resident lanes keep decoding between chunks instead of
+    stalling through one long prefill.
+
+    The paged twin needs no extra plumbing (same reasoning as
+    make_admit_step); the scheduler grows a lane's mapped block prefix
+    by O(chunk / block_size) blocks before each chunk.
+    """
+    def chunk(params, tokens, positions, reset_mask, cache):
+        ctx = ctx_factory() if ctx_factory is not None else None
+        cache = tfm.cache_reset_slots(cache, reset_mask)
+        return tfm.prefill(cfg, params, tokens, cache, positions=positions,
+                           ctx=ctx, dist=dist, chunked=chunked, append=True)
+    return chunk
 
 
 def make_decode_step(cfg: ModelConfig, *, dist=None,
