@@ -35,6 +35,17 @@ stall this PR removes) and the long request's time-to-first-token in
 model-call steps, with chunked == unchunked greedy parity asserted
 in-bench.
 
+A fourth section benches the PREFIX CACHE on the workload it targets: N
+requests sharing a K-token prompt prefix (system-prompt traffic), served
+sequentially through a small lane pool. Unshared, every admission
+prefills its full prompt and allocates its full block span; with the
+radix cache, retiring lanes donate their prompt blocks and every
+admission after the first wave maps the shared K_aligned tokens read-only
+and prefills only its novel suffix — the rows assert prefill tokens
+processed == N * (prompt - K_aligned) + first_wave * K_aligned and that
+fresh block allocations scale with the suffix only, with shared ==
+unshared greedy parity asserted in-bench.
+
 ``python -m benchmarks.serving_bench`` (or benchmarks/run.py --sections
 serving) also writes machine-readable ``BENCH_serving.json``.
 """
@@ -49,7 +60,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as tfm
-from repro.runtime import BlockPool, Request, blocks_for_tokens, serve
+from repro.runtime import (BlockPool, RadixCache, Request, blocks_for_tokens,
+                           serve)
 from repro.runtime.steps import (make_admit_step, make_chunk_prefill_step,
                                  make_decode_step, make_prefill_step)
 
@@ -82,6 +94,19 @@ CHUNK_RESIDENT = (8, 80)     # (prompt_len, quota) for the 3 residents
 CHUNK_EARLY = (8, 4)         # retires early, freeing a lane mid-flight
 CHUNK_LONG = (256, 16)       # the long-prompt late arrival
 CHUNK = 16                   # tokens per chunk step
+
+# prefix-cache section: N requests opening with the SAME system prefix,
+# drained through a small lane pool so later admissions hit the blocks the
+# first wave donated. Sizes keep every request under the reduced local
+# window (prompt + quota - 2 < 16), so retiring lanes are donation-eligible
+PREFIX_SLOTS = 2
+PREFIX_N = 10
+PREFIX_BLOCK_SIZE = 4
+PREFIX_MAX_LEN = 16
+PREFIX_PROMPT = 12           # tokens; first PREFIX_SHARED are common
+PREFIX_SHARED = 8            # == K_aligned (block-aligned by construction)
+PREFIX_QUOTA = 4
+PREFIX_NUM_BLOCKS = 12       # small enough to exercise LRU eviction
 
 
 def _requests(cfg):
@@ -157,6 +182,7 @@ def bench():
             cont["tokens_per_s"] / max(stat["tokens_per_s"], 1e-9), 2)
     rows += bench_paged()
     rows += bench_chunked()
+    rows += bench_prefix()
     return rows
 
 
@@ -346,11 +372,141 @@ def bench_chunked():
     return rows
 
 
+def _prefix_requests(cfg):
+    rng = np.random.RandomState(3)
+    shared = rng.randint(1, cfg.vocab_size, size=PREFIX_SHARED)
+    return [Request(rid=i,
+                    prompt=np.concatenate(
+                        [shared,
+                         rng.randint(1, cfg.vocab_size,
+                                     size=PREFIX_PROMPT - PREFIX_SHARED)]
+                    ).astype(np.int32),
+                    max_new_tokens=PREFIX_QUOTA)
+            for i in range(PREFIX_N)]
+
+
+class _CountingPool(BlockPool):
+    """BlockPool that counts fresh block draws (novel allocations + COW
+    copies) — the bench's O(suffix) allocation evidence."""
+
+    def reset(self):
+        self.popped = 0
+        super().reset()
+
+    def _pop_free(self, n):
+        self.popped += n
+        return super()._pop_free(n)
+
+
+def bench_prefix():
+    """Radix prefix cache vs unshared paged serving on a shared-prefix
+    workload. Asserts the O(suffix) claims in-bench: after the first wave
+    of misses, every admission maps K_aligned shared tokens and prefills /
+    allocates its novel suffix only."""
+    cfg = get_config("gemma2-2b").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0), stacked=True,
+                             dtype=jnp.float32)
+    admit = jax.jit(make_admit_step(cfg), donate_argnums=(4,))
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(3,))
+    chunkstep = jax.jit(make_chunk_prefill_step(cfg), donate_argnums=(4,))
+    copyblock = jax.jit(tfm.cache_copy_block, donate_argnums=(0,))
+    nb_lane = tfm.paged_lane_blocks(cfg, PREFIX_MAX_LEN, PREFIX_BLOCK_SIZE)
+    caps = tfm.attn_write_caps(cfg, PREFIX_MAX_LEN, PREFIX_BLOCK_SIZE)
+
+    def run(reqs, prefix):
+        pool = _CountingPool(PREFIX_NUM_BLOCKS, PREFIX_BLOCK_SIZE,
+                             PREFIX_SLOTS, nb_lane)
+
+        def init(b):
+            return tfm.init_cache(cfg, b, PREFIX_MAX_LEN, dtype=jnp.float32,
+                                  paged=True, block_size=PREFIX_BLOCK_SIZE,
+                                  num_blocks=PREFIX_NUM_BLOCKS, mapped=False)
+        stats = serve(None, admit, decode, init, params, reqs,
+                      scheduler="continuous", batch_slots=PREFIX_SLOTS,
+                      max_len=PREFIX_MAX_LEN, block_pool=pool,
+                      chunk_step=chunkstep,
+                      radix_cache=RadixCache(PREFIX_BLOCK_SIZE) if prefix
+                      else None,
+                      write_caps=caps, copy_block_fn=copyblock)
+        return stats, pool.popped
+
+    def warm(prefix):
+        reqs = [Request(rid=0, prompt=np.ones(PREFIX_PROMPT, np.int32),
+                        max_new_tokens=2) for _ in range(PREFIX_SLOTS)]
+        run(reqs, prefix)
+
+    total_cols = blocks_for_tokens(PREFIX_PROMPT + PREFIX_QUOTA - 1,
+                                   PREFIX_BLOCK_SIZE)
+    k_blocks = PREFIX_SHARED // PREFIX_BLOCK_SIZE
+    rows, outs = [], {}
+    for prefix in (False, True):
+        warm(prefix)
+        best = None
+        for _ in range(REPEATS):
+            reqs = _prefix_requests(cfg)
+            stats, popped = run(reqs, prefix)
+            if best is None or stats.tokens_per_s > best[0].tokens_per_s:
+                best = (stats, popped, reqs)
+        stats, popped, reqs = best
+        name = "shared" if prefix else "unshared"
+        outs[name] = [r.tokens_out for r in reqs]
+        prompt_tokens = PREFIX_N * PREFIX_PROMPT
+        prefilled = prompt_tokens - stats.prefill_tokens_saved
+        rows.append({
+            "name": f"serve_prefix_{name}",
+            "prefix_cache": prefix,
+            "batch_slots": PREFIX_SLOTS,
+            "requests": PREFIX_N,
+            "prompt_len": PREFIX_PROMPT,
+            "shared_prefix_tokens": PREFIX_SHARED,
+            "quota": PREFIX_QUOTA,
+            "block_size": PREFIX_BLOCK_SIZE,
+            "num_blocks": PREFIX_NUM_BLOCKS,
+            "tokens": stats.tokens_generated,
+            "decode_steps": stats.decode_steps,
+            "wall_s": round(stats.wall_s, 3),
+            "tokens_per_s": round(stats.tokens_per_s, 1),
+            "prefill_tokens_processed": prefilled,
+            "prefill_tokens_saved": stats.prefill_tokens_saved,
+            "prefix_hit_tokens": stats.prefix_hit_tokens,
+            "prefix_hit_rate": round(stats.prefix_hit_rate, 3),
+            "peak_shared_blocks": stats.shared_blocks,
+            "blocks_allocated": popped,
+            "peak_blocks_in_use": stats.blocks_in_use,
+        })
+    assert outs["unshared"] == outs["shared"], \
+        "shared == unshared greedy parity violated under benchmark workload"
+    unshared, shared = rows[-2], rows[-1]
+    # O(suffix) prefill: the first wave (PREFIX_SLOTS misses on an empty
+    # cache) prefills fully; every later admission hits K_aligned tokens
+    hits = PREFIX_N - PREFIX_SLOTS
+    assert shared["prefill_tokens_saved"] == hits * PREFIX_SHARED, \
+        "every post-first-wave admission should hit the shared prefix"
+    assert shared["prefill_tokens_processed"] == \
+        PREFIX_N * (PREFIX_PROMPT - PREFIX_SHARED) \
+        + PREFIX_SLOTS * PREFIX_SHARED, \
+        "prefill tokens should be N * suffix + first_wave * K_aligned"
+    # O(suffix) allocation: misses draw their full span, hits only their
+    # novel suffix columns (the K_aligned columns are mapped, not drawn)
+    assert unshared["blocks_allocated"] == PREFIX_N * total_cols
+    assert shared["blocks_allocated"] == \
+        PREFIX_SLOTS * total_cols + hits * (total_cols - k_blocks), \
+        "hit admissions should allocate suffix blocks only"
+    shared["prefill_tokens_vs_unshared"] = round(
+        shared["prefill_tokens_processed"]
+        / max(unshared["prefill_tokens_processed"], 1), 3)
+    shared["blocks_allocated_vs_unshared"] = round(
+        shared["blocks_allocated"]
+        / max(unshared["blocks_allocated"], 1), 3)
+    return rows
+
+
 def report(rows) -> str:
     hdr = ("name,kv_bits,tokens,decode_steps,wall_s,tokens_per_s,"
            "slot_utilization,peak_cache_bytes,speedup_vs_static,"
            "cache_bytes_vs_dense,max_decode_gap_ms,"
-           "stall_reduction_vs_monolithic")
+           "stall_reduction_vs_monolithic,prefill_tokens_processed,"
+           "blocks_allocated")
     lines = [hdr]
     for r in rows:
         lines.append(
@@ -362,7 +518,9 @@ def report(rows) -> str:
             f"{r.get('speedup_vs_static', '')},"
             f"{r.get('cache_bytes_vs_dense', '')},"
             f"{r.get('max_decode_gap_ms', '')},"
-            f"{r.get('stall_reduction_vs_monolithic', '')}")
+            f"{r.get('stall_reduction_vs_monolithic', '')},"
+            f"{r.get('prefill_tokens_processed', '')},"
+            f"{r.get('blocks_allocated', '')}")
     return "\n".join(lines)
 
 

@@ -34,11 +34,23 @@ prefill), so one long prompt never stalls the resident lanes for a whole
 monolithic prefill. ``--parity`` then additionally serves the requests
 unchunked and verifies chunked == unchunked greedy tokens.
 
+``--prefix-cache`` (continuous + ``--paged-kv``) enables prefix sharing: a
+radix tree caches retired lanes' prompt blocks, admission maps the longest
+block-aligned cached prefix read-only (refcounted, copy-on-write under
+ring-window wrap) and prefills only the novel suffix. The launcher then
+synthesizes a shared-prefix workload (every request opens with the same
+``--prompt-len``/2-token system prefix) so the cache actually hits;
+``--parity`` additionally serves the same requests with sharing disabled
+and verifies shared == unshared greedy tokens — in particular under
+``--quantize --deploy-int8 [--kv-bits 8]``, where the int8 KV blocks carry
+their per-head per-slot scales inside the block and sharing stays
+bit-exact.
+
 CPU smoke:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
       --requests 8 --new-tokens 8 [--quantize [--deploy-int8 [--kv-bits 8]]] \
       [--scheduler continuous [--parity] [--prefill-chunk 16]] \
-      [--paged-kv [--block-size 16]]
+      [--paged-kv [--block-size 16] [--prefix-cache]]
 """
 from __future__ import annotations
 
@@ -108,6 +120,12 @@ def build_parser() -> argparse.ArgumentParser:
                          "interleaved with resident decode steps (chunked "
                          "prefill; 0 = monolithic slot-insert prefill; "
                          "continuous scheduler only)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache over retired prompt blocks: "
+                         "admission maps the longest block-aligned cached "
+                         "prefix read-only (refcounted, copy-on-write) and "
+                         "prefills only the novel suffix; synthesizes a "
+                         "shared-prefix workload (continuous + --paged-kv)")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
@@ -126,13 +144,36 @@ def main(argv=None):
     if args.prefill_chunk and args.scheduler != "continuous":
         ap.error("--prefill-chunk requires --scheduler continuous "
                  "(static groups prefill monolithically)")
-    from repro.runtime import BlockPool, blocks_for_tokens
+    from repro.runtime import BlockPool, RadixCache, blocks_for_tokens
     from repro.runtime.serve_loop import _check_capacity
-    nb_lane = blocks_for_tokens(args.max_len, args.block_size)
-    full_blocks = args.batch_slots * nb_lane
-    num_blocks = args.num_blocks or full_blocks
     if args.num_blocks and not args.paged_kv:
         ap.error("--num-blocks requires --paged-kv")
+    if args.prefix_cache and not args.paged_kv:
+        ap.error("--prefix-cache requires --paged-kv (prefix sharing maps "
+                 "cached blocks through the block pool)")
+    if args.prefix_cache and args.scheduler != "continuous":
+        ap.error("--prefix-cache requires --scheduler continuous (the "
+                 "static scheduler has no pool to share blocks from)")
+
+    cfg = get_config(args.arch)
+    dist = None
+    if args.reduced:
+        cfg = cfg.reduced()
+        dtype = jnp.float32
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        dist = make_dist(mesh)
+        dtype = jnp.bfloat16
+
+    # per-lane table width: ring-window bounded for all-window archs
+    # (ceil(S_w / block_size) instead of ceil(max_len / block_size))
+    nb_lane = (tfm.paged_lane_blocks(cfg, args.max_len, args.block_size)
+               if args.paged_kv
+               else blocks_for_tokens(args.max_len, args.block_size))
+    ring_tokens = (tfm.paged_ring_tokens(cfg, args.max_len, args.block_size)
+                   if args.paged_kv else None)
+    full_blocks = args.batch_slots * nb_lane
+    num_blocks = args.num_blocks or full_blocks
     if args.paged_kv and args.scheduler == "static" \
             and num_blocks < full_blocks:
         ap.error("static paged serving needs the dense worst case "
@@ -147,19 +188,9 @@ def main(argv=None):
                                  prompt=np.zeros(args.prompt_len, np.int32),
                                  max_new_tokens=max(args.new_tokens,
                                                     args.skew))],
-                        args.max_len, probe_pool)
+                        args.max_len, probe_pool, ring_tokens)
     except ValueError as e:
         ap.error(f"--max-len / --num-blocks too small: {e}")
-
-    cfg = get_config(args.arch)
-    dist = None
-    if args.reduced:
-        cfg = cfg.reduced()
-        dtype = jnp.float32
-    else:
-        mesh = make_production_mesh(multi_pod=args.multi_pod)
-        dist = make_dist(mesh)
-        dtype = jnp.bfloat16
 
     key = jax.random.PRNGKey(args.seed)
     params = tfm.init_params(cfg, key, stacked=True, dtype=dtype)
@@ -257,9 +288,14 @@ def main(argv=None):
 
     def make_requests():
         rng = np.random.RandomState(args.seed)
+        shared = (rng.randint(10, cfg.vocab_size, size=args.prompt_len // 2)
+                  if args.prefix_cache else np.zeros(0, np.int64))
         return [Request(rid=i,
-                        prompt=rng.randint(10, cfg.vocab_size,
-                                           size=args.prompt_len),
+                        prompt=np.concatenate(
+                            [shared,
+                             rng.randint(10, cfg.vocab_size,
+                                         size=args.prompt_len - len(shared))]
+                        ).astype(np.int64),
                         max_new_tokens=(args.skew if args.skew and i % 2
                                         else args.new_tokens))
                 for i in range(args.requests)]
@@ -279,8 +315,12 @@ def main(argv=None):
                               block_size=args.block_size,
                               num_blocks=num_blocks, mapped=False)
 
-    def run(scheduler, requests, paged=None, chunk=0):
+    copy_block = jax.jit(tfm.cache_copy_block, donate_argnums=(0,))
+
+    def run(scheduler, requests, paged=None, chunk=0, prefix=None):
         paged = args.paged_kv if paged is None else paged
+        prefix = ((args.prefix_cache if prefix is None else prefix)
+                  and paged and scheduler == "continuous")
         pool = None
         if paged and scheduler == "continuous":
             pool = BlockPool(num_blocks, args.block_size, args.batch_slots,
@@ -290,8 +330,15 @@ def main(argv=None):
                      requests, scheduler=scheduler,
                      batch_slots=args.batch_slots,
                      max_len=args.max_len, block_pool=pool,
-                     chunk_step=chunk_step if chunk else None,
-                     prefill_chunk=chunk or None)
+                     chunk_step=chunk_step if (chunk or prefix) else None,
+                     prefill_chunk=chunk or None,
+                     radix_cache=RadixCache(args.block_size) if prefix
+                     else None,
+                     write_caps=tfm.attn_write_caps(
+                         cfg, args.max_len, args.block_size) if pool
+                     else None,
+                     ring_tokens=ring_tokens if pool else None,
+                     copy_block_fn=copy_block if prefix else None)
 
     requests = make_requests()
     stats = run(args.scheduler, requests, chunk=args.prefill_chunk)
@@ -306,13 +353,18 @@ def main(argv=None):
     chunk_note = (f", chunked prefill ({stats.chunk_steps} chunk steps @ "
                   f"<= {args.prefill_chunk} tokens)"
                   if args.prefill_chunk else "")
+    prefix_note = (f", prefix-cache hits {stats.prefix_hit_tokens} tokens "
+                   f"(rate {stats.prefix_hit_rate:.0%}, "
+                   f"{stats.prefill_tokens_saved} prefill tokens saved, "
+                   f"peak {stats.shared_blocks} shared blocks)"
+                   if args.prefix_cache else "")
     print(f"[serve:{args.scheduler}] {stats.tokens_generated} tokens, "
           f"{stats.decode_steps} decode steps, "
           f"{stats.prefill_calls} prefills, {stats.wall_s:.2f}s "
           f"({stats.tokens_per_s:.1f} tok/s), "
           f"slot-utilization {stats.slot_utilization:.0%}, "
           f"peak kv-cache {stats.cache_bytes / 1024:.0f} KiB "
-          f"(kv-bits {args.kv_bits}{paged_note}{chunk_note})")
+          f"(kv-bits {args.kv_bits}{paged_note}{chunk_note}{prefix_note})")
 
     if args.parity:
         other = ("static" if args.scheduler == "continuous"
@@ -351,6 +403,19 @@ def main(argv=None):
             print(f"[parity] OK: paged and dense caches emit identical "
                   f"greedy tokens for all {len(requests)} requests "
                   f"(kv-bits {args.kv_bits})")
+        if args.prefix_cache:
+            unshared_reqs = make_requests()
+            run(args.scheduler, unshared_reqs, chunk=args.prefill_chunk,
+                prefix=False)
+            mismatch = [r.rid for r, u in zip(requests, unshared_reqs)
+                        if r.tokens_out != u.tokens_out]
+            if mismatch:
+                raise SystemExit(f"[parity] FAIL: request ids {mismatch} "
+                                 f"diverge between shared and unshared "
+                                 f"prefix serving")
+            print(f"[parity] OK: prefix-shared and unshared serving emit "
+                  f"identical greedy tokens for all {len(requests)} "
+                  f"requests (kv-bits {args.kv_bits})")
     return stats
 
 

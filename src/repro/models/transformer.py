@@ -382,6 +382,78 @@ def init_params(cfg: ModelConfig, key, *, stacked: bool = True,
     return params
 
 
+def attn_write_spans(cfg: ModelConfig, max_len: int) -> List[int]:
+    """Per-attention-layer token write SPANS: how many distinct cache
+    cells the layer can ever occupy per lane — ``min(max_len, window)``
+    for ring (sliding-window) layers, ``max_len`` for global ones."""
+    spans = []
+    for kind in cfg.layer_plan:
+        if kind not in ("attn", "local_attn"):
+            continue
+        w = attn_cfg_for(cfg, kind).window
+        spans.append(min(max_len, w) if w else max_len)
+    return spans
+
+
+def paged_lane_blocks(cfg: ModelConfig, max_len: int,
+                      block_size: int) -> int:
+    """Per-lane worst-case block-table width for a paged cache of this
+    arch: ``ceil(max(write spans) / block_size)``. For an all-window
+    model this is ``ceil(S_w / block_size)`` — window layers stop
+    inflating the table, the default pool size, and reservations. Mixed
+    local/global models keep the global layers' ``ceil(max_len /
+    block_size)`` (one shared table must cover every layer's span)."""
+    spans = attn_write_spans(cfg, max_len)
+    if not spans:
+        raise ValueError(f"{cfg.name}: no attention layers to page")
+    return -(-max(spans) // block_size)
+
+
+def attn_write_caps(cfg: ModelConfig, max_len: int,
+                    block_size: int) -> List[int]:
+    """Distinct per-layer paged write capacities in TOKENS — exactly the
+    ``s_cap`` each layer's write path wraps at
+    (``min(table_width * block_size, window)``, see
+    attention.paged_capacity). The scheduler uses these as its
+    copy-on-write barrier: a write at position ``p`` lands in table
+    column ``(p % cap) // block_size`` for some cap in this list, and any
+    such column inside a lane's shared prefix must be COWed first. The
+    MINIMUM cap is also the donation rule (a lane that ever wrote at or
+    past it has wrapped a ring layer, so its prompt blocks are not
+    generation-0 and must not be donated), and the MAXIMUM cap is the
+    ring clamp for reservations (an all-window lane never needs more than
+    ``ceil(max_cap / block_size)`` blocks however long it decodes)."""
+    width = paged_lane_blocks(cfg, max_len, block_size)
+    caps = set()
+    for kind in cfg.layer_plan:
+        if kind not in ("attn", "local_attn"):
+            continue
+        w = attn_cfg_for(cfg, kind).window
+        caps.add(min(width * block_size, w) if w else width * block_size)
+    return sorted(caps)
+
+
+def paged_ring_tokens(cfg: ModelConfig, max_len: int,
+                      block_size: int) -> Optional[int]:
+    """Ring clamp for per-lane reservations: when EVERY attention layer
+    is a sliding-window ring smaller than ``max_len``, a lane's paged
+    writes all wrap in place past ``max(window)`` tokens, so reservations
+    and growth never need more than ``ceil(max(window) / block_size)``
+    blocks however long the request decodes. Returns None for models with
+    any global (or window >= max_len) layer — there a long request
+    genuinely needs ``max_len`` cells and clamping would silently drop
+    context."""
+    windows = []
+    for kind in cfg.layer_plan:
+        if kind not in ("attn", "local_attn"):
+            continue
+        w = attn_cfg_for(cfg, kind).window
+        if not w or w >= max_len:
+            return None
+        windows.append(w)
+    return max(windows) if windows else None
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
                stacked: bool = True, dtype=jnp.bfloat16, kv_bits: int = 16,
                paged: bool = False, block_size: int = 16,
@@ -392,8 +464,11 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
 
     ``paged=True`` switches every attention layer to the block-paged
     layout: one shared arena of ``num_blocks`` blocks of ``block_size``
-    token cells per layer (default: the dense worst case,
-    ``batch * ceil(max_len / block_size)``) plus a single
+    token cells per layer (default: the worst case,
+    ``batch * paged_lane_blocks(...)`` — ``ceil(max_len / block_size)``
+    per lane unless EVERY attention layer is sliding-window, in which
+    case the ring bound ``ceil(min(max_len, S_w) / block_size)`` sizes
+    the table and the default pool instead) plus a single
     ``"block_table"`` (batch, max_blocks_per_lane) entry in the returned
     pytree. ``mapped`` (default: True iff ``num_blocks`` was left at the
     worst case) pre-maps the identity table — lane i owns blocks
@@ -408,7 +483,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
     paged_blocks = None
     table = None
     if paged:
-        nb_lane = -(-max_len // block_size)
+        nb_lane = paged_lane_blocks(cfg, max_len, block_size)
         if mapped is None:
             mapped = num_blocks is None
         if num_blocks is None:
@@ -493,6 +568,47 @@ def cache_reset_slots(cache, lane_mask):
                "tail": [_reset(c, 0) for c in cache["tail"]]}
     if table is not None:
         out["block_table"] = table
+    return out
+
+
+def cache_copy_block(cache, src, dst):
+    """Copy physical block ``src``'s payload (K/V, scales, positions) into
+    block ``dst`` across EVERY paged arena of a whole-model cache pytree —
+    the device half of the scheduler's copy-on-write: the pool swaps a
+    shared table entry for a fresh private block, this clones the shared
+    payload so the lane's subsequent writes land in its own copy.
+
+    ``src`` / ``dst`` are traced int32 scalars (block ids are data, so one
+    jitted trace serves every COW). Stacked scan leaves carry the block
+    axis at position 1 (after n_super), tail/flat leaves at position 0.
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def _copy(c, axis):
+        if not isinstance(c, (PagedKVCache, PagedQuantKVCache)):
+            raise ValueError(
+                "cache_copy_block: paged caches only, got "
+                f"{type(c).__name__}")
+        if axis == 1:
+            return jax.tree.map(
+                lambda x: jax.lax.dynamic_update_index_in_dim(
+                    x, jax.lax.dynamic_index_in_dim(x, src, axis=1,
+                                                    keepdims=False),
+                    dst, axis=1), c)
+        return jax.tree.map(
+            lambda x: jax.lax.dynamic_update_index_in_dim(
+                x, jax.lax.dynamic_index_in_dim(x, src, axis=0,
+                                                keepdims=False),
+                dst, axis=0), c)
+
+    if "layers" in cache:
+        out = {"layers": [_copy(c, 0) for c in cache["layers"]]}
+    else:
+        out = {"scan": [_copy(c, 1) for c in cache["scan"]],
+               "tail": [_copy(c, 0) for c in cache["tail"]]}
+    if "block_table" in cache:
+        out["block_table"] = cache["block_table"]
     return out
 
 

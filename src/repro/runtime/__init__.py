@@ -1,6 +1,7 @@
 from repro.runtime.block_pool import BlockPool, blocks_for_tokens
 from repro.runtime.fault_tolerance import (PreemptionGuard, RestartPolicy,
                                            StragglerWatchdog)
+from repro.runtime.radix_cache import RadixCache, RadixNode
 from repro.runtime.serve_loop import (DecodeState, Request, RequestLatency,
                                       Scheduler, ServeStats, serve,
                                       serve_batch, serve_continuous)

@@ -27,17 +27,38 @@ Invariants the rest of the subsystem builds on:
 
 * **Reservation-backed growth (backpressure, no deadlock).** Admission
   reserves the request's WORST-CASE block count up front
-  (``ceil((prompt + quota - 1) / block_size)``) and only admits when the
+  (``ceil((prompt + quota - 1) / block_size)``, clamped to the lane's ring
+  capacity when every layer is windowed) and only admits when the
   reservation fits; decode-time growth then draws from that reservation
   and can never fail mid-flight. A request whose reservation does not fit
   stays at the head of the queue (FIFO backpressure) until a retirement
   frees blocks. Reservations are bookkeeping only — HBM-resident bytes
   are ``blocks_in_use * block_bytes``, which is what the paged
   ``ServeStats.cache_bytes`` reports.
+
+* **Refcounted sharing + copy-on-write (prefix cache).** Every physical
+  block carries a refcount (how many lane tables map it) and a ``cached``
+  flag (it backs a node of an attached
+  :class:`~repro.runtime.radix_cache.RadixCache`). ``map_shared`` installs
+  already-written blocks read-only into a lane's prefix; ``free_lane``
+  decrements instead of freeing, returning a block to the free list only
+  at refcount 0 when it is not cached. A lane about to *write* into a
+  block it does not solely own first calls ``cow`` — the table entry is
+  swapped for a fresh private copy (charged against the lane's novel
+  reservation) so a shared block's payload is never mutated. Reservations
+  therefore count only the lane's NOVEL blocks (suffix + decode growth +
+  a COW allowance); shared blocks are capacity-accounted through
+  ``blocks_pinned`` (cached blocks some lane still maps — unevictable),
+  while cached refcount-0 blocks stay reclaimable: ``_map`` evicts them
+  LRU through the attached radix cache when the free list runs dry.
+
+All gauges are PHYSICAL (deduplicated): a block mapped by five lanes
+counts once in ``blocks_in_use``; ``fragmentation`` is computed against
+physically allocated cells.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -52,8 +73,9 @@ class BlockPool:
 
     ``table`` is the (batch_slots, max_blocks_per_lane) int32 block table
     the jitted steps consume (-1 = unmapped). All mutation happens through
-    ``reserve_and_alloc`` / ``grow`` / ``free_lane`` so the prefix-mapping
-    and reservation invariants cannot be broken from outside.
+    ``reserve_and_alloc`` / ``map_shared`` / ``grow`` / ``cow`` /
+    ``free_lane`` so the prefix-mapping and reservation invariants cannot
+    be broken from outside.
     """
 
     def __init__(self, num_blocks: int, block_size: int, batch_slots: int,
@@ -66,6 +88,7 @@ class BlockPool:
         self.block_size = block_size
         self.batch_slots = batch_slots
         self.max_blocks_per_lane = max_blocks_per_lane
+        self._cache = None          # attached RadixCache (eviction source)
         self.reset()
 
     def reset(self) -> None:
@@ -73,16 +96,31 @@ class BlockPool:
         self.table = np.full((self.batch_slots, self.max_blocks_per_lane),
                              -1, np.int32)
         self._n_mapped = np.zeros((self.batch_slots,), np.int64)
+        # novel-only worst-case claims: shared (refcounted) blocks are NOT
+        # part of a lane's reservation — they are already allocated
         self._reserved = np.zeros((self.batch_slots,), np.int64)
+        # per-lane count of still-shared mapped blocks (decremented by cow)
+        self._n_shared = np.zeros((self.batch_slots,), np.int64)
+        self._ref = np.zeros((self.num_blocks,), np.int64)
+        self._cached = np.zeros((self.num_blocks,), bool)
+        if self._cache is not None:
+            self._cache.reset()
         # set on every table mutation; the scheduler clears it after
         # re-uploading the table, skipping the per-step host->device
         # transfer on the (common) steps where no block was mapped or freed
         self.dirty = True
 
+    def attach_cache(self, cache) -> None:
+        """Attach a RadixCache as the LRU eviction source: when the free
+        list runs dry, ``_map`` reclaims refcount-0 cached blocks from it."""
+        self._cache = cache
+
     # -- gauges -------------------------------------------------------------
 
     @property
     def blocks_in_use(self) -> int:
+        """Physically allocated blocks (each counted ONCE however many
+        lanes map it; includes cached prefix blocks)."""
         return self.num_blocks - len(self._free)
 
     @property
@@ -91,12 +129,31 @@ class BlockPool:
 
     @property
     def blocks_reserved(self) -> int:
-        """Outstanding worst-case claims (>= blocks_in_use)."""
+        """Outstanding worst-case NOVEL claims (shared blocks excluded)."""
         return int(self._reserved.sum())
 
+    @property
+    def blocks_cached(self) -> int:
+        """Blocks backing radix-cache nodes (evictable iff refcount 0)."""
+        return int(self._cached.sum())
+
+    @property
+    def blocks_pinned(self) -> int:
+        """Cached blocks some lane still maps — not evictable, so they
+        subtract from the capacity admission can claim."""
+        return int((self._cached & (self._ref > 0)).sum())
+
+    @property
+    def shared_blocks(self) -> int:
+        """Physical blocks currently serving a shared prefix (cached and
+        mapped by at least one lane)."""
+        return self.blocks_pinned
+
     def fragmentation(self, live_tokens: int) -> float:
-        """Fraction of allocated token cells not holding a live token —
-        the internal (within-block) waste of the current allocation."""
+        """Fraction of physically allocated token cells not holding a live
+        token — the internal (within-block) waste of the current
+        allocation. ``live_tokens`` must be deduplicated the same way
+        (count a shared prefix once, see Scheduler._track)."""
         cells = self.blocks_in_use * self.block_size
         if cells == 0:
             return 0.0
@@ -105,13 +162,40 @@ class BlockPool:
     def lane_blocks(self, lane: int) -> np.ndarray:
         return self.table[lane, :int(self._n_mapped[lane])].copy()
 
+    def lane_shared(self, lane: int) -> int:
+        """Number of ``lane``'s mapped blocks still shared (not yet COWed)."""
+        return int(self._n_shared[lane])
+
+    def block_ref(self, block: int) -> int:
+        return int(self._ref[block])
+
+    def is_cached(self, block: int) -> bool:
+        return bool(self._cached[block])
+
     # -- allocation ---------------------------------------------------------
 
+    def _fits(self, n_novel: int, n_cols: int, new_pins: int) -> bool:
+        """Core admission test: ``n_cols`` table columns must fit the lane
+        width, and the NOVEL claim must fit next to every outstanding
+        reservation and every pinned cached block. (A COW allowance
+        inflates the claim but never the column count — a COW swaps a
+        column in place.)"""
+        return (n_cols <= self.max_blocks_per_lane
+                and (self.blocks_reserved + n_novel
+                     + self.blocks_pinned + new_pins) <= self.num_blocks)
+
     def can_reserve(self, n_blocks: int) -> bool:
-        """True if a worst-case claim of ``n_blocks`` fits next to every
-        outstanding reservation (admission backpressure test)."""
-        return (n_blocks <= self.max_blocks_per_lane
-                and self.blocks_reserved + n_blocks <= self.num_blocks)
+        """True if a worst-case NOVEL claim of ``n_blocks`` fits (admission
+        backpressure test, no shared prefix)."""
+        return self._fits(n_blocks, n_blocks, 0)
+
+    def can_map_shared(self, blocks: Sequence[int], n_reserve: int,
+                       n_cols: int) -> bool:
+        """Backpressure test for a prefix-hit admission: ``blocks`` mapped
+        shared, ``n_reserve`` novel claim, ``n_cols`` total table columns
+        the lane may ever occupy."""
+        new_pins = sum(1 for b in blocks if self._ref[b] == 0)
+        return self._fits(n_reserve, n_cols, new_pins)
 
     def reserve_and_alloc(self, lane: int, n_alloc: int,
                           n_reserve: int) -> bool:
@@ -128,38 +212,137 @@ class BlockPool:
         self._map(lane, n_alloc)
         return True
 
+    def map_shared(self, lane: int, blocks: Sequence[int], n_alloc: int,
+                   n_reserve: int, n_cols: int) -> bool:
+        """Prefix-hit admission: install the already-written ``blocks``
+        read-only at ``table[lane, 0:k]`` (refcount bump, no allocation),
+        then map ``n_alloc`` fresh blocks for the first novel chunk and
+        claim ``n_reserve`` NOVEL worst-case blocks (suffix + decode growth
+        + COW allowance). ``n_cols`` is the total table columns the lane
+        may ever occupy (shared + novel-growth; COW adds none). Returns
+        False with no state change when the claim does not fit."""
+        if self._reserved[lane] or self._n_mapped[lane]:
+            raise RuntimeError(f"lane {lane} still holds blocks/reservation")
+        k = len(blocks)
+        if k == 0:
+            return self.reserve_and_alloc(lane, n_alloc, n_reserve)
+        n_reserve = max(n_reserve, n_alloc)
+        if not self.can_map_shared(blocks, n_reserve, max(n_cols,
+                                                          k + n_alloc)):
+            return False
+        for j, b in enumerate(blocks):
+            if not self._cached[b]:
+                raise RuntimeError(
+                    f"map_shared: block {b} is not a cached prefix block")
+            self.table[lane, j] = b
+            self._ref[b] += 1
+        self._n_mapped[lane] = k
+        self._n_shared[lane] = k
+        self._reserved[lane] = n_reserve
+        self._map(lane, n_alloc)
+        self.dirty = True
+        return True
+
     def grow(self, lane: int, n_total: int) -> None:
         """Decode growth: extend ``lane``'s mapped prefix to ``n_total``
         blocks. Always succeeds within the lane's reservation (the
-        scheduler reserves worst case at admission)."""
-        if n_total > self._reserved[lane]:
+        scheduler reserves worst case at admission). Only the NOVEL part
+        (beyond the lane's shared prefix + COW swaps) draws on the
+        reservation."""
+        novel = n_total - int(self._n_shared[lane])
+        if novel > self._reserved[lane]:
             raise RuntimeError(
-                f"lane {lane}: growth to {n_total} blocks exceeds its "
-                f"reservation of {int(self._reserved[lane])}")
+                f"lane {lane}: growth to {n_total} blocks ({novel} novel) "
+                f"exceeds its reservation of {int(self._reserved[lane])}")
         if n_total > self._n_mapped[lane]:
             self._map(lane, n_total - int(self._n_mapped[lane]))
 
-    def _map(self, lane: int, n_new: int) -> None:
-        if n_new > len(self._free):      # pragma: no cover - guarded above
+    def needs_cow(self, lane: int, col: int) -> bool:
+        """True when ``lane`` does not solely own the (mapped) block at
+        table column ``col`` — writing it would mutate a shared/cached
+        block."""
+        if col >= int(self._n_mapped[lane]):
+            return False
+        b = int(self.table[lane, col])
+        return bool(self._cached[b]) or int(self._ref[b]) > 1
+
+    def cow(self, lane: int, col: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write: if ``lane`` is about to write into a block it
+        does not solely own, swap ``table[lane, col]`` for a fresh private
+        block (charged to the lane's novel reservation) and return
+        ``(src, dst)`` physical ids for the device-side payload copy.
+        Returns None when the lane already owns the block."""
+        if not self.needs_cow(lane, col):
+            return None
+        src = int(self.table[lane, col])
+        novel = int(self._n_mapped[lane]) - int(self._n_shared[lane]) + 1
+        if novel > self._reserved[lane]:      # pragma: no cover - see above
             raise RuntimeError(
-                f"free list underflow: need {n_new}, have {len(self._free)} "
+                f"lane {lane}: COW at col {col} exceeds its reservation "
+                f"of {int(self._reserved[lane])}")
+        dst = self._pop_free(1)[0]
+        self.table[lane, col] = dst
+        self._ref[dst] = 1
+        self._ref[src] -= 1
+        self._n_shared[lane] -= 1
+        self.dirty = True
+        return src, dst
+
+    def _pop_free(self, n: int) -> List[int]:
+        """Take ``n`` blocks off the free list, reclaiming LRU refcount-0
+        cached blocks through the attached radix cache when it runs dry."""
+        while len(self._free) < n and self._cache is not None:
+            evicted = self._cache.evict_lru(self.block_ref)
+            if not evicted:
+                break
+            for b in evicted:
+                self._cached[b] = False
+                if self._ref[b] == 0:
+                    self._free.append(b)
+        if n > len(self._free):
+            raise RuntimeError(
+                f"free list underflow: need {n}, have {len(self._free)} "
                 "(reservation invariant violated)")
+        out = [self._free.pop() for _ in range(n)]
+        for b in out:
+            self._ref[b] = 0
+        return out
+
+    def _map(self, lane: int, n_new: int) -> None:
+        if n_new <= 0:
+            return
         start = int(self._n_mapped[lane])
-        for j in range(n_new):
-            self.table[lane, start + j] = self._free.pop()
+        for j, b in enumerate(self._pop_free(n_new)):
+            self.table[lane, start + j] = b
+            self._ref[b] = 1
         self._n_mapped[lane] = start + n_new
         self.dirty = True
 
+    def set_cached(self, block: int, cached: bool = True) -> None:
+        """Mark ``block`` as backing a radix-cache node (called by the
+        scheduler on donation / by the pool itself on eviction). An
+        uncached refcount-0 block goes straight back to the free list."""
+        self._cached[block] = cached
+        if not cached and self._ref[block] == 0:
+            self._free.append(int(block))
+
     def free_lane(self, lane: int) -> int:
-        """Retirement: return every mapped block of ``lane`` to the free
-        list, clear its reservation and table row. Returns the number of
-        blocks released."""
+        """Retirement: decrement every mapped block's refcount, returning
+        blocks that reach refcount 0 (and are not cached) to the free
+        list; clear the lane's reservation and table row. Returns the
+        number of blocks actually released to the free list."""
         n = int(self._n_mapped[lane])
+        released = 0
         for j in range(n - 1, -1, -1):
-            self._free.append(int(self.table[lane, j]))
+            b = int(self.table[lane, j])
+            self._ref[b] -= 1
+            if self._ref[b] == 0 and not self._cached[b]:
+                self._free.append(b)
+                released += 1
         self.table[lane, :n] = -1
         self._n_mapped[lane] = 0
+        self._n_shared[lane] = 0
         self._reserved[lane] = 0
         if n:
             self.dirty = True
-        return n
+        return released

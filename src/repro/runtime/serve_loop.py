@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime.block_pool import BlockPool, blocks_for_tokens
+from repro.runtime.radix_cache import RadixCache
 
 
 @dataclasses.dataclass
@@ -93,6 +94,16 @@ class ServeStats:
     # peak (internal fragmentation of the block_size granularity)
     blocks_in_use: int = 0
     block_fragmentation: float = 0.0
+    # prefix-sharing gauges (0 unless a RadixCache is attached): total
+    # prompt tokens found in the radix cache at admission (longest cached
+    # match, before the >=1-token-suffix cap), prompt tokens whose prefill
+    # was actually skipped (block-aligned, capped), peak count of physical
+    # blocks mapped by a lane AND retained in the radix cache, and
+    # hit-tokens / admitted prompt tokens
+    prefix_hit_tokens: int = 0
+    prefill_tokens_saved: int = 0
+    shared_blocks: int = 0
+    prefix_hit_rate: float = 0.0
     request_latency: Dict[int, RequestLatency] = \
         dataclasses.field(default_factory=dict)
 
@@ -112,7 +123,8 @@ def _paged_block_bytes(cache) -> int:
 
 
 def _check_capacity(requests: List[Request], max_len: Optional[int],
-                    pool: Optional[BlockPool] = None) -> None:
+                    pool: Optional[BlockPool] = None,
+                    ring_tokens: Optional[int] = None) -> None:
     """Reject requests whose decode would write past a ``max_len``-slot
     cache segment (the final token is emitted without a write, so the last
     write lands at position len(prompt) + quota - 2). Writes past the
@@ -124,7 +136,11 @@ def _check_capacity(requests: List[Request], max_len: Optional[int],
     With a paged ``pool``, the same up-front rule extends to pool capacity:
     a request whose worst case exceeds ``num_blocks`` (or the per-lane
     block-table width) could never be admitted — backpressure would queue
-    it forever — so it raises here instead.
+    it forever — so it raises here instead. ``ring_tokens`` (models whose
+    EVERY attention layer is a sliding-window ring — see
+    models.transformer.paged_ring_tokens) caps the pool-side need: a ring
+    lane never holds more than ``ceil(ring_tokens / block_size)`` blocks
+    however long it decodes, so window layers stop inflating reservations.
     """
     if max_len is None and pool is None:
         return
@@ -139,6 +155,8 @@ def _check_capacity(requests: List[Request], max_len: Optional[int],
                 f"slots but the cache holds max_len={max_len}; later KV "
                 "writes would be silently dropped")
         if pool is not None:
+            if ring_tokens is not None:
+                need = min(need, ring_tokens)
             nb = blocks_for_tokens(need, pool.block_size)
             lane_cap = pool.max_blocks_per_lane * pool.block_size
             if nb > pool.num_blocks or need > lane_cap:
@@ -184,6 +202,7 @@ class _Book:
         self.step = 0               # global model-call counter
         self.cells = 0
         self.active_cells = 0
+        self.prompt_tokens = 0      # admitted prompt tokens (hit-rate denom)
 
     def emit(self, r: Request, tok: int) -> None:
         r.tokens_out.append(int(tok))
@@ -210,6 +229,7 @@ class _Book:
         if pool.blocks_in_use >= s.blocks_in_use:
             s.blocks_in_use = pool.blocks_in_use
             s.block_fragmentation = pool.fragmentation(live_tokens)
+        s.shared_blocks = max(s.shared_blocks, pool.shared_blocks)
 
     def count_decode(self, n_active: int) -> None:
         self.stats.decode_steps += 1
@@ -222,6 +242,8 @@ class _Book:
         s.tokens_per_s = s.tokens_generated / max(s.wall_s, 1e-9)
         s.slot_utilization = (self.active_cells / self.cells
                               if self.cells else 0.0)
+        s.prefix_hit_rate = (s.prefix_hit_tokens / self.prompt_tokens
+                             if self.prompt_tokens else 0.0)
         return s
 
 
@@ -344,6 +366,27 @@ class Scheduler:
     returns every block to the free list. All of it is host-side table
     bookkeeping between jitted calls — shapes never change, the steps
     still trace once.
+
+    **Prefix sharing** (``radix_cache`` given; needs paged mode AND a
+    ``chunk_fn``): admission matches the prompt against a
+    :class:`~repro.runtime.radix_cache.RadixCache`, maps the longest
+    block-aligned cached prefix read-only into the lane's table
+    (``BlockPool.map_shared``) and prefills ONLY the novel suffix through
+    the append-mode chunk path — the lane enters PREFILLING at offset
+    K_aligned instead of 0, so the chunk step's reset_mask stays False and
+    the shared blocks are never clobbered. Reservations count the novel
+    suffix + decode growth only (plus a copy-on-write allowance when the
+    request can wrap a ring-window layer back into its shared prefix);
+    retirement donates the lane's full prompt blocks into the tree instead
+    of freeing them — unless the lane ever wrapped a ring layer, which
+    would leave stale generation data in prompt cells. ``write_caps``
+    (models.transformer.attn_write_caps) lists the distinct token
+    capacities at which the model's attention layers wrap their paged
+    write index; ``copy_block_fn(cache, src, dst) -> cache`` (a jitted
+    models.transformer.cache_copy_block) services copy-on-write when a
+    wrapping write would land in a shared block. ``ring_tokens``
+    (models.transformer.paged_ring_tokens, all-window models only) caps
+    per-lane reservations and growth at the ring size.
     """
 
     def __init__(self, admit_fn: Callable, decode_fn: Callable,
@@ -352,7 +395,11 @@ class Scheduler:
                  max_len: Optional[int] = None,
                  block_pool: Optional[BlockPool] = None,
                  chunk_fn: Optional[Callable] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 radix_cache: Optional[RadixCache] = None,
+                 write_caps: Optional[List[int]] = None,
+                 ring_tokens: Optional[int] = None,
+                 copy_block_fn: Optional[Callable] = None):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         if block_pool is not None and block_pool.batch_slots != batch_slots:
@@ -366,6 +413,25 @@ class Scheduler:
             if chunk_fn is None:
                 raise ValueError("prefill_chunk requires a chunk_fn "
                                  "(runtime.steps.make_chunk_prefill_step)")
+        if (write_caps is not None or ring_tokens is not None) \
+                and block_pool is None:
+            raise ValueError("write_caps / ring_tokens only apply to "
+                             "paged serving (block_pool)")
+        if radix_cache is not None:
+            if block_pool is None:
+                raise ValueError("radix_cache requires a block_pool "
+                                 "(prefix sharing is a paged feature)")
+            if chunk_fn is None:
+                raise ValueError(
+                    "radix_cache requires a chunk_fn: prefix-hit lanes "
+                    "prefill their novel suffix through the append-mode "
+                    "chunk path (the monolithic admit step would reset "
+                    "the shared blocks)")
+            if radix_cache.block_size != block_pool.block_size:
+                raise ValueError(
+                    f"radix_cache block_size {radix_cache.block_size} != "
+                    f"pool block_size {block_pool.block_size}")
+            block_pool.attach_cache(radix_cache)
         self.admit_fn = admit_fn
         self.decode_fn = decode_fn
         self.chunk_fn = chunk_fn
@@ -375,13 +441,43 @@ class Scheduler:
         self.prefill_chunk = prefill_chunk
         self.max_len = max_len          # per-lane cache slots (None: unchecked)
         self.pool = block_pool
+        self.radix = radix_cache
+        self.copy_block_fn = copy_block_fn
+        if block_pool is not None:
+            lane_cap = block_pool.max_blocks_per_lane * block_pool.block_size
+            caps = sorted(set(write_caps)) if write_caps else [lane_cap]
+            if caps[0] < 1 or caps[-1] > lane_cap:
+                raise ValueError(f"write_caps {caps} outside the lane "
+                                 f"capacity 1..{lane_cap}")
+            self._write_caps = caps
+            self._min_cap = caps[0]
+            if radix_cache is not None and copy_block_fn is None \
+                    and caps[0] < lane_cap:
+                raise ValueError(
+                    "prefix sharing with a sliding-window layer (write cap "
+                    f"{caps[0]} < lane capacity {lane_cap}) requires a "
+                    "copy_block_fn for copy-on-write")
+        else:
+            self._write_caps = None
+            self._min_cap = None
+        self._ring_tokens = ring_tokens
+        self._ring_blocks = (None if ring_tokens is None else
+                             blocks_for_tokens(ring_tokens,
+                                               block_pool.block_size))
         self._block_bytes = 0
         # per-lane PREFILLING state: next prompt offset to append, or None
-        # when the lane is idle / decodable (chunked prefill only)
+        # when the lane is idle / decodable (chunked prefill only). With a
+        # radix cache a prefix-hit lane STARTS at its matched offset.
         self._pref: List[Optional[int]] = [None] * batch_slots
+        # per-lane count of shared (radix-mapped) tokens, for deduplicated
+        # live-token accounting in _track
+        self._shared_tok: List[int] = [0] * batch_slots
+        # fixed chunk width: prefill_chunk when chunking, else the prompt
+        # pad (radix mode routes ALL admissions through _chunk); set in run
+        self._chunk_width: Optional[int] = prefill_chunk
 
     def run(self, requests: List[Request]) -> ServeStats:
-        _check_capacity(requests, self.max_len, self.pool)
+        _check_capacity(requests, self.max_len, self.pool, self._ring_tokens)
         stats = ServeStats()
         book = _Book(stats, self.batch_slots)
         t_start = time.perf_counter()
@@ -393,9 +489,14 @@ class Scheduler:
                 queue.append(r)
         pad = self.prompt_pad_len or max(
             (len(r.prompt) for r in queue), default=1)
+        # radix mode prefills every admission (hit or miss) through _chunk;
+        # without an explicit prefill_chunk the chunk width is the pad, so
+        # a miss still completes in one chunk step exactly like _admit
+        self._chunk_width = self.prefill_chunk or pad
         B = self.batch_slots
         lanes: List[Optional[Request]] = [None] * B
         self._pref = [None] * B
+        self._shared_tok = [0] * B
         state = DecodeState(tokens=np.zeros((B, 1), np.int32),
                             pos=np.full((B, 1), -1, np.int32),
                             cache=self.init_cache_fn(B))
@@ -408,10 +509,10 @@ class Scheduler:
         while queue or any(r is not None for r in lanes):
             free = [i for i in range(B) if lanes[i] is None]
             if free and queue and self._head_fits(queue[0]):
-                if self.prefill_chunk is None:
+                if self.prefill_chunk is None and self.radix is None:
                     state = self._admit(free, queue, pad, lanes, state, book)
                     continue    # immediate retirees may have freed lanes
-                self._admit_chunked(free, queue, lanes)
+                self._admit_chunked(free, queue, lanes, book)
             prefilling = any(off is not None for off in self._pref)
             if prefilling:
                 state = self._chunk(lanes, state, book)
@@ -430,15 +531,54 @@ class Scheduler:
 
     # -- paged-pool plumbing (no-ops in dense mode) -------------------------
 
+    def _need_blocks(self, r: Request) -> int:
+        """Worst-case per-lane block count for ``r``, ring-clamped: an
+        all-window model's lane never maps more than ``_ring_blocks``
+        blocks no matter how long it decodes (writes wrap in place)."""
+        need = len(r.prompt) + r.max_new_tokens - 1
+        if self._ring_tokens is not None:
+            need = min(need, self._ring_tokens)
+        return blocks_for_tokens(need, self.pool.block_size)
+
     def _head_fits(self, r: Request) -> bool:
         """Admission backpressure: the queue head's worst-case reservation
         must fit or the whole admission waits (FIFO — later requests do not
         overtake a starved head)."""
         if self.pool is None:
             return True
-        need = len(r.prompt) + r.max_new_tokens - 1
-        return self.pool.can_reserve(
-            blocks_for_tokens(need, self.pool.block_size))
+        if self.radix is not None:
+            blocks, _, _, n_alloc, n_reserve, total = self._plan_prefix(r)
+            if blocks:
+                return self.pool.can_map_shared(blocks, n_reserve, total)
+            return self.pool.can_reserve(n_reserve)
+        return self.pool.can_reserve(self._need_blocks(r))
+
+    def _plan_prefix(self, r: Request):
+        """Radix admission plan: match the prompt, then size the lane.
+
+        Returns (shared_blocks, raw_hit_tokens, K_aligned, n_alloc,
+        n_reserve, n_cols) where n_reserve counts the NOVEL blocks only
+        (suffix + decode growth, ring-clamped) plus a copy-on-write
+        allowance of one fresh block per shared block whenever the request
+        can wrap a ring-window layer (its last write position reaches
+        min(write_caps)) — COW replaces a shared block with a private one,
+        drawing from the reservation like any growth. The match is capped
+        at (P-1)//block_size blocks so the novel suffix keeps >= 1 token
+        (the chunk step's final-position logits emit the first token)."""
+        P = len(r.prompt)
+        bs = self.pool.block_size
+        blocks, raw = self.radix.match(r.prompt, max_blocks=(P - 1) // bs)
+        k = len(blocks)
+        total = self._need_blocks(r)        # ring-clamped table columns
+        wraps = P + r.max_new_tokens - 2 >= self._min_cap
+        cow_allow = k if wraps else 0
+        first = min(self._chunk_width, P - k * bs)
+        cols_first = blocks_for_tokens(k * bs + first, bs)
+        if self._ring_blocks is not None:
+            cols_first = min(cols_first, self._ring_blocks)
+        n_alloc = max(cols_first - k, 0)
+        n_reserve = (total - k) + cow_allow
+        return blocks, raw, k * bs, n_alloc, n_reserve, total
 
     def _reserve(self, lane: int, r: Request) -> bool:
         """Worst-case reservation + prompt-block mapping at admission. In
@@ -449,13 +589,77 @@ class Scheduler:
         bs = self.pool.block_size
         first = len(r.prompt) if self.prefill_chunk is None \
             else min(len(r.prompt), self.prefill_chunk)
+        n_alloc = blocks_for_tokens(first, bs)
+        if self._ring_blocks is not None:
+            n_alloc = min(n_alloc, self._ring_blocks)
         return self.pool.reserve_and_alloc(
-            lane, blocks_for_tokens(first, bs),
-            blocks_for_tokens(len(r.prompt) + r.max_new_tokens - 1, bs))
+            lane, n_alloc, self._need_blocks(r))
 
-    def _release(self, lane: int) -> None:
-        if self.pool is not None:
-            self.pool.free_lane(lane)
+    def _reserve_prefix(self, lane: int, r: Request,
+                        book: _Book) -> Optional[int]:
+        """Radix admission: map the matched prefix read-only (refcounted)
+        plus the first chunk's novel blocks, reserving novel growth only.
+        Returns the prompt offset the lane starts prefilling at (K_aligned;
+        0 on a miss), or None when the plan does not fit (backpressure)."""
+        blocks, raw, k_tok, n_alloc, n_reserve, total = self._plan_prefix(r)
+        if blocks:
+            ok = self.pool.map_shared(lane, blocks, n_alloc, n_reserve,
+                                      n_cols=total)
+        else:
+            ok = self.pool.reserve_and_alloc(lane, n_alloc, n_reserve)
+        if not ok:
+            return None
+        self._shared_tok[lane] = k_tok
+        book.stats.prefix_hit_tokens += raw
+        book.stats.prefill_tokens_saved += k_tok
+        return k_tok
+
+    def _release(self, lane: int, r: Optional[Request] = None) -> None:
+        if self.pool is None:
+            return
+        if self.radix is not None and r is not None:
+            self._donate(lane, r)
+        self.pool.free_lane(lane)
+        self._shared_tok[lane] = 0
+
+    def _donate(self, lane: int, r: Request) -> None:
+        """Retirement donation: insert the lane's FULL prompt blocks into
+        the radix tree instead of freeing them. Skipped when the lane ever
+        wrapped a ring-window layer (last write position >= min cap): a
+        wrapping write lands generation data inside prompt cells, so those
+        blocks no longer hold a clean prefix. The skip also guarantees any
+        cached path is window-read-valid for every future recipient."""
+        P = len(r.prompt)
+        n_full = P // self.pool.block_size
+        if n_full == 0:
+            return
+        if P + r.max_new_tokens - 2 >= self._min_cap:
+            return
+        blocks = [int(b) for b in self.pool.table[lane, :n_full]]
+        adopted = self.radix.insert(
+            r.prompt[:n_full * self.pool.block_size], blocks)
+        for b in adopted:
+            self.pool.set_cached(b, True)
+
+    def _cow_barrier(self, lane: int, positions, cache):
+        """Copy-on-write barrier, called before any step that writes
+        ``positions`` for ``lane``: for every attention write cap, find
+        the table column each write wraps into; if that column still maps
+        a shared (refcounted/cached) block, redirect it to a private copy
+        first. Device copy via copy_block_fn (traced once — src/dst are
+        data); the pool swap marks the table dirty for the next sync."""
+        if self.pool.lane_shared(lane) == 0:
+            return cache
+        bs = self.pool.block_size
+        cols = sorted({(p % cap) // bs
+                       for p in positions for cap in self._write_caps})
+        for col in cols:
+            pair = self.pool.cow(lane, col)
+            if pair is not None:
+                cache = self.copy_block_fn(
+                    cache, jnp.asarray(pair[0], jnp.int32),
+                    jnp.asarray(pair[1], jnp.int32))
+        return cache
 
     def _sync_table(self, cache) -> None:
         """Re-upload the block table only when the pool mutated it since
@@ -471,11 +675,18 @@ class Scheduler:
         if self.pool is None:
             book.track_cache(cache)
         else:
-            live = sum(int(state.pos[i, 0]) for i, r in enumerate(lanes)
+            # live tokens are DEDUPLICATED: each lane counts only the
+            # tokens it privately wrote (position minus its shared-prefix
+            # tokens); every cached block's tokens count once, however
+            # many lanes map it
+            live = sum(int(state.pos[i, 0]) - self._shared_tok[i]
+                       for i, r in enumerate(lanes)
                        if r is not None and state.pos[i, 0] > 0)
             # PREFILLING lanes carry pos -1 but already hold their written
-            # chunk tokens
-            live += sum(off for off in self._pref if off)
+            # chunk tokens (offset counts from 0 — shared tokens excluded)
+            live += sum(off - self._shared_tok[i]
+                        for i, off in enumerate(self._pref) if off)
+            live += self.pool.blocks_cached * self.pool.block_size
             book.track_pool(self.pool, live, self._block_bytes)
 
     # -----------------------------------------------------------------------
@@ -491,6 +702,7 @@ class Scheduler:
                 break           # head-of-line backpressure: keep FIFO order
             group.append(queue.popleft())
             slots.append(i)
+            book.prompt_tokens += len(group[-1].prompt)
         toks = np.zeros((B, pad), np.int32)
         posm = np.full((B, pad), -1, np.int32)
         g_toks, g_posm = _pack_prompts(group, pad)
@@ -516,26 +728,37 @@ class Scheduler:
         self._track(cache, lanes, DecodeState(tokens, pos, cache), book)
         for i in slots:
             if lanes[i].done:                # quota 1: retire before decoding
+                r = lanes[i]
                 lanes[i] = None
                 pos[i, 0] = -1
-                self._release(i)
+                self._release(i, r)
         return DecodeState(tokens, pos, cache)
 
-    def _admit_chunked(self, free, queue, lanes) -> None:
+    def _admit_chunked(self, free, queue, lanes, book: _Book) -> None:
         """Chunked-prefill admission is pure host bookkeeping: mark each
         admitted lane PREFILLING at prompt offset 0 (FIFO, head-of-line
         backpressure as in _admit); the model work happens chunk by chunk
-        in _chunk, interleaved with resident decode steps."""
+        in _chunk, interleaved with resident decode steps. With a radix
+        cache a prefix hit starts the lane at offset K_aligned instead —
+        the matched blocks are already mapped (read-only) and the chunk
+        step's append-mode positions make them the lane's attended past."""
         for i in free:
             if not queue:
                 break
             r = queue[0]
             _require_nonempty_prompt(r)
-            if not self._reserve(i, r):
-                break           # head-of-line backpressure: keep FIFO order
+            if self.radix is not None:
+                off = self._reserve_prefix(i, r, book)
+                if off is None:
+                    break       # head-of-line backpressure: keep FIFO order
+            else:
+                if not self._reserve(i, r):
+                    break       # head-of-line backpressure: keep FIFO order
+                off = 0
             queue.popleft()
             lanes[i] = r
-            self._pref[i] = 0
+            self._pref[i] = off
+            book.prompt_tokens += len(r.prompt)
 
     def _chunk(self, lanes, state: DecodeState, book: _Book) -> DecodeState:
         """One fixed-shape chunk step: append up to ``prefill_chunk`` prompt
@@ -544,13 +767,14 @@ class Scheduler:
         reset_mask). Lanes finishing their last chunk emit their first
         token from the chunk's final-position logits and become decodable
         (quota-1 requests retire immediately, as in _admit)."""
-        C = self.prefill_chunk
+        C = self._chunk_width
         B = self.batch_slots
         prefilling = [i for i in range(B) if self._pref[i] is not None]
         toks = np.zeros((B, C), np.int32)
         posm = np.full((B, C), -1, np.int32)
         reset = np.zeros((B,), bool)
         ends = {}
+        cache = state.cache
         for i in prefilling:
             r = lanes[i]
             off = self._pref[i]
@@ -560,13 +784,19 @@ class Scheduler:
             reset[i] = off == 0
             ends[i] = off + c
             if self.pool is not None:
+                # copy-on-write BEFORE growth/sync: a ring-window write in
+                # this chunk may wrap into a shared prefix column
+                if self.radix is not None:
+                    cache = self._cow_barrier(i, range(off, off + c), cache)
                 # map the blocks this chunk's writes land in (reservation-
                 # backed, cannot fail mid-flight — same rule as _decode)
-                self.pool.grow(
-                    i, (off + c - 1) // self.pool.block_size + 1)
-        self._sync_table(state.cache)
+                n_total = (off + c - 1) // self.pool.block_size + 1
+                if self._ring_blocks is not None:
+                    n_total = min(n_total, self._ring_blocks)
+                self.pool.grow(i, n_total)
+        self._sync_table(cache)
         logits, cache = self.chunk_fn(jnp.asarray(toks), jnp.asarray(posm),
-                                      jnp.asarray(reset), state.cache)
+                                      jnp.asarray(reset), cache)
         book.stats.prefill_calls += 1
         book.stats.chunk_steps += 1
         book.step += 1
@@ -585,23 +815,32 @@ class Scheduler:
         self._track(cache, lanes, DecodeState(tokens, pos, cache), book)
         for i in prefilling:
             if self._pref[i] is None and lanes[i].done:
+                r = lanes[i]
                 lanes[i] = None             # quota 1: retire immediately
                 pos[i, 0] = -1
-                self._release(i)
+                self._release(i, r)
         return DecodeState(tokens, pos, cache)
 
     def _decode(self, lanes, state: DecodeState, book: _Book) -> DecodeState:
         active = [i for i, r in enumerate(lanes)
                   if r is not None and self._pref[i] is None]
+        cache = state.cache
         if self.pool is not None:
             # incremental growth: map the block the coming write lands in
             # (reservation-backed, cannot fail mid-flight)
             bs = self.pool.block_size
             for i in active:
-                self.pool.grow(i, int(state.pos[i, 0]) // bs + 1)
-            self._sync_table(state.cache)
+                p = int(state.pos[i, 0])
+                if self.radix is not None:
+                    # a ring-window write may wrap into a shared column
+                    cache = self._cow_barrier(i, (p,), cache)
+                n_total = p // bs + 1
+                if self._ring_blocks is not None:
+                    n_total = min(n_total, self._ring_blocks)
+                self.pool.grow(i, n_total)
+            self._sync_table(cache)
         logits, cache = self.decode_fn(jnp.asarray(state.tokens),
-                                       jnp.asarray(state.pos), state.cache)
+                                       jnp.asarray(state.pos), cache)
         book.count_decode(len(active))
         book.step += 1
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
@@ -617,9 +856,10 @@ class Scheduler:
         self._track(cache, lanes, DecodeState(tokens, pos, cache), book)
         for i in active:
             if lanes[i].done:
+                r = lanes[i]
                 lanes[i] = None
                 pos[i, 0] = -1
-                self._release(i)
+                self._release(i, r)
         return DecodeState(tokens, pos, cache)
 
 
@@ -629,14 +869,20 @@ def serve_continuous(admit_fn: Callable, decode_fn: Callable, init_cache_fn,
                      max_len: Optional[int] = None,
                      block_pool: Optional[BlockPool] = None,
                      chunk_fn: Optional[Callable] = None,
-                     prefill_chunk: Optional[int] = None) -> ServeStats:
+                     prefill_chunk: Optional[int] = None,
+                     radix_cache: Optional[RadixCache] = None,
+                     write_caps: Optional[List[int]] = None,
+                     ring_tokens: Optional[int] = None,
+                     copy_block_fn: Optional[Callable] = None) -> ServeStats:
     """Continuous-batching counterpart of :func:`serve_batch` (see
     :class:`Scheduler` for the step-function contracts)."""
     return Scheduler(admit_fn, decode_fn, init_cache_fn,
                      batch_slots=batch_slots, prompt_pad_len=prompt_pad_len,
                      max_len=max_len, block_pool=block_pool,
-                     chunk_fn=chunk_fn,
-                     prefill_chunk=prefill_chunk).run(requests)
+                     chunk_fn=chunk_fn, prefill_chunk=prefill_chunk,
+                     radix_cache=radix_cache, write_caps=write_caps,
+                     ring_tokens=ring_tokens,
+                     copy_block_fn=copy_block_fn).run(requests)
 
 
 def serve(prefill_step: Callable, admit_step: Callable,
@@ -646,7 +892,11 @@ def serve(prefill_step: Callable, admit_step: Callable,
           max_len: Optional[int] = None,
           block_pool: Optional[BlockPool] = None,
           chunk_step: Optional[Callable] = None,
-          prefill_chunk: Optional[int] = None) -> ServeStats:
+          prefill_chunk: Optional[int] = None,
+          radix_cache: Optional[RadixCache] = None,
+          write_caps: Optional[List[int]] = None,
+          ring_tokens: Optional[int] = None,
+          copy_block_fn: Optional[Callable] = None) -> ServeStats:
     """Dispatch to a scheduler, binding ``params`` into step functions with
     the ``runtime.steps.make_*_step`` signatures (params first):
 
@@ -661,7 +911,10 @@ def serve(prefill_step: Callable, admit_step: Callable,
     mapped identity table instead (init_cache(paged=True) default).
     ``prefill_chunk`` (continuous only, needs ``chunk_step``) admits
     prompts in chunks of at most that many tokens, interleaved with
-    resident decode steps.
+    resident decode steps. ``radix_cache`` (+ ``write_caps`` /
+    ``ring_tokens`` / ``copy_block_fn``, continuous paged only) enables
+    prefix sharing — see :class:`Scheduler`. ``copy_block_fn`` takes
+    (cache, src, dst) with no params (models.transformer.cache_copy_block).
     """
     if scheduler == "continuous":
         return serve_continuous(
@@ -672,7 +925,9 @@ def serve(prefill_step: Callable, admit_step: Callable,
             block_pool=block_pool,
             chunk_fn=(None if chunk_step is None else
                       lambda t, pm, m, c: chunk_step(params, t, pm, m, c)),
-            prefill_chunk=prefill_chunk)
+            prefill_chunk=prefill_chunk, radix_cache=radix_cache,
+            write_caps=write_caps, ring_tokens=ring_tokens,
+            copy_block_fn=copy_block_fn)
     if scheduler != "static":
         raise ValueError(f"unknown scheduler {scheduler!r}")
     if block_pool is not None:
@@ -681,6 +936,9 @@ def serve(prefill_step: Callable, admit_step: Callable,
     if prefill_chunk is not None:
         raise ValueError("prefill_chunk is a continuous-scheduler feature; "
                          "static groups prefill each group monolithically")
+    if radix_cache is not None:
+        raise ValueError("radix_cache is a continuous-scheduler feature; "
+                         "prefix sharing needs the paged block pool")
     return serve_batch(lambda t, pm, c: prefill_step(params, t, c, pm),
                        lambda t, p, c: decode_step(params, t, p, c),
                        init_cache_fn, requests, batch_slots=batch_slots,
