@@ -46,6 +46,20 @@ processed == N * (prompt - K_aligned) + first_wave * K_aligned and that
 fresh block allocations scale with the suffix only, with shared ==
 unshared greedy parity asserted in-bench.
 
+A fifth section benches OVER-COMMIT admission on a priority-skewed
+workload: long low-tier decodes arrive ahead of short high-tier requests,
+through a pool far below the workload's summed worst-case block demand.
+The FIFO worst-case-reservation baseline strands the high tier behind the
+low tier's reservations; over-commit admits against actual first-chunk
+need, grows lanes at block boundaries, and preempts low-tier victims
+(drop mode recomputes via chunked prefill, swap mode spills blocks to a
+host buffer) when growth runs dry. The rows record preemptions /
+swapped_blocks / recomputed_tokens / queue_wait_steps and per-tier
+first-token percentiles, with preempted == unpreempted greedy parity
+asserted in-bench for both the f32 cache and the calibrated deploy-int8
+path (kv_bits=8), and the high tier's p99 first-token asserted to beat
+the FIFO baseline's.
+
 ``python -m benchmarks.serving_bench`` (or benchmarks/run.py --sections
 serving) also writes machine-readable ``BENCH_serving.json``.
 """
@@ -107,6 +121,28 @@ PREFIX_PROMPT = 12           # tokens; first PREFIX_SHARED are common
 PREFIX_SHARED = 8            # == K_aligned (block-aligned by construction)
 PREFIX_QUOTA = 4
 PREFIX_NUM_BLOCKS = 12       # small enough to exercise LRU eviction
+
+# over-commit section: long low-tier decodes ahead of short high-tier
+# arrivals, on a pool far below the summed worst-case demand (4 * 8 + 4 * 5
+# = 52 blocks worst case vs OC_NUM_BLOCKS) — growth must preempt, and the
+# high tier must jump the FIFO queue
+OC_SLOTS = 4
+OC_BLOCK_SIZE = 8
+OC_MAX_LEN = 96
+OC_LOW = (16, 48)            # (prompt, quota): worst case 8 blocks/lane
+OC_HIGH = (32, 8)            # tier 1: worst case 5 blocks/lane
+OC_N_LOW = 4
+OC_N_HIGH = 4
+OC_NUM_BLOCKS = 20           # < 4 resident lanes' combined worst case (32)
+OC_CHUNK = 16
+
+# deploy twin, sized down for interpret-mode Pallas kernels: 2 + 2
+# requests at worst case 3 blocks each on a 4-block pool still preempts
+OC_DEPLOY_SLOTS = 2
+OC_DEPLOY_MAX_LEN = 32
+OC_DEPLOY_LOW = (8, 16)
+OC_DEPLOY_HIGH = (16, 4)
+OC_DEPLOY_BLOCKS = 4
 
 
 def _requests(cfg):
@@ -183,6 +219,7 @@ def bench():
     rows += bench_paged()
     rows += bench_chunked()
     rows += bench_prefix()
+    rows += bench_overcommit()
     return rows
 
 
@@ -501,12 +538,193 @@ def bench_prefix():
     return rows
 
 
+def _oc_requests(cfg, seed, low, high, n_low, n_high):
+    """Low-tier long decodes FIRST (rids 0..n_low-1), high-tier (priority
+    1) short requests queued behind them — the FIFO head-of-line case the
+    priority queue exists to fix."""
+    rng = np.random.RandomState(seed)
+
+    def req(rid, plen, quota, pri):
+        return Request(rid=rid,
+                       prompt=rng.randint(1, cfg.vocab_size, size=plen)
+                       .astype(np.int32),
+                       max_new_tokens=quota, priority=pri)
+    reqs = [req(i, *low, 0) for i in range(n_low)]
+    reqs += [req(n_low + i, *high, 1) for i in range(n_high)]
+    return reqs
+
+
+def _tier_fields(stats):
+    out = {"preemptions": stats.preemptions,
+           "swapped_blocks": stats.swapped_blocks,
+           "recomputed_tokens": stats.recomputed_tokens,
+           "queue_wait_steps": stats.queue_wait_steps}
+    for tier, tl in sorted(stats.tier_latency.items()):
+        out[f"tier{tier}_first_token_p50"] = round(tl.first_token_p50, 1)
+        out[f"tier{tier}_first_token_p99"] = round(tl.first_token_p99, 1)
+        out[f"tier{tier}_inter_token_p99"] = round(tl.inter_token_p99, 2)
+    return out
+
+
+def bench_overcommit():
+    """Over-commit admission + preemption vs FIFO worst-case reservation
+    on the priority-skewed workload. Asserts in-bench: the constrained
+    pool preempts (> 0), preempted == unpreempted greedy parity holds for
+    drop mode, swap mode, and the calibrated deploy-int8 kv8 path, and
+    the high tier's p99 first-token beats the FIFO baseline's."""
+    cfg = get_config("gemma2-2b").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0), stacked=True,
+                             dtype=jnp.float32)
+    from repro.runtime.steps import make_swap_steps
+
+    def build_steps(ctx_factory=None):
+        so, si = make_swap_steps()
+        return (jax.jit(make_admit_step(cfg, ctx_factory=ctx_factory),
+                        donate_argnums=(4,)),
+                jax.jit(make_decode_step(cfg, ctx_factory=ctx_factory),
+                        donate_argnums=(3,)),
+                jax.jit(make_chunk_prefill_step(cfg,
+                                                ctx_factory=ctx_factory),
+                        donate_argnums=(4,)),
+                jax.jit(so), jax.jit(si, donate_argnums=(0,)))
+
+    def run(steps, reqs, *, over_commit, swap=False, kv_bits=16,
+            slots=OC_SLOTS, max_len=OC_MAX_LEN, num_blocks=OC_NUM_BLOCKS,
+            chunk=OC_CHUNK, model=None):
+        model = params if model is None else model
+        admit, decode, chunkstep, so, si = steps
+        width = tfm.paged_lane_blocks(cfg, max_len, OC_BLOCK_SIZE)
+        pool = BlockPool(num_blocks, OC_BLOCK_SIZE, slots, width)
+
+        def init(b):
+            return tfm.init_cache(cfg, b, max_len, dtype=jnp.float32,
+                                  kv_bits=kv_bits, paged=True,
+                                  block_size=OC_BLOCK_SIZE,
+                                  num_blocks=num_blocks, mapped=False)
+        return serve(None, admit, decode, init, model, reqs,
+                     scheduler="continuous", batch_slots=slots,
+                     max_len=max_len, block_pool=pool,
+                     chunk_step=chunkstep, prefill_chunk=chunk,
+                     over_commit=over_commit,
+                     swap_out_fn=so if swap else None,
+                     swap_in_fn=si if swap else None,
+                     write_caps=tfm.attn_write_caps(cfg, max_len,
+                                                    OC_BLOCK_SIZE),
+                     ring_tokens=tfm.paged_ring_tokens(cfg, max_len,
+                                                       OC_BLOCK_SIZE))
+
+    steps = build_steps()
+    warm = [Request(rid=i, prompt=np.ones(OC_CHUNK, np.int32),
+                    max_new_tokens=2) for i in range(OC_SLOTS)]
+    run(steps, warm, over_commit=True)
+
+    rows, outs = [], {}
+    modes = [("fifo_baseline", dict(over_commit=False)),
+             ("drop", dict(over_commit=True)),
+             ("swap", dict(over_commit=True, swap=True))]
+    for name, kw in modes:
+        reqs = _oc_requests(cfg, 4, OC_LOW, OC_HIGH, OC_N_LOW, OC_N_HIGH)
+        stats = run(steps, reqs, **kw)
+        outs[name] = [r.tokens_out for r in reqs]
+        rows.append({
+            "name": f"serve_overcommit_{name}_kv16",
+            "over_commit": kw.get("over_commit", False),
+            "swap_blocks": kw.get("swap", False),
+            "kv_bits": 16,
+            "batch_slots": OC_SLOTS,
+            "requests": len(reqs),
+            "low_tier": list(OC_LOW) + [OC_N_LOW],
+            "high_tier": list(OC_HIGH) + [OC_N_HIGH],
+            "block_size": OC_BLOCK_SIZE,
+            "num_blocks": OC_NUM_BLOCKS,
+            "tokens": stats.tokens_generated,
+            "decode_steps": stats.decode_steps,
+            "chunk_steps": stats.chunk_steps,
+            "wall_s": round(stats.wall_s, 3),
+            "tokens_per_s": round(stats.tokens_per_s, 1),
+            "peak_blocks_in_use": stats.blocks_in_use,
+            **_tier_fields(stats),
+        })
+    assert outs["fifo_baseline"] == outs["drop"] == outs["swap"], \
+        "preempted == unpreempted greedy parity violated (f32)"
+    base, drop, swap = rows[-3], rows[-2], rows[-1]
+    assert base["preemptions"] == 0
+    assert drop["preemptions"] > 0 and drop["recomputed_tokens"] > 0
+    assert swap["preemptions"] > 0 and swap["swapped_blocks"] > 0
+    assert swap["recomputed_tokens"] == 0
+    # the headline: priority admission + preemption beats FIFO worst-case
+    # reservation on high-tier first-token latency
+    for r in (drop, swap):
+        assert r["tier1_first_token_p99"] < base["tier1_first_token_p99"], \
+            "high-tier p99 first-token should beat the FIFO baseline"
+        r["tier1_p99_vs_fifo"] = round(
+            r["tier1_first_token_p99"]
+            / max(base["tier1_first_token_p99"], 1e-9), 3)
+
+    # calibrated deploy-int8 path (kv8): int8 KV round-trips storage
+    # exactly, so preempted parity is bit-level here too
+    from repro.core import Mode, QuantCtx, build_deploy, peg_policy
+    from repro.core.pipeline import ptq
+    pol = peg_policy(4)
+    flat = tfm.init_params(cfg, jax.random.PRNGKey(0), stacked=False,
+                           dtype=jnp.float32)
+    calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(10), (2, 8),
+                                           0, cfg.vocab_size)}]
+
+    def fwd(p, b, ctx):
+        logits, _ = tfm.forward(cfg, p, b["tokens"], ctx=ctx)
+        return logits
+
+    qm = ptq(fwd, flat, calib, pol, collect_inputs=True)
+    shared = {}
+    for site, qp in qm.act_state.items():
+        base_site = ("layer/" + site.split("/", 1)[1]
+                     if site.startswith("layer") else site)
+        shared.setdefault(base_site, qp)
+    packed, acts = build_deploy(cfg, params, pol, shared)
+
+    def ctx_factory():
+        return QuantCtx(policy=pol, mode=Mode.DEPLOY, act_state=shared,
+                        deploy_acts=acts)
+    dsteps = build_steps(ctx_factory)
+    deploy_outs = {}
+    for name, kw in [("fifo_baseline", dict(over_commit=False)),
+                     ("drop", dict(over_commit=True))]:
+        reqs = _oc_requests(cfg, 5, OC_DEPLOY_LOW, OC_DEPLOY_HIGH, 2, 2)
+        stats = run(dsteps, reqs, kv_bits=8, slots=OC_DEPLOY_SLOTS,
+                    max_len=OC_DEPLOY_MAX_LEN, model=packed,
+                    num_blocks=OC_DEPLOY_BLOCKS, chunk=8, **kw)
+        deploy_outs[name] = [r.tokens_out for r in reqs]
+        rows.append({
+            "name": f"serve_overcommit_{name}_deploy_kv8",
+            "over_commit": kw.get("over_commit", False),
+            "kv_bits": 8,
+            "deploy_int8": True,
+            "batch_slots": OC_DEPLOY_SLOTS,
+            "requests": len(reqs),
+            "low_tier": list(OC_DEPLOY_LOW) + [2],
+            "high_tier": list(OC_DEPLOY_HIGH) + [2],
+            "block_size": OC_BLOCK_SIZE,
+            "num_blocks": OC_DEPLOY_BLOCKS,
+            "tokens": stats.tokens_generated,
+            "decode_steps": stats.decode_steps,
+            "wall_s": round(stats.wall_s, 3),
+            "tokens_per_s": round(stats.tokens_per_s, 1),
+            **_tier_fields(stats),
+        })
+    assert deploy_outs["fifo_baseline"] == deploy_outs["drop"], \
+        "preempted == unpreempted greedy parity violated (deploy-int8 kv8)"
+    assert rows[-1]["preemptions"] > 0
+    return rows
+
+
 def report(rows) -> str:
     hdr = ("name,kv_bits,tokens,decode_steps,wall_s,tokens_per_s,"
            "slot_utilization,peak_cache_bytes,speedup_vs_static,"
            "cache_bytes_vs_dense,max_decode_gap_ms,"
            "stall_reduction_vs_monolithic,prefill_tokens_processed,"
-           "blocks_allocated")
+           "blocks_allocated,preemptions,swapped_blocks,recomputed_tokens,"
+           "queue_wait_steps,tier1_first_token_p99")
     lines = [hdr]
     for r in rows:
         lines.append(
@@ -520,7 +738,12 @@ def report(rows) -> str:
             f"{r.get('max_decode_gap_ms', '')},"
             f"{r.get('stall_reduction_vs_monolithic', '')},"
             f"{r.get('prefill_tokens_processed', '')},"
-            f"{r.get('blocks_allocated', '')}")
+            f"{r.get('blocks_allocated', '')},"
+            f"{r.get('preemptions', '')},"
+            f"{r.get('swapped_blocks', '')},"
+            f"{r.get('recomputed_tokens', '')},"
+            f"{r.get('queue_wait_steps', '')},"
+            f"{r.get('tier1_first_token_p99', '')}")
     return "\n".join(lines)
 
 

@@ -34,6 +34,17 @@ prefill), so one long prompt never stalls the resident lanes for a whole
 monolithic prefill. ``--parity`` then additionally serves the requests
 unchunked and verifies chunked == unchunked greedy tokens.
 
+``--over-commit`` (continuous + ``--paged-kv``) drops worst-case block
+reservations: admission claims only the actual prefix + first-chunk need,
+the queue becomes priority-aware (``--priority`` gives every other request
+a higher tier) and a pool running dry preempts a victim lane — spilling
+its blocks to a host buffer with ``--swap-blocks`` (bit-exact resume) or
+dropping + re-prefilling them through chunked admission. ``--decode-ratio``
+holds decode cadence under prefill pressure. ``--parity`` then additionally
+serves the same requests with worst-case reservations (no preemption) and
+verifies preempted == unpreempted greedy tokens — including under
+``--deploy-int8 --kv-bits 8``.
+
 ``--prefix-cache`` (continuous + ``--paged-kv``) enables prefix sharing: a
 radix tree caches retired lanes' prompt blocks, admission maps the longest
 block-aligned cached prefix read-only (refcounted, copy-on-write under
@@ -126,6 +137,27 @@ def build_parser() -> argparse.ArgumentParser:
                          "prefix read-only (refcounted, copy-on-write) and "
                          "prefills only the novel suffix; synthesizes a "
                          "shared-prefix workload (continuous + --paged-kv)")
+    ap.add_argument("--over-commit", action="store_true",
+                    help="drop worst-case block reservations: admit "
+                         "against actual prefix + first-chunk need, grow "
+                         "on demand, and preempt a victim lane (lowest "
+                         "priority, then youngest) when the pool runs dry "
+                         "(continuous + --paged-kv)")
+    ap.add_argument("--swap-blocks", action="store_true",
+                    help="preempt by spilling the victim's blocks to a "
+                         "host-memory buffer and re-uploading on resume "
+                         "(bit-exact) instead of dropping + re-prefilling "
+                         "them (requires --over-commit)")
+    ap.add_argument("--priority", type=int, default=0, metavar="N",
+                    help="give every other request priority tier N "
+                         "(mirrors --skew; the over-commit scheduler "
+                         "admits high tiers first and preempts low tiers "
+                         "first; 0 = all requests tier 0)")
+    ap.add_argument("--decode-ratio", type=int, default=1, metavar="N",
+                    help="decode steps per chunk-prefill step once lanes "
+                         "are decodable (>1 holds decode cadence under "
+                         "prefill pressure; needs a chunked path: "
+                         "--prefill-chunk or --over-commit)")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
@@ -154,6 +186,18 @@ def main(argv=None):
     if args.prefix_cache and args.scheduler != "continuous":
         ap.error("--prefix-cache requires --scheduler continuous (the "
                  "static scheduler has no pool to share blocks from)")
+    if args.over_commit and not (args.paged_kv
+                                 and args.scheduler == "continuous"):
+        ap.error("--over-commit requires --paged-kv and --scheduler "
+                 "continuous (preemption is a paged feature)")
+    if args.swap_blocks and not args.over_commit:
+        ap.error("--swap-blocks requires --over-commit")
+    if args.decode_ratio < 1:
+        ap.error("--decode-ratio must be >= 1")
+    if args.decode_ratio > 1 and not (args.prefill_chunk
+                                      or args.over_commit):
+        ap.error("--decode-ratio > 1 requires a chunked path "
+                 "(--prefill-chunk or --over-commit)")
 
     cfg = get_config(args.arch)
     dist = None
@@ -297,7 +341,9 @@ def main(argv=None):
                                          size=args.prompt_len - len(shared))]
                         ).astype(np.int64),
                         max_new_tokens=(args.skew if args.skew and i % 2
-                                        else args.new_tokens))
+                                        else args.new_tokens),
+                        priority=(args.priority if args.priority and i % 2
+                                  else 0))
                 for i in range(args.requests)]
 
     def init_cache(batch, paged, scheduler):
@@ -316,11 +362,23 @@ def main(argv=None):
                               num_blocks=num_blocks, mapped=False)
 
     copy_block = jax.jit(tfm.cache_copy_block, donate_argnums=(0,))
+    if args.swap_blocks:
+        from repro.runtime.steps import make_swap_steps
+        _swap_out, _swap_in = make_swap_steps()
+        # swap_out keeps the cache alive (no donation); swap_in updates the
+        # arena in place
+        swap_out = jax.jit(_swap_out)
+        swap_in = jax.jit(_swap_in, donate_argnums=(0,))
+    else:
+        swap_out = swap_in = None
 
-    def run(scheduler, requests, paged=None, chunk=0, prefix=None):
+    def run(scheduler, requests, paged=None, chunk=0, prefix=None,
+            over_commit=None):
         paged = args.paged_kv if paged is None else paged
         prefix = ((args.prefix_cache if prefix is None else prefix)
                   and paged and scheduler == "continuous")
+        oc = ((args.over_commit if over_commit is None else over_commit)
+              and paged and scheduler == "continuous")
         pool = None
         if paged and scheduler == "continuous":
             pool = BlockPool(num_blocks, args.block_size, args.batch_slots,
@@ -330,7 +388,8 @@ def main(argv=None):
                      requests, scheduler=scheduler,
                      batch_slots=args.batch_slots,
                      max_len=args.max_len, block_pool=pool,
-                     chunk_step=chunk_step if (chunk or prefix) else None,
+                     chunk_step=chunk_step if (chunk or prefix or oc)
+                     else None,
                      prefill_chunk=chunk or None,
                      radix_cache=RadixCache(args.block_size) if prefix
                      else None,
@@ -338,7 +397,12 @@ def main(argv=None):
                          cfg, args.max_len, args.block_size) if pool
                      else None,
                      ring_tokens=ring_tokens if pool else None,
-                     copy_block_fn=copy_block if prefix else None)
+                     copy_block_fn=copy_block if prefix else None,
+                     over_commit=oc,
+                     swap_out_fn=swap_out if oc else None,
+                     swap_in_fn=swap_in if oc else None,
+                     decode_ratio=args.decode_ratio
+                     if (chunk or prefix or oc) else 1)
 
     requests = make_requests()
     stats = run(args.scheduler, requests, chunk=args.prefill_chunk)
@@ -358,13 +422,26 @@ def main(argv=None):
                    f"{stats.prefill_tokens_saved} prefill tokens saved, "
                    f"peak {stats.shared_blocks} shared blocks)"
                    if args.prefix_cache else "")
+    oc_note = (f", over-commit: {stats.preemptions} preemptions "
+               f"({stats.swapped_blocks} blocks swapped, "
+               f"{stats.recomputed_tokens} tokens recomputed), "
+               f"queue-wait {stats.queue_wait_steps} steps"
+               if args.over_commit else "")
     print(f"[serve:{args.scheduler}] {stats.tokens_generated} tokens, "
           f"{stats.decode_steps} decode steps, "
           f"{stats.prefill_calls} prefills, {stats.wall_s:.2f}s "
           f"({stats.tokens_per_s:.1f} tok/s), "
           f"slot-utilization {stats.slot_utilization:.0%}, "
           f"peak kv-cache {stats.cache_bytes / 1024:.0f} KiB "
-          f"(kv-bits {args.kv_bits}{paged_note}{chunk_note}{prefix_note})")
+          f"(kv-bits {args.kv_bits}{paged_note}{chunk_note}{prefix_note}"
+          f"{oc_note})")
+    if args.over_commit:
+        for tier in sorted(stats.tier_latency, reverse=True):
+            t = stats.tier_latency[tier]
+            print(f"[tier {tier}] {t.requests} requests, first-token "
+                  f"p50/p99 {t.first_token_p50:.0f}/{t.first_token_p99:.0f} "
+                  f"steps, inter-token p50/p99 {t.inter_token_p50:.1f}/"
+                  f"{t.inter_token_p99:.1f} steps")
 
     if args.parity:
         other = ("static" if args.scheduler == "continuous"
@@ -416,6 +493,23 @@ def main(argv=None):
             print(f"[parity] OK: prefix-shared and unshared serving emit "
                   f"identical greedy tokens for all {len(requests)} "
                   f"requests (kv-bits {args.kv_bits})")
+        if args.over_commit:
+            # preempted == unpreempted: the same requests served with
+            # worst-case reservations (FIFO backpressure, no preemption)
+            # must emit identical greedy tokens
+            unpreempted_reqs = make_requests()
+            run(args.scheduler, unpreempted_reqs, chunk=args.prefill_chunk,
+                over_commit=False)
+            mismatch = [r.rid for r, u in zip(requests, unpreempted_reqs)
+                        if r.tokens_out != u.tokens_out]
+            if mismatch:
+                raise SystemExit(f"[parity] FAIL: request ids {mismatch} "
+                                 f"diverge between preempted (over-commit) "
+                                 f"and unpreempted serving")
+            print(f"[parity] OK: preempted (over-commit, "
+                  f"{stats.preemptions} preemptions) and unpreempted "
+                  f"serving emit identical greedy tokens for all "
+                  f"{len(requests)} requests (kv-bits {args.kv_bits})")
     return stats
 
 

@@ -612,6 +612,71 @@ def cache_copy_block(cache, src, dst):
     return out
 
 
+def cache_gather_blocks(cache, ids):
+    """Gather the payload rows of physical blocks ``ids`` from every paged
+    arena of a whole-model cache pytree — the device half of the
+    scheduler's swap-out: the result (block axis shrunk to ``len(ids)``,
+    ``block_table`` omitted) is device_get into a host spill buffer while
+    the pool frees the blocks for other lanes.
+
+    ``ids`` is a traced int32 vector of FIXED length (max_blocks_per_lane;
+    one jitted trace serves every preemption): live block ids first,
+    padded with ``num_blocks`` — an out-of-range POSITIVE id. The gather
+    clips it to the last block (garbage rows in the padded tail), and the
+    matching scatter in :func:`cache_scatter_blocks` DROPS those writes,
+    so the padding round-trips harmlessly. Stacked scan leaves carry the
+    block axis at position 1 (after n_super), tail/flat leaves at 0.
+    """
+    ids = jnp.asarray(ids, jnp.int32)
+
+    def _gather(c, axis):
+        if not isinstance(c, (PagedKVCache, PagedQuantKVCache)):
+            raise ValueError(
+                "cache_gather_blocks: paged caches only, got "
+                f"{type(c).__name__}")
+        return jax.tree.map(
+            lambda x: jnp.take(x, ids, axis=axis, mode="clip"), c)
+
+    if "layers" in cache:
+        return {"layers": [_gather(c, 0) for c in cache["layers"]]}
+    return {"scan": [_gather(c, 1) for c in cache["scan"]],
+            "tail": [_gather(c, 0) for c in cache["tail"]]}
+
+
+def cache_scatter_blocks(cache, ids, payload):
+    """Scatter a :func:`cache_gather_blocks` ``payload`` back into physical
+    blocks ``ids`` across every paged arena — the device half of the
+    scheduler's swap-in on resume. ``ids`` are the lane's NEWLY allocated
+    block ids (same fixed length and live-prefix layout as the gather;
+    the ``num_blocks`` padding is out of range, so those rows are
+    scatter-dropped). The re-uploaded payload is bit-identical to what
+    the preempted lane held, so resume emits the same greedy tokens."""
+    ids = jnp.asarray(ids, jnp.int32)
+
+    def _scatter(c, p, axis):
+        if not isinstance(c, (PagedKVCache, PagedQuantKVCache)):
+            raise ValueError(
+                "cache_scatter_blocks: paged caches only, got "
+                f"{type(c).__name__}")
+        if axis == 1:
+            return jax.tree.map(
+                lambda x, v: x.at[:, ids].set(v, mode="drop"), c, p)
+        return jax.tree.map(
+            lambda x, v: x.at[ids].set(v, mode="drop"), c, p)
+
+    if "layers" in cache:
+        out = {"layers": [_scatter(c, p, 0) for c, p in
+                          zip(cache["layers"], payload["layers"])]}
+    else:
+        out = {"scan": [_scatter(c, p, 1) for c, p in
+                        zip(cache["scan"], payload["scan"])],
+               "tail": [_scatter(c, p, 0) for c, p in
+                        zip(cache["tail"], payload["tail"])]}
+    if "block_table" in cache:
+        out["block_table"] = cache["block_table"]
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------

@@ -36,6 +36,15 @@ Invariants the rest of the subsystem builds on:
   are ``blocks_in_use * block_bytes``, which is what the paged
   ``ServeStats.cache_bytes`` reports.
 
+* **Over-commit growth (preemption instead of worst-case sizing).** The
+  over-commit scheduler skips the worst-case claim: admission reserves
+  only what it actually maps, and ``try_grow`` extends the reservation on
+  demand — returning False (instead of raising like ``grow``) when the
+  pool cannot physically supply the extra blocks, at which point the
+  scheduler preempts a victim lane and retries. ``available_blocks``
+  (free list + evictable cached blocks) is the exact supply ``_pop_free``
+  can produce, so a True from ``try_grow`` never underflows.
+
 * **Refcounted sharing + copy-on-write (prefix cache).** Every physical
   block carries a refcount (how many lane tables map it) and a ``cached``
   flag (it backs a node of an attached
@@ -149,6 +158,20 @@ class BlockPool:
         mapped by at least one lane)."""
         return self.blocks_pinned
 
+    @property
+    def blocks_evictable(self) -> int:
+        """Cached refcount-0 blocks — reclaimable through the attached
+        radix cache's LRU eviction when the free list runs dry (each is
+        itself an eviction candidate, so every one of them IS supplyable)."""
+        return int((self._cached & (self._ref == 0)).sum())
+
+    def available_blocks(self) -> int:
+        """Blocks ``_pop_free`` could physically supply right now: the
+        free list plus every evictable cached block. The over-commit
+        scheduler's growth / admission / COW paths test against this
+        before drawing, preempting a lane when it comes up short."""
+        return len(self._free) + self.blocks_evictable
+
     def fragmentation(self, live_tokens: int) -> float:
         """Fraction of physically allocated token cells not holding a live
         token — the internal (within-block) waste of the current
@@ -257,6 +280,29 @@ class BlockPool:
         if n_total > self._n_mapped[lane]:
             self._map(lane, n_total - int(self._n_mapped[lane]))
 
+    def try_grow(self, lane: int, n_total: int) -> bool:
+        """Over-commit growth: extend ``lane``'s mapped prefix to
+        ``n_total`` blocks, EXTENDING its reservation on demand instead of
+        drawing on a worst-case claim made at admission. Returns False —
+        with no state change — when the pool cannot physically supply the
+        extra blocks (or the lane's table row is too narrow); the
+        over-commit scheduler then preempts a victim lane and retries.
+        The prefix-mapping invariant is untouched: growth still appends
+        to ``table[lane, 0:n]``."""
+        if n_total > self.max_blocks_per_lane:
+            return False
+        n_new = n_total - int(self._n_mapped[lane])
+        if n_new <= 0:
+            return True
+        if n_new > self.available_blocks():
+            return False
+        # under over-commit the reservation tracks the novel mapped count
+        # (so the shared accounting in _fits stays physically exact)
+        novel = n_total - int(self._n_shared[lane])
+        self._reserved[lane] = max(int(self._reserved[lane]), novel)
+        self._map(lane, n_new)
+        return True
+
     def needs_cow(self, lane: int, col: int) -> bool:
         """True when ``lane`` does not solely own the (mapped) block at
         table column ``col`` — writing it would mutate a shared/cached
@@ -266,20 +312,26 @@ class BlockPool:
         b = int(self.table[lane, col])
         return bool(self._cached[b]) or int(self._ref[b]) > 1
 
-    def cow(self, lane: int, col: int) -> Optional[Tuple[int, int]]:
+    def cow(self, lane: int, col: int,
+            extend: bool = False) -> Optional[Tuple[int, int]]:
         """Copy-on-write: if ``lane`` is about to write into a block it
         does not solely own, swap ``table[lane, col]`` for a fresh private
         block (charged to the lane's novel reservation) and return
         ``(src, dst)`` physical ids for the device-side payload copy.
-        Returns None when the lane already owns the block."""
+        Returns None when the lane already owns the block. ``extend``
+        (over-commit mode, no up-front COW allowance) grows the
+        reservation in place instead of raising — the scheduler checks
+        ``available_blocks`` (preempting when dry) before calling."""
         if not self.needs_cow(lane, col):
             return None
         src = int(self.table[lane, col])
         novel = int(self._n_mapped[lane]) - int(self._n_shared[lane]) + 1
-        if novel > self._reserved[lane]:      # pragma: no cover - see above
-            raise RuntimeError(
-                f"lane {lane}: COW at col {col} exceeds its reservation "
-                f"of {int(self._reserved[lane])}")
+        if novel > self._reserved[lane]:
+            if not extend:                    # pragma: no cover - see above
+                raise RuntimeError(
+                    f"lane {lane}: COW at col {col} exceeds its "
+                    f"reservation of {int(self._reserved[lane])}")
+            self._reserved[lane] = novel
         dst = self._pop_free(1)[0]
         self.table[lane, col] = dst
         self._ref[dst] = 1

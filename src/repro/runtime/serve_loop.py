@@ -29,6 +29,18 @@ Two schedulers share the Request / ServeStats bookkeeping:
   (the admit-path contract), and the emitted tokens are identical to the
   unchunked schedulers'.
 
+  With ``over_commit=True`` (paged + chunked only) the worst-case block
+  reservations are dropped: admission claims only the actual prefix +
+  first-chunk need, the queue becomes priority-aware ((-priority, seq) —
+  FIFO within a tier, no head-of-line blocking), and when growth runs the
+  pool dry a victim lane (lowest priority, then youngest) is PREEMPTED —
+  its blocks either swap to a host-memory spill buffer (re-uploaded on
+  resume) or are dropped and recomputed through chunked re-admission
+  (radix hits make the recompute O(novel suffix)). Emitted tokens are
+  identical either way: a preempted lane's cache holds exactly the first
+  ``written`` tokens of prompt + generated-so-far, so re-prefilling that
+  sequence reproduces the greedy continuation.
+
 Position sentinel contract (models/attention.py): position -1 marks a dead
 cell — a pad token inside a left-packed prompt or an idle decode lane. Dead
 cells are masked out of attention and their KV-cache writes are dropped,
@@ -57,6 +69,10 @@ class Request:
     rid: int
     prompt: np.ndarray          # (T,) int32
     max_new_tokens: int = 16
+    # admission tier: larger = more important. The over-commit scheduler
+    # admits in (-priority, arrival) order and preempts lowest-tier lanes
+    # first; the FIFO schedulers ignore it.
+    priority: int = 0
     tokens_out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
@@ -65,9 +81,30 @@ class Request:
 class RequestLatency:
     """Per-request latency in model-call steps (every prefill/admit or
     decode call increments the global step counter by one — a wall-clock-
-    free proxy that includes queueing delay)."""
-    first_token_step: int       # step whose output produced token 1
-    finish_step: int            # step whose output produced the last token
+    free proxy). ``enqueue_step`` is recorded when the request enters the
+    scheduler's queue, so first-token latency measured from it INCLUDES
+    queueing delay; ``queue_wait_steps`` isolates the queued portion
+    (summed across re-queues when the request was preempted)."""
+    enqueue_step: int = 0       # step count when the request was queued
+    admit_step: int = -1        # step count at (last) admission (-1: never)
+    first_token_step: int = -1  # step whose output produced token 1
+    finish_step: int = -1       # step whose output produced the last token
+    queue_wait_steps: int = 0   # total steps spent queued before admission
+
+
+@dataclasses.dataclass
+class TierLatency:
+    """Per-priority-tier latency percentiles, in model-call steps.
+
+    First-token latency is measured from ``enqueue_step`` (queueing delay
+    included — the whole point of the tier split); inter-token latency is
+    the mean step gap between a request's consecutive tokens, defined only
+    for requests that emitted >= 2 tokens."""
+    requests: int = 0
+    first_token_p50: float = 0.0
+    first_token_p99: float = 0.0
+    inter_token_p50: float = 0.0
+    inter_token_p99: float = 0.0
 
 
 @dataclasses.dataclass
@@ -104,7 +141,20 @@ class ServeStats:
     prefill_tokens_saved: int = 0
     shared_blocks: int = 0
     prefix_hit_rate: float = 0.0
+    # over-commit gauges (0 unless over_commit=True): lane preemptions,
+    # blocks spilled to the host swap buffer, and tokens re-prefilled by
+    # drop-mode resume (already-computed positions recomputed)
+    preemptions: int = 0
+    swapped_blocks: int = 0
+    recomputed_tokens: int = 0
+    # total steps requests spent queued before admission, summed over all
+    # requests (per-request values live in request_latency)
+    queue_wait_steps: int = 0
     request_latency: Dict[int, RequestLatency] = \
+        dataclasses.field(default_factory=dict)
+    # priority tier -> latency percentiles (always at least tier 0 when any
+    # request produced a token)
+    tier_latency: Dict[int, TierLatency] = \
         dataclasses.field(default_factory=dict)
 
 
@@ -203,16 +253,48 @@ class _Book:
         self.cells = 0
         self.active_cells = 0
         self.prompt_tokens = 0      # admitted prompt tokens (hit-rate denom)
+        self.priority: Dict[int, int] = {}   # rid -> tier, for finalize
+        self.emitted: Dict[int, int] = {}    # rid -> tokens emitted
+        self._enq_step: Dict[int, int] = {}  # rid -> last (re)enqueue step
+
+    def enqueue(self, r: Request) -> None:
+        """Record queue entry: creates the request's latency record at the
+        CURRENT step so first-token latency includes queueing delay."""
+        self.stats.request_latency[r.rid] = RequestLatency(
+            enqueue_step=self.step)
+        self.priority[r.rid] = r.priority
+        self._enq_step[r.rid] = self.step
+
+    def requeue(self, r: Request) -> None:
+        """A preempted request re-enters the queue: its renewed wait counts
+        toward queue_wait_steps, but enqueue_step keeps the original entry
+        step (first-token latency is measured from FIRST arrival)."""
+        self._enq_step[r.rid] = self.step
+
+    def admit(self, r: Request) -> None:
+        lat = self.stats.request_latency.get(r.rid)
+        if lat is None:             # defensive: enqueue() not seen
+            lat = RequestLatency(enqueue_step=self.step)
+            self.stats.request_latency[r.rid] = lat
+            self.priority[r.rid] = r.priority
+            self._enq_step[r.rid] = self.step
+        wait = self.step - self._enq_step[r.rid]
+        lat.queue_wait_steps += wait
+        self.stats.queue_wait_steps += wait
+        lat.admit_step = self.step
 
     def emit(self, r: Request, tok: int) -> None:
         r.tokens_out.append(int(tok))
         self.stats.tokens_generated += 1
+        self.emitted[r.rid] = self.emitted.get(r.rid, 0) + 1
         lat = self.stats.request_latency.get(r.rid)
-        if lat is None:
-            self.stats.request_latency[r.rid] = RequestLatency(
-                first_token_step=self.step, finish_step=self.step)
-        else:
-            lat.finish_step = self.step
+        if lat is None:             # defensive: caller skipped enqueue/admit
+            lat = RequestLatency(enqueue_step=self.step)
+            self.stats.request_latency[r.rid] = lat
+            self.priority[r.rid] = r.priority
+        if lat.first_token_step < 0:
+            lat.first_token_step = self.step
+        lat.finish_step = self.step
         if len(r.tokens_out) >= r.max_new_tokens:
             r.done = True
 
@@ -223,10 +305,12 @@ class _Book:
     def track_pool(self, pool: BlockPool, live_tokens: int,
                    block_bytes: int) -> None:
         """Paged serving: peak ALLOCATED bytes + pool gauges (fragmentation
-        is sampled at the blocks_in_use peak)."""
+        is sampled at the FIRST blocks_in_use peak — a strict > comparison,
+        so a later equal-height peak cannot silently overwrite the first
+        sample's fragmentation)."""
         s = self.stats
         s.cache_bytes = max(s.cache_bytes, pool.blocks_in_use * block_bytes)
-        if pool.blocks_in_use >= s.blocks_in_use:
+        if pool.blocks_in_use > s.blocks_in_use:
             s.blocks_in_use = pool.blocks_in_use
             s.block_fragmentation = pool.fragmentation(live_tokens)
         s.shared_blocks = max(s.shared_blocks, pool.shared_blocks)
@@ -244,6 +328,28 @@ class _Book:
                               if self.cells else 0.0)
         s.prefix_hit_rate = (s.prefix_hit_tokens / self.prompt_tokens
                              if self.prompt_tokens else 0.0)
+        # per-tier percentiles over requests that produced a first token
+        # (zero-quota requests keep their latency entry but are skipped)
+        by_tier: Dict[int, List[Tuple[int, RequestLatency]]] = {}
+        for rid, lat in s.request_latency.items():
+            if lat.first_token_step < 0:
+                continue
+            by_tier.setdefault(self.priority.get(rid, 0), []).append(
+                (rid, lat))
+        for tier, entries in sorted(by_tier.items()):
+            first = [lat.first_token_step - lat.enqueue_step
+                     for _, lat in entries]
+            inter = [(lat.finish_step - lat.first_token_step)
+                     / (self.emitted[rid] - 1)
+                     for rid, lat in entries if self.emitted.get(rid, 0) >= 2]
+            s.tier_latency[tier] = TierLatency(
+                requests=len(entries),
+                first_token_p50=float(np.percentile(first, 50)),
+                first_token_p99=float(np.percentile(first, 99)),
+                inter_token_p50=(float(np.percentile(inter, 50))
+                                 if inter else 0.0),
+                inter_token_p99=(float(np.percentile(inter, 99))
+                                 if inter else 0.0))
         return s
 
 
@@ -274,12 +380,16 @@ def serve_batch(prefill_fn: Callable, decode_fn: Callable, init_cache_fn,
         if r.max_new_tokens <= 0:
             r.done = True
     live = [r for r in requests if r.max_new_tokens > 0]
+    for r in live:
+        book.enqueue(r)
     for lo in range(0, len(live), batch_slots):
         group = live[lo:lo + batch_slots]
         T = max(len(r.prompt) for r in group)
         toks, posm = _pack_prompts(group, T)
         cache = init_cache_fn(len(group))
         book.track_cache(cache)
+        for r in group:
+            book.admit(r)
         logits, cache = prefill_fn(jnp.asarray(toks), jnp.asarray(posm),
                                    cache)
         stats.prefill_calls += 1
@@ -320,6 +430,39 @@ class DecodeState(NamedTuple):
     tokens: np.ndarray          # (B, 1) int32 current token per lane
     pos: np.ndarray             # (B, 1) int32 its absolute position (-1 idle)
     cache: Any                  # model cache pytree with B lanes
+
+
+@dataclasses.dataclass
+class _Swapped:
+    """Swap-mode preemption residue: the lane's block payload lives in a
+    host-memory spill buffer until re-admission re-uploads it. Bit-exact
+    resume — no token is ever recomputed."""
+    payload: Any                # host pytree from swap_out_fn (n_blocks live)
+    n_blocks: int               # live blocks at preemption (prefix of ids)
+    prompt: np.ndarray          # the lane's working prompt at preemption
+    pref_off: Optional[int]     # PREFILLING offset, or None if decodable
+    token: int                  # pending decode token (decodable lanes)
+    pos: int                    # its write position (decodable lanes)
+
+
+@dataclasses.dataclass
+class _Dropped:
+    """Drop-mode preemption residue: the blocks were freed (prompt blocks
+    donated to the radix cache when attached) and resume re-prefills
+    prompt + tokens-emitted-so-far through the chunk path. Radix hits make
+    the recompute O(novel suffix); the re-prefill reproduces the identical
+    greedy continuation because the cache held exactly those tokens."""
+    written: int                # cache positions held at preemption
+
+
+@dataclasses.dataclass(eq=False)      # identity compare: queue.remove(entry)
+class _QEntry:
+    """Admission-queue entry. ``seq`` is the arrival number — the FIFO key
+    within a priority tier, kept across preemptions so a re-queued request
+    does not lose its place to later arrivals of the same tier."""
+    req: Request
+    seq: int
+    resume: Optional[Any] = None    # _Swapped | _Dropped | None (fresh)
 
 
 class Scheduler:
@@ -387,6 +530,23 @@ class Scheduler:
     wrapping write would land in a shared block. ``ring_tokens``
     (models.transformer.paged_ring_tokens, all-window models only) caps
     per-lane reservations and growth at the ring size.
+
+    **Over-commit + preemption** (``over_commit=True``; needs paged mode
+    AND a ``chunk_fn``): admission stops reserving the worst case and
+    claims only the actual prefix + first-chunk blocks; growth extends the
+    reservation on demand (``BlockPool.try_grow``). The queue becomes
+    priority-aware — snapshot-sorted by ``(-priority, seq)``, so a starved
+    head no longer blocks lower-demand requests behind it — and when the
+    pool runs dry a victim lane (lowest priority, then youngest; admission
+    only ever preempts a STRICTLY lower tier) is PREEMPTED: with
+    ``swap_out_fn``/``swap_in_fn`` (runtime.steps.make_swap_steps) its
+    blocks spill to a host buffer and re-upload bit-exact on resume,
+    otherwise its blocks are dropped (prompt blocks donated to the radix
+    cache when attached) and resume re-prefills prompt + emitted tokens
+    through the chunk path — token-for-token identical either way.
+    ``decode_ratio=N`` holds decode cadence under prefill pressure: N
+    decode steps run per chunk step once lanes are decodable (1 = the
+    classic 1:1 interleave).
     """
 
     def __init__(self, admit_fn: Callable, decode_fn: Callable,
@@ -399,7 +559,11 @@ class Scheduler:
                  radix_cache: Optional[RadixCache] = None,
                  write_caps: Optional[List[int]] = None,
                  ring_tokens: Optional[int] = None,
-                 copy_block_fn: Optional[Callable] = None):
+                 copy_block_fn: Optional[Callable] = None,
+                 over_commit: bool = False,
+                 swap_out_fn: Optional[Callable] = None,
+                 swap_in_fn: Optional[Callable] = None,
+                 decode_ratio: int = 1):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         if block_pool is not None and block_pool.batch_slots != batch_slots:
@@ -432,6 +596,25 @@ class Scheduler:
                     f"radix_cache block_size {radix_cache.block_size} != "
                     f"pool block_size {block_pool.block_size}")
             block_pool.attach_cache(radix_cache)
+        if over_commit:
+            if block_pool is None:
+                raise ValueError("over_commit requires a block_pool "
+                                 "(preemption is a paged feature)")
+            if chunk_fn is None:
+                raise ValueError(
+                    "over_commit requires a chunk_fn: optimistic admission "
+                    "maps only the first chunk's blocks and drop-mode "
+                    "resume re-prefills through the chunk path")
+        if (swap_out_fn is None) != (swap_in_fn is None):
+            raise ValueError("swap_out_fn and swap_in_fn come as a pair")
+        if swap_out_fn is not None and not over_commit:
+            raise ValueError("swap functions only apply to over_commit "
+                             "preemption")
+        if decode_ratio < 1:
+            raise ValueError(f"decode_ratio must be >= 1, got {decode_ratio}")
+        if decode_ratio > 1 and chunk_fn is None:
+            raise ValueError("decode_ratio > 1 requires a chunk_fn (it "
+                             "paces decode steps against chunk steps)")
         self.admit_fn = admit_fn
         self.decode_fn = decode_fn
         self.chunk_fn = chunk_fn
@@ -443,6 +626,10 @@ class Scheduler:
         self.pool = block_pool
         self.radix = radix_cache
         self.copy_block_fn = copy_block_fn
+        self.over_commit = over_commit
+        self.swap_out_fn = swap_out_fn
+        self.swap_in_fn = swap_in_fn
+        self.decode_ratio = decode_ratio
         if block_pool is not None:
             lane_cap = block_pool.max_blocks_per_lane * block_pool.block_size
             caps = sorted(set(write_caps)) if write_caps else [lane_cap]
@@ -475,20 +662,36 @@ class Scheduler:
         # fixed chunk width: prefill_chunk when chunking, else the prompt
         # pad (radix mode routes ALL admissions through _chunk); set in run
         self._chunk_width: Optional[int] = prefill_chunk
+        # over-commit per-lane state: the WORKING prompt (original prompt,
+        # or prompt + emitted tokens for a drop-resumed lane — _chunk and
+        # _decode read token sources / end positions from it, never from
+        # r.prompt directly), the lane's queue entry (carries resume
+        # residue across preemptions), and an admission age for
+        # youngest-first victim selection
+        self._lane_prompt: List[Optional[np.ndarray]] = [None] * batch_slots
+        self._lane_entry: List[Optional[_QEntry]] = [None] * batch_slots
+        self._lane_age: List[int] = [0] * batch_slots
+        self._age = 0
+        self._queue: collections.deque = collections.deque()
+        # decode:chunk pacing credit — decremented per decode step, topped
+        # back to decode_ratio after each chunk step; a chunk runs only
+        # when the credit is spent (or nothing is decodable)
+        self._decode_credit = 0
 
     def run(self, requests: List[Request]) -> ServeStats:
         _check_capacity(requests, self.max_len, self.pool, self._ring_tokens)
         stats = ServeStats()
         book = _Book(stats, self.batch_slots)
         t_start = time.perf_counter()
-        queue: collections.deque[Request] = collections.deque()
-        for r in requests:
+        queue = self._queue = collections.deque()
+        for seq, r in enumerate(requests):
             if r.max_new_tokens <= 0:
                 r.done = True                # never occupies a lane
             else:
-                queue.append(r)
+                book.enqueue(r)
+                queue.append(_QEntry(r, seq))
         pad = self.prompt_pad_len or max(
-            (len(r.prompt) for r in queue), default=1)
+            (len(e.req.prompt) for e in queue), default=1)
         # radix mode prefills every admission (hit or miss) through _chunk;
         # without an explicit prefill_chunk the chunk width is the pad, so
         # a miss still completes in one chunk step exactly like _admit
@@ -497,6 +700,11 @@ class Scheduler:
         lanes: List[Optional[Request]] = [None] * B
         self._pref = [None] * B
         self._shared_tok = [0] * B
+        self._lane_prompt = [None] * B
+        self._lane_entry = [None] * B
+        self._lane_age = [0] * B
+        self._age = 0
+        self._decode_credit = 0
         state = DecodeState(tokens=np.zeros((B, 1), np.int32),
                             pos=np.full((B, 1), -1, np.int32),
                             cache=self.init_cache_fn(B))
@@ -507,26 +715,41 @@ class Scheduler:
         self._track(state.cache, lanes, state, book)
 
         while queue or any(r is not None for r in lanes):
+            # progress snapshot for the deadlock guard: a preemption frees
+            # blocks without issuing a model call, so it counts as progress
+            before = (book.step, stats.preemptions)
             free = [i for i in range(B) if lanes[i] is None]
-            if free and queue and self._head_fits(queue[0]):
+            if queue and self.over_commit:
+                state = self._admit_over_commit(lanes, state, book)
+            elif free and queue and self._head_fits(queue[0].req):
                 if self.prefill_chunk is None and self.radix is None:
                     state = self._admit(free, queue, pad, lanes, state, book)
                     continue    # immediate retirees may have freed lanes
                 self._admit_chunked(free, queue, lanes, book)
             prefilling = any(off is not None for off in self._pref)
-            if prefilling:
+            has_decodable = any(lanes[i] is not None and self._pref[i] is None
+                                for i in range(B))
+            # decode:chunk pacing: chunk only once the decode credit is
+            # spent (ratio=1 reproduces the classic 1:1 interleave) or when
+            # nothing is decodable anyway
+            if prefilling and (self._decode_credit <= 0 or not has_decodable):
                 state = self._chunk(lanes, state, book)
+                self._decode_credit = self.decode_ratio
             decodable = [i for i in range(B) if lanes[i] is not None
                          and self._pref[i] is None]
             if decodable:
                 state = self._decode(lanes, state, book)
-            elif not prefilling and not any(r is not None for r in lanes):
-                # no progress possible: nothing admitted, prefilling or
-                # decodable while the queue is non-empty. Unreachable:
-                # _check_capacity guarantees an empty pool can always take
-                # the queue head.
-                raise RuntimeError("paged backpressure deadlock: queue "
-                                   "head does not fit an empty pool")
+                self._decode_credit -= 1
+            elif (book.step, stats.preemptions) == before \
+                    and not any(r is not None for r in lanes):
+                # no model call, no preemption, no resident lane while the
+                # queue is non-empty: nothing can ever make progress.
+                # _check_capacity guarantees an empty pool fits any single
+                # request, so reaching this means the pool violated that
+                # contract (e.g. a leaked allocation).
+                raise RuntimeError(
+                    "scheduler deadlock: no queued request fits an empty "
+                    f"pool (queue head rid {queue[0].req.rid})")
         return book.finalize(t_start)
 
     # -- paged-pool plumbing (no-ops in dense mode) -------------------------
@@ -615,46 +838,65 @@ class Scheduler:
         return k_tok
 
     def _release(self, lane: int, r: Optional[Request] = None) -> None:
-        if self.pool is None:
-            return
-        if self.radix is not None and r is not None:
-            self._donate(lane, r)
-        self.pool.free_lane(lane)
-        self._shared_tok[lane] = 0
+        if self.pool is not None:
+            if self.radix is not None and r is not None:
+                self._donate(lane, r)
+            self.pool.free_lane(lane)
+            self._shared_tok[lane] = 0
+        self._lane_prompt[lane] = None
+        self._lane_entry[lane] = None
 
     def _donate(self, lane: int, r: Request) -> None:
-        """Retirement donation: insert the lane's FULL prompt blocks into
-        the radix tree instead of freeing them. Skipped when the lane ever
-        wrapped a ring-window layer (last write position >= min cap): a
-        wrapping write lands generation data inside prompt cells, so those
-        blocks no longer hold a clean prefix. The skip also guarantees any
-        cached path is window-read-valid for every future recipient."""
-        P = len(r.prompt)
-        n_full = P // self.pool.block_size
+        """Retirement donation: insert the lane's full WORKING-prompt
+        blocks into the radix tree instead of freeing them (the working
+        prompt is the original prompt, or prompt + pre-preemption tokens
+        for a drop-resumed lane — either way exactly what those blocks
+        hold). Skipped when the lane ever wrapped a ring-window layer
+        (last write position >= min cap): a wrapping write lands
+        generation data inside prompt cells, so those blocks no longer
+        hold a clean prefix. The skip also guarantees any cached path is
+        window-read-valid for every future recipient."""
+        seq = self._lane_prompt[lane]
+        if seq is None:
+            seq = r.prompt
+        n_full = len(seq) // self.pool.block_size
         if n_full == 0:
             return
-        if P + r.max_new_tokens - 2 >= self._min_cap:
+        if len(r.prompt) + r.max_new_tokens - 2 >= self._min_cap:
             return
         blocks = [int(b) for b in self.pool.table[lane, :n_full]]
         adopted = self.radix.insert(
-            r.prompt[:n_full * self.pool.block_size], blocks)
+            np.asarray(seq[:n_full * self.pool.block_size]), blocks)
         for b in adopted:
             self.pool.set_cached(b, True)
 
-    def _cow_barrier(self, lane: int, positions, cache):
+    def _cow_barrier(self, lane: int, positions, cache,
+                     lanes=None, state=None, book=None):
         """Copy-on-write barrier, called before any step that writes
         ``positions`` for ``lane``: for every attention write cap, find
         the table column each write wraps into; if that column still maps
         a shared (refcounted/cached) block, redirect it to a private copy
         first. Device copy via copy_block_fn (traced once — src/dst are
-        data); the pool swap marks the table dirty for the next sync."""
+        data); the pool swap marks the table dirty for the next sync.
+
+        Under over-commit the COW allowance was never reserved, so the
+        fresh block may not physically exist: victims are preempted until
+        it does (the lane itself as last resort — the caller then sees
+        ``lanes[lane] is None`` and skips the step for it)."""
         if self.pool.lane_shared(lane) == 0:
             return cache
         bs = self.pool.block_size
         cols = sorted({(p % cap) // bs
                        for p in positions for cap in self._write_caps})
         for col in cols:
-            pair = self.pool.cow(lane, col)
+            if self.over_commit and self.pool.needs_cow(lane, col):
+                while self.pool.available_blocks() < 1:
+                    victim = self._pick_victim(lanes)
+                    self._preempt(victim, lanes, state, book)
+                    if victim == lane:
+                        return cache
+            pair = (self.pool.cow(lane, col, extend=True)
+                    if self.over_commit else self.pool.cow(lane, col))
             if pair is not None:
                 cache = self.copy_block_fn(
                     cache, jnp.asarray(pair[0], jnp.int32),
@@ -694,13 +936,14 @@ class Scheduler:
     def _admit(self, free, queue, pad, lanes, state: DecodeState,
                book: _Book) -> DecodeState:
         B = self.batch_slots
-        group, slots = [], []
+        group, entries, slots = [], [], []
         for i in free:
             if not queue:
                 break
-            if not self._reserve(i, queue[0]):
+            if not self._reserve(i, queue[0].req):
                 break           # head-of-line backpressure: keep FIFO order
-            group.append(queue.popleft())
+            entries.append(queue.popleft())
+            group.append(entries[-1].req)
             slots.append(i)
             book.prompt_tokens += len(group[-1].prompt)
         toks = np.zeros((B, pad), np.int32)
@@ -711,6 +954,7 @@ class Scheduler:
             toks[i], posm[i] = g_toks[j], g_posm[j]
             admit_mask[i] = True
             lanes[i] = group[j]
+            self._register_lane(i, entries[j], group[j].prompt, book)
         self._sync_table(state.cache)
         logits, cache = self.admit_fn(jnp.asarray(toks), jnp.asarray(posm),
                                       jnp.asarray(admit_mask), state.cache)
@@ -745,7 +989,7 @@ class Scheduler:
         for i in free:
             if not queue:
                 break
-            r = queue[0]
+            r = queue[0].req
             _require_nonempty_prompt(r)
             if self.radix is not None:
                 off = self._reserve_prefix(i, r, book)
@@ -755,10 +999,237 @@ class Scheduler:
                 if not self._reserve(i, r):
                     break       # head-of-line backpressure: keep FIFO order
                 off = 0
-            queue.popleft()
+            entry = queue.popleft()
             lanes[i] = r
             self._pref[i] = off
+            self._register_lane(i, entry, r.prompt, book)
             book.prompt_tokens += len(r.prompt)
+
+    # -- over-commit: preemption + priority admission -----------------------
+
+    def _register_lane(self, lane: int, entry: _QEntry,
+                       prompt: np.ndarray, book: _Book) -> None:
+        """Admission bookkeeping shared by every path: record the lane's
+        working prompt (token source for _chunk/_decode), its queue entry
+        (resume residue carrier), an age stamp for youngest-first victim
+        selection, and the queue-wait/admit latency sample."""
+        self._lane_prompt[lane] = prompt
+        self._lane_entry[lane] = entry
+        self._age += 1
+        self._lane_age[lane] = self._age
+        book.admit(entry.req)
+
+    def _pick_victim(self, lanes,
+                     *, below: Optional[int] = None) -> Optional[int]:
+        """Victim lane for preemption: lowest priority first, youngest
+        (largest age stamp) within a tier. ``below`` restricts candidates
+        to strictly lower priority than the given tier (admission-driven
+        preemption must never evict a peer to seat an equal); growth-driven
+        callers pass no bound — the demander itself is then a candidate,
+        guaranteeing a victim always exists."""
+        cand = [i for i in range(self.batch_slots) if lanes[i] is not None]
+        if below is not None:
+            cand = [i for i in cand if lanes[i].priority < below]
+        if not cand:
+            return None
+        return min(cand, key=lambda i: (lanes[i].priority,
+                                        -self._lane_age[i]))
+
+    def _pad_block_ids(self, ids: np.ndarray) -> np.ndarray:
+        """Pad a lane's live block ids to the fixed swap-step width with
+        ``num_blocks`` — an out-of-range POSITIVE id, so the gather clips
+        to a garbage row and the scatter drops the write (a negative pad
+        would wrap around under jnp indexing)."""
+        pad = np.full((self.pool.max_blocks_per_lane,),
+                      self.pool.num_blocks, np.int32)
+        pad[:len(ids)] = ids
+        return pad
+
+    def _preempt(self, lane: int, lanes, state: DecodeState,
+                 book: _Book) -> None:
+        """Preempt ``lane``: spill its blocks to the host swap buffer
+        (swap mode — bit-exact resume) or free them after donating the
+        fully written prefix to the radix cache (drop mode — resume
+        re-prefills prompt + emitted tokens, O(novel suffix) on a radix
+        hit), then re-queue its request with the resume residue attached.
+        The request keeps its original arrival seq, so it does not lose
+        its FIFO place within its tier."""
+        r = lanes[lane]
+        entry = self._lane_entry[lane]
+        off = self._pref[lane]
+        written = off if off is not None else int(state.pos[lane, 0])
+        stats = book.stats
+        if self.swap_out_fn is not None:
+            ids = self.pool.lane_blocks(lane)
+            payload = jax.device_get(self.swap_out_fn(
+                state.cache, jnp.asarray(self._pad_block_ids(ids))))
+            entry.resume = _Swapped(
+                payload=payload, n_blocks=len(ids),
+                prompt=self._lane_prompt[lane], pref_off=off,
+                token=int(state.tokens[lane, 0]),
+                pos=int(state.pos[lane, 0]))
+            stats.swapped_blocks += len(ids)
+        else:
+            self._donate_written(lane, r, written)
+            entry.resume = _Dropped(written=written)
+        self.pool.free_lane(lane)
+        self._shared_tok[lane] = 0
+        self._lane_prompt[lane] = None
+        self._lane_entry[lane] = None
+        lanes[lane] = None
+        self._pref[lane] = None
+        state.pos[lane, 0] = -1        # idle: decode treats it as dead
+        stats.preemptions += 1
+        book.requeue(r)
+        self._queue.append(entry)
+
+    def _donate_written(self, lane: int, r: Request, written: int) -> None:
+        """Drop-mode preemption donation: the lane's blocks hold positions
+        0..written-1 of prompt + emitted tokens, so donate the fully
+        covered blocks — the radix cache then turns the resume re-prefill
+        into O(novel suffix). Skipped without a radix cache, and when a
+        ring-window layer may already have wrapped (highest written
+        position >= min cap would mean generation data landed inside
+        earlier cells)."""
+        if self.radix is None:
+            return
+        bs = self.pool.block_size
+        n_full = written // bs
+        if n_full == 0 or written - 1 >= self._min_cap:
+            return
+        full = np.concatenate([np.asarray(r.prompt, np.int32),
+                               np.asarray(r.tokens_out, np.int32)])
+        blocks = [int(b) for b in self.pool.table[lane, :n_full]]
+        adopted = self.radix.insert(full[:n_full * bs], blocks)
+        for b in adopted:
+            self.pool.set_cached(b, True)
+
+    def _ensure_blocks(self, lane: int, n_total: int, lanes,
+                       state: DecodeState, book: _Book) -> bool:
+        """Over-commit growth: grow ``lane`` to ``n_total`` mapped blocks,
+        preempting victims (lowest priority, youngest) until the pool can
+        supply them. The demander itself is the last-resort victim —
+        False means it was preempted and the caller must skip it this
+        step (it resumes through the queue)."""
+        while not self.pool.try_grow(lane, n_total):
+            victim = self._pick_victim(lanes)
+            # the demander is always a candidate, so victim is never None
+            self._preempt(victim, lanes, state, book)
+            if victim == lane:
+                return False
+        return True
+
+    def _admit_over_commit(self, lanes, state: DecodeState,
+                           book: _Book) -> DecodeState:
+        """Priority-aware over-commit admission: try queued entries in
+        (-priority, seq) order — FIFO within a tier, but a starved head no
+        longer blocks other tiers. An entry with no free lane may preempt
+        a STRICTLY lower-tier victim to take its slot; an entry whose
+        first chunk does not fit the pool may do the same. Entries that
+        still cannot be placed stay queued (skipped, not blocking)."""
+        B = self.batch_slots
+        for entry in sorted(self._queue,
+                            key=lambda e: (-e.req.priority, e.seq)):
+            _require_nonempty_prompt(entry.req)
+            free = [i for i in range(B) if lanes[i] is None]
+            if not free:
+                victim = self._pick_victim(lanes, below=entry.req.priority)
+                if victim is None:
+                    break       # every resident lane is >= this tier: wait
+                self._preempt(victim, lanes, state, book)
+                free = [victim]
+            lane = free[0]
+            placed, state = self._try_place(lane, entry, state, book)
+            while not placed:
+                victim = self._pick_victim(lanes, below=entry.req.priority)
+                if victim is None:
+                    break
+                self._preempt(victim, lanes, state, book)
+                placed, state = self._try_place(lane, entry, state, book)
+            if not placed:
+                continue        # pool too full even after preemption
+            self._queue.remove(entry)
+            lanes[lane] = entry.req
+        return state
+
+    def _try_place(self, lane: int, entry: _QEntry, state: DecodeState,
+                   book: _Book) -> Tuple[bool, DecodeState]:
+        """Seat ``entry`` in the free ``lane``. Swap residue re-allocates
+        the same block count and re-uploads the host payload (bit-exact);
+        anything else (fresh or drop residue) goes through optimistic
+        chunked placement. Returns (placed, state) — False leaves the
+        pool untouched."""
+        r = entry.req
+        res = entry.resume
+        pool = self.pool
+        if isinstance(res, _Swapped):
+            n = res.n_blocks
+            if n > pool.available_blocks() \
+                    or not pool.reserve_and_alloc(lane, n, n):
+                return False, state
+            ids = pool.lane_blocks(lane)
+            cache = self.swap_in_fn(
+                state.cache, jnp.asarray(self._pad_block_ids(ids)),
+                jax.device_put(res.payload))
+            tokens, pos = state.tokens.copy(), state.pos.copy()
+            self._pref[lane] = res.pref_off
+            if res.pref_off is None:    # decodable: restore pending token
+                tokens[lane, 0] = res.token
+                pos[lane, 0] = res.pos
+            self._register_lane(lane, entry, res.prompt, book)
+            self._shared_tok[lane] = 0  # every re-uploaded block is private
+            entry.resume = None
+            return True, DecodeState(tokens, pos, cache)
+        if isinstance(res, _Dropped):
+            prompt = np.concatenate([np.asarray(r.prompt, np.int32),
+                                     np.asarray(r.tokens_out, np.int32)])
+        else:
+            prompt = r.prompt
+        off = self._place_chunked(lane, prompt, book)
+        if off is None:
+            return False, state
+        if isinstance(res, _Dropped):
+            book.stats.recomputed_tokens += max(res.written - off, 0)
+            entry.resume = None
+        self._pref[lane] = off
+        self._register_lane(lane, entry, prompt, book)
+        book.prompt_tokens += len(prompt)
+        return True, state
+
+    def _place_chunked(self, lane: int, prompt: np.ndarray,
+                       book: _Book) -> Optional[int]:
+        """Optimistic admission sizing: map the radix-matched prefix (if
+        any) plus ONLY the blocks the first chunk's writes land in — no
+        worst-case reservation (try_grow extends it later). Returns the
+        starting prefill offset, or None when even the first chunk does
+        not physically fit."""
+        pool = self.pool
+        bs = pool.block_size
+        P = len(prompt)
+        blocks, raw = [], 0
+        if self.radix is not None:
+            blocks, raw = self.radix.match(np.asarray(prompt),
+                                           max_blocks=(P - 1) // bs)
+        k = len(blocks)
+        first = min(self._chunk_width, P - k * bs)
+        cols_first = blocks_for_tokens(k * bs + first, bs)
+        if self._ring_blocks is not None:
+            cols_first = min(cols_first, self._ring_blocks)
+        n_alloc = max(cols_first - k, 0)
+        if n_alloc > pool.available_blocks():
+            return None
+        if blocks:
+            ok = pool.map_shared(lane, blocks, n_alloc, n_alloc,
+                                 n_cols=cols_first)
+        else:
+            ok = pool.reserve_and_alloc(lane, n_alloc, n_alloc)
+        if not ok:
+            return None
+        self._shared_tok[lane] = k * bs
+        if k:
+            book.stats.prefix_hit_tokens += raw
+            book.stats.prefill_tokens_saved += k * bs
+        return k * bs
 
     def _chunk(self, lanes, state: DecodeState, book: _Book) -> DecodeState:
         """One fixed-shape chunk step: append up to ``prefill_chunk`` prompt
@@ -766,34 +1237,61 @@ class Scheduler:
         width; lanes starting chunk 1 are reset first via the step's
         reset_mask). Lanes finishing their last chunk emit their first
         token from the chunk's final-position logits and become decodable
-        (quota-1 requests retire immediately, as in _admit)."""
+        (quota-1 requests retire immediately, as in _admit).
+
+        Token sources and end positions come from the lane's WORKING
+        prompt (prompt + pre-preemption tokens for a drop-resumed lane),
+        so a resumed lane re-prefills exactly what its cache held plus the
+        pending token — the final-position logits then emit the NEXT
+        (never-emitted) token, preserving greedy parity."""
         C = self._chunk_width
         B = self.batch_slots
+        cache = state.cache
+        if self.pool is not None:
+            # pool pre-pass BEFORE building the step inputs: under
+            # over-commit a COW or growth may PREEMPT a lane (possibly one
+            # already visited, or the demander itself), changing who
+            # chunks this step
+            bs = self.pool.block_size
+            for i in range(B):
+                if self._pref[i] is None or lanes[i] is None:
+                    continue
+                off = self._pref[i]
+                seq = self._lane_prompt[i]
+                c = min(C, len(seq) - off)
+                # copy-on-write BEFORE growth/sync: a ring-window write in
+                # this chunk may wrap into a shared prefix column
+                if self.radix is not None:
+                    cache = self._cow_barrier(i, range(off, off + c), cache,
+                                              lanes, state, book)
+                    if lanes[i] is None:
+                        continue    # preempted inside the COW barrier
+                # map the blocks this chunk's writes land in (reservation-
+                # backed, cannot fail mid-flight — unless over-commit,
+                # which grows on demand and preempts when the pool is dry)
+                n_total = (off + c - 1) // bs + 1
+                if self._ring_blocks is not None:
+                    n_total = min(n_total, self._ring_blocks)
+                if self.over_commit:
+                    self._ensure_blocks(i, n_total, lanes, state, book)
+                else:
+                    self.pool.grow(i, n_total)
         prefilling = [i for i in range(B) if self._pref[i] is not None]
+        if not prefilling:          # every prefilling lane was preempted
+            return DecodeState(state.tokens, state.pos, cache)
         toks = np.zeros((B, C), np.int32)
         posm = np.full((B, C), -1, np.int32)
         reset = np.zeros((B,), bool)
         ends = {}
-        cache = state.cache
         for i in prefilling:
-            r = lanes[i]
             off = self._pref[i]
-            c = min(C, len(r.prompt) - off)
-            toks[i, C - c:] = r.prompt[off:off + c]
+            seq = self._lane_prompt[i] if self._lane_prompt[i] is not None \
+                else lanes[i].prompt
+            c = min(C, len(seq) - off)
+            toks[i, C - c:] = seq[off:off + c]
             posm[i, C - c:] = np.arange(off, off + c, dtype=np.int32)
             reset[i] = off == 0
             ends[i] = off + c
-            if self.pool is not None:
-                # copy-on-write BEFORE growth/sync: a ring-window write in
-                # this chunk may wrap into a shared prefix column
-                if self.radix is not None:
-                    cache = self._cow_barrier(i, range(off, off + c), cache)
-                # map the blocks this chunk's writes land in (reservation-
-                # backed, cannot fail mid-flight — same rule as _decode)
-                n_total = (off + c - 1) // self.pool.block_size + 1
-                if self._ring_blocks is not None:
-                    n_total = min(n_total, self._ring_blocks)
-                self.pool.grow(i, n_total)
         self._sync_table(cache)
         logits, cache = self.chunk_fn(jnp.asarray(toks), jnp.asarray(posm),
                                       jnp.asarray(reset), cache)
@@ -804,12 +1302,14 @@ class Scheduler:
         tokens, pos = state.tokens.copy(), state.pos.copy()
         for i in prefilling:
             r = lanes[i]
-            if ends[i] < len(r.prompt):
+            seq = self._lane_prompt[i] if self._lane_prompt[i] is not None \
+                else r.prompt
+            if ends[i] < len(seq):
                 self._pref[i] = ends[i]     # more chunks to go
                 continue
             self._pref[i] = None            # last chunk: lane is decodable
             tokens[i, 0] = last[i, 0]
-            pos[i, 0] = len(r.prompt)
+            pos[i, 0] = len(seq)
             book.emit(r, tokens[i, 0])
         # sample gauges BEFORE releasing quota-1 retirees (as in _admit)
         self._track(cache, lanes, DecodeState(tokens, pos, cache), book)
@@ -822,23 +1322,35 @@ class Scheduler:
         return DecodeState(tokens, pos, cache)
 
     def _decode(self, lanes, state: DecodeState, book: _Book) -> DecodeState:
-        active = [i for i, r in enumerate(lanes)
-                  if r is not None and self._pref[i] is None]
         cache = state.cache
         if self.pool is not None:
-            # incremental growth: map the block the coming write lands in
-            # (reservation-backed, cannot fail mid-flight)
+            # incremental growth: map the block the coming write lands in.
+            # Reservation-backed growth cannot fail mid-flight; over-commit
+            # growth may PREEMPT a lane instead (possibly the demander),
+            # so the active set is recomputed after this pre-pass.
             bs = self.pool.block_size
-            for i in active:
+            for i in range(self.batch_slots):
+                if lanes[i] is None or self._pref[i] is not None:
+                    continue
                 p = int(state.pos[i, 0])
                 if self.radix is not None:
                     # a ring-window write may wrap into a shared column
-                    cache = self._cow_barrier(i, (p,), cache)
+                    cache = self._cow_barrier(i, (p,), cache,
+                                              lanes, state, book)
+                    if lanes[i] is None:
+                        continue    # preempted inside the COW barrier
                 n_total = p // bs + 1
                 if self._ring_blocks is not None:
                     n_total = min(n_total, self._ring_blocks)
-                self.pool.grow(i, n_total)
+                if self.over_commit:
+                    self._ensure_blocks(i, n_total, lanes, state, book)
+                else:
+                    self.pool.grow(i, n_total)
             self._sync_table(cache)
+        active = [i for i, r in enumerate(lanes)
+                  if r is not None and self._pref[i] is None]
+        if not active:              # every decodable lane was preempted
+            return DecodeState(state.tokens, state.pos, cache)
         logits, cache = self.decode_fn(jnp.asarray(state.tokens),
                                        jnp.asarray(state.pos), cache)
         book.count_decode(len(active))
@@ -873,7 +1385,11 @@ def serve_continuous(admit_fn: Callable, decode_fn: Callable, init_cache_fn,
                      radix_cache: Optional[RadixCache] = None,
                      write_caps: Optional[List[int]] = None,
                      ring_tokens: Optional[int] = None,
-                     copy_block_fn: Optional[Callable] = None) -> ServeStats:
+                     copy_block_fn: Optional[Callable] = None,
+                     over_commit: bool = False,
+                     swap_out_fn: Optional[Callable] = None,
+                     swap_in_fn: Optional[Callable] = None,
+                     decode_ratio: int = 1) -> ServeStats:
     """Continuous-batching counterpart of :func:`serve_batch` (see
     :class:`Scheduler` for the step-function contracts)."""
     return Scheduler(admit_fn, decode_fn, init_cache_fn,
@@ -882,7 +1398,9 @@ def serve_continuous(admit_fn: Callable, decode_fn: Callable, init_cache_fn,
                      chunk_fn=chunk_fn, prefill_chunk=prefill_chunk,
                      radix_cache=radix_cache, write_caps=write_caps,
                      ring_tokens=ring_tokens,
-                     copy_block_fn=copy_block_fn).run(requests)
+                     copy_block_fn=copy_block_fn, over_commit=over_commit,
+                     swap_out_fn=swap_out_fn, swap_in_fn=swap_in_fn,
+                     decode_ratio=decode_ratio).run(requests)
 
 
 def serve(prefill_step: Callable, admit_step: Callable,
@@ -896,7 +1414,11 @@ def serve(prefill_step: Callable, admit_step: Callable,
           radix_cache: Optional[RadixCache] = None,
           write_caps: Optional[List[int]] = None,
           ring_tokens: Optional[int] = None,
-          copy_block_fn: Optional[Callable] = None) -> ServeStats:
+          copy_block_fn: Optional[Callable] = None,
+          over_commit: bool = False,
+          swap_out_fn: Optional[Callable] = None,
+          swap_in_fn: Optional[Callable] = None,
+          decode_ratio: int = 1) -> ServeStats:
     """Dispatch to a scheduler, binding ``params`` into step functions with
     the ``runtime.steps.make_*_step`` signatures (params first):
 
@@ -915,6 +1437,11 @@ def serve(prefill_step: Callable, admit_step: Callable,
     ``ring_tokens`` / ``copy_block_fn``, continuous paged only) enables
     prefix sharing — see :class:`Scheduler`. ``copy_block_fn`` takes
     (cache, src, dst) with no params (models.transformer.cache_copy_block).
+    ``over_commit`` (+ optional ``swap_out_fn``/``swap_in_fn`` from
+    runtime.steps.make_swap_steps, continuous paged chunked only) drops
+    worst-case reservations in favor of preemption; ``decode_ratio``
+    paces decode steps against chunk steps — see :class:`Scheduler`.
+    Swap fns take (cache, ids) / (cache, ids, payload) with no params.
     """
     if scheduler == "continuous":
         return serve_continuous(
@@ -927,7 +1454,9 @@ def serve(prefill_step: Callable, admit_step: Callable,
                       lambda t, pm, m, c: chunk_step(params, t, pm, m, c)),
             prefill_chunk=prefill_chunk, radix_cache=radix_cache,
             write_caps=write_caps, ring_tokens=ring_tokens,
-            copy_block_fn=copy_block_fn)
+            copy_block_fn=copy_block_fn, over_commit=over_commit,
+            swap_out_fn=swap_out_fn, swap_in_fn=swap_in_fn,
+            decode_ratio=decode_ratio)
     if scheduler != "static":
         raise ValueError(f"unknown scheduler {scheduler!r}")
     if block_pool is not None:
@@ -939,6 +1468,12 @@ def serve(prefill_step: Callable, admit_step: Callable,
     if radix_cache is not None:
         raise ValueError("radix_cache is a continuous-scheduler feature; "
                          "prefix sharing needs the paged block pool")
+    if over_commit:
+        raise ValueError("over_commit is a continuous-scheduler feature; "
+                         "preemption needs the paged block pool")
+    if decode_ratio != 1:
+        raise ValueError("decode_ratio is a continuous-scheduler feature; "
+                         "static groups have no chunk/decode interleave")
     return serve_batch(lambda t, pm, c: prefill_step(params, t, c, pm),
                        lambda t, p, c: decode_step(params, t, p, c),
                        init_cache_fn, requests, batch_slots=batch_slots,

@@ -185,6 +185,33 @@ def make_decode_step(cfg: ModelConfig, *, dist=None,
     return decode
 
 
+def make_swap_steps():
+    """Block swap-out / swap-in pair for over-commit preemption (paged
+    caches only — thin wrappers over models.transformer's gather/scatter,
+    shaped for jitting by launch/serve.py):
+
+    swap_out(cache, ids (max_blocks_per_lane,)) -> payload pytree
+    swap_in(cache, ids, payload) -> cache
+
+    ``ids`` is a FIXED-length int32 vector — the lane's live physical
+    block ids first, padded with ``num_blocks`` (an out-of-range POSITIVE
+    id: the gather clips it to a garbage row, the scatter DROPS the
+    write, and a negative pad would wrap around instead). One trace
+    serves every preemption/resume since block ids are data. The
+    scheduler device_gets the payload into a host spill buffer at
+    preemption and device_puts it back at resume against the lane's NEW
+    block ids — bit-exact, so the resumed lane emits identical greedy
+    tokens. Jit swap_in with ``donate_argnums=(0,)`` (the cache arena is
+    updated in place); swap_out must NOT donate (the cache lives on).
+    """
+    def swap_out(cache, ids):
+        return tfm.cache_gather_blocks(cache, ids)
+
+    def swap_in(cache, ids, payload):
+        return tfm.cache_scatter_blocks(cache, ids, payload)
+    return swap_out, swap_in
+
+
 def make_encoder_forward(cfg: ModelConfig, *, dist=None):
     """Prefill-equivalent for encoder-decoder archs: encode the frames and
     project the decoder's cross-attention KV (the serving 'prefill')."""

@@ -1,0 +1,708 @@
+"""Over-commit admission, lane preemption, priority tiers, and the
+queue-wait / latency accounting they rely on (runtime.serve_loop with
+over_commit=True + runtime.block_pool.try_grow + runtime.steps.make_swap_steps).
+
+Coverage layers, mirroring tests/test_chunked_prefill.py /
+test_prefix_cache.py:
+
+* Latency bookkeeping unit tests: queue_wait_steps under pool
+  backpressure (per-request and aggregate), the _Book.track_pool
+  first-peak fragmentation sample (strict >, a later equal-height peak
+  cannot overwrite it), and zero-quota requests never growing a
+  request_latency entry (their absence must not crash finalize's tier
+  percentiles).
+* Golden stub-model over-commit tests: a pool below the workload's
+  worst-case demand still serves every request token-for-token
+  (preemptions > 0) — drop mode recomputes (recomputed_tokens > 0),
+  swap mode restores bit-state (swapped_blocks > 0, nothing recomputed);
+  priority tiers reorder admission (high tier jumps the FIFO queue,
+  low-tier lanes are the preemption victims); decode_ratio paces decode
+  steps against chunk steps; the scheduler deadlock guard raises instead
+  of spinning when a (broken) pool can never seat anything.
+* Property sweeps (seeded + hypothesis when installed): radix-cache LRU
+  eviction racing preemption — a freshly drawn block is never mapped,
+  cached, or ref-held elsewhere (no resurrected freed blocks), refcounts
+  drain to zero, free + cached partition the pool.
+* Real-model invariants on gemma2-2b-reduced: a preempted over-commit
+  run (pool below total worst-case demand) emits the same greedy tokens
+  as an unconstrained reservation run — drop and swap modes, f32 KV and
+  the calibrated deploy-int8 path for both kv-bit widths.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as tfm
+from repro.runtime import (BlockPool, RadixCache, Request, blocks_for_tokens,
+                           serve, serve_continuous)
+from repro.runtime.serve_loop import ServeStats, _Book
+from repro.runtime.steps import (make_admit_step, make_chunk_prefill_step,
+                                 make_decode_step, make_prefill_step,
+                                 make_swap_steps)
+from serve_testlib import golden as _golden
+from serve_testlib import next_arr as _next_arr
+from serve_testlib import onehot as _onehot
+
+pytestmark = [pytest.mark.serve, pytest.mark.preempt]
+
+
+class OCStub:
+    """StubChunkModel twin for over-commit serving: deterministic
+    next_token = (2 * tok + 1) % VOCAB, position-free, so drop-mode
+    recompute and swap-mode restore must both reproduce the golden
+    continuation exactly. Stub swap fns carry a dummy payload (the stub
+    cache holds no per-block state)."""
+
+    def __init__(self):
+        self.calls = []
+
+    def init_cache(self, batch):
+        return {"kv": jnp.zeros((batch, 4), jnp.float32)}
+
+    def admit(self, tokens, positions, admit_mask, cache):
+        self.calls.append("admit")
+        return _onehot(_next_arr(tokens)), cache
+
+    def chunk(self, tokens, positions, reset_mask, cache):
+        self.calls.append("chunk")
+        return _onehot(_next_arr(tokens)), cache
+
+    def decode(self, tokens, pos, cache):
+        self.calls.append("decode")
+        return _onehot(_next_arr(tokens)), cache
+
+    def swap_out(self, cache, ids):
+        self.calls.append("swap_out")
+        return {"blocks": jnp.zeros((int(ids.shape[0]), 1), jnp.float32)}
+
+    def swap_in(self, cache, ids, payload):
+        self.calls.append("swap_in")
+        return cache
+
+
+def _serve_oc(reqs, *, slots=2, bs=4, width=8, num_blocks=8, swap=False,
+              radix=False, prefill_chunk=4, decode_ratio=1,
+              over_commit=True, pool_cls=BlockPool):
+    m = OCStub()
+    pool = pool_cls(num_blocks, bs, slots, width)
+    rc = RadixCache(bs) if radix else None
+    stats = serve_continuous(
+        m.admit, m.decode, m.init_cache, reqs, batch_slots=slots,
+        block_pool=pool, chunk_fn=m.chunk, prefill_chunk=prefill_chunk,
+        radix_cache=rc, over_commit=over_commit,
+        swap_out_fn=m.swap_out if swap else None,
+        swap_in_fn=m.swap_in if swap else None,
+        decode_ratio=decode_ratio)
+    return m, stats, pool, rc
+
+
+def _reqs(specs, priorities=None):
+    """Distinct prompts (head token varies per rid) of (prompt_len, quota),
+    with optional per-request priority tiers."""
+    pri = priorities or [0] * len(specs)
+    return [Request(rid=i, prompt=np.full(n, 3 + i, np.int32),
+                    max_new_tokens=q, priority=p)
+            for i, ((n, q), p) in enumerate(zip(specs, pri))]
+
+
+def _drained(pool, rc=None):
+    """Post-drain invariants (mirrors test_prefix_cache._check_drained):
+    refcounts conserved, free + cached partition the pool."""
+    assert pool.blocks_reserved == 0
+    assert all(pool.block_ref(b) == 0 for b in range(pool.num_blocks))
+    assert (pool.table == -1).all()
+    free = list(pool._free)
+    cached = [b for b in range(pool.num_blocks) if pool.is_cached(b)]
+    assert len(free) == len(set(free))           # no double-free
+    assert sorted(free + cached) == list(range(pool.num_blocks))
+    assert pool.blocks_in_use == len(cached)
+    if rc is not None:
+        assert pool.blocks_cached == rc.n_nodes
+
+
+# ---------------------------------------------------------------------------
+# Queue-wait accounting (satellite: enqueue step + queue_wait_steps)
+# ---------------------------------------------------------------------------
+
+
+class TestQueueWait:
+    def test_backpressure_accrues_queue_wait(self):
+        """Legacy (worst-case reservation) paged serving: two lanes fill
+        the pool, so the third request waits at the queue head until a
+        lane retires — its wait is visible per-request and in aggregate."""
+        reqs = _reqs([(4, 5)] * 3)
+        m, stats, pool, _ = _serve_oc(reqs, slots=2, width=4, num_blocks=4,
+                                      over_commit=False)
+        for r in reqs:
+            assert r.tokens_out == _golden(r.prompt, 5)
+        lat = stats.request_latency
+        assert lat[0].enqueue_step == 0 and lat[0].queue_wait_steps == 0
+        assert lat[1].queue_wait_steps == 0
+        assert lat[2].queue_wait_steps > 0
+        assert lat[2].queue_wait_steps == (lat[2].admit_step
+                                           - lat[2].enqueue_step)
+        assert stats.queue_wait_steps == sum(
+            l.queue_wait_steps for l in lat.values())
+
+    def test_unpressured_requests_wait_zero(self):
+        reqs = _reqs([(4, 2), (4, 2)])
+        _, stats, _, _ = _serve_oc(reqs, slots=2, num_blocks=8,
+                                   over_commit=False)
+        assert stats.queue_wait_steps == 0
+        for l in stats.request_latency.values():
+            assert l.queue_wait_steps == 0
+            assert l.admit_step == l.enqueue_step == 0
+
+    def test_legacy_stats_stay_zero_without_over_commit(self):
+        reqs = _reqs([(4, 3)] * 3)
+        _, stats, _, _ = _serve_oc(reqs, slots=2, width=4, num_blocks=4,
+                                   over_commit=False)
+        assert stats.preemptions == 0
+        assert stats.swapped_blocks == 0
+        assert stats.recomputed_tokens == 0
+
+
+# ---------------------------------------------------------------------------
+# track_pool first-peak fragmentation sample (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+
+class _FakePool:
+    def __init__(self):
+        self.blocks_in_use = 0
+        self.shared_blocks = 0
+        self.frag = 0.0
+
+    def fragmentation(self, live_tokens):
+        return self.frag
+
+
+class TestTrackPoolFirstPeak:
+    def test_equal_height_peak_keeps_first_sample(self):
+        stats = ServeStats()
+        book = _Book(stats, 2)
+        pool = _FakePool()
+        pool.blocks_in_use, pool.frag = 4, 0.25
+        book.track_pool(pool, 10, 1)
+        assert stats.blocks_in_use == 4
+        assert stats.block_fragmentation == 0.25
+        # a LATER peak of the same height must not overwrite the sample
+        pool.frag = 0.9
+        book.track_pool(pool, 2, 1)
+        assert stats.blocks_in_use == 4
+        assert stats.block_fragmentation == 0.25
+        # a strictly higher peak does resample
+        pool.blocks_in_use, pool.frag = 6, 0.5
+        book.track_pool(pool, 20, 1)
+        assert stats.blocks_in_use == 6
+        assert stats.block_fragmentation == 0.5
+
+
+# ---------------------------------------------------------------------------
+# Zero-quota requests (satellite: no latency entry, consumers guarded)
+# ---------------------------------------------------------------------------
+
+
+class TestZeroQuota:
+    def test_zero_quota_mixed_into_over_commit_run(self):
+        reqs = _reqs([(4, 3), (4, 0), (4, 2), (3, 0)])
+        _, stats, pool, _ = _serve_oc(reqs, slots=2, num_blocks=6)
+        assert reqs[1].done and reqs[1].tokens_out == []
+        assert reqs[3].done and reqs[3].tokens_out == []
+        assert reqs[0].tokens_out == _golden(reqs[0].prompt, 3)
+        assert reqs[2].tokens_out == _golden(reqs[2].prompt, 2)
+        # zero-quota requests never enqueue: no latency entry at all
+        assert set(stats.request_latency) == {0, 2}
+        # finalize's tier percentiles must survive the sparse entries
+        assert stats.tier_latency[0].requests == 2
+        _drained(pool)
+
+    def test_all_zero_quota_finalizes_empty(self):
+        reqs = _reqs([(4, 0), (2, 0)])
+        _, stats, _, _ = _serve_oc(reqs, slots=1, num_blocks=4)
+        assert stats.request_latency == {}
+        assert stats.tier_latency == {}
+        assert stats.tokens_generated == 0
+
+
+# ---------------------------------------------------------------------------
+# Golden over-commit serving: drop + swap preemption
+# ---------------------------------------------------------------------------
+
+# four requests, each worst case blocks_for_tokens(4+12-1, 4) = 4 blocks;
+# the 6-block pool is below even two lanes' combined demand (8), so
+# growth MUST preempt — and still serve every golden token
+_OC_SPECS = [(4, 12)] * 4
+
+
+class TestOverCommitGolden:
+    def test_drop_mode_preempts_and_recomputes(self):
+        reqs = _reqs(_OC_SPECS)
+        m, stats, pool, _ = _serve_oc(reqs, slots=2, num_blocks=6)
+        for r in reqs:
+            assert r.done
+            assert r.tokens_out == _golden(r.prompt, 12)
+        assert stats.preemptions > 0
+        assert stats.recomputed_tokens > 0       # drop mode re-prefills
+        assert stats.swapped_blocks == 0
+        assert stats.queue_wait_steps > 0        # requeued lanes waited
+        _drained(pool)
+
+    def test_swap_mode_preempts_without_recompute(self):
+        reqs = _reqs(_OC_SPECS)
+        m, stats, pool, _ = _serve_oc(reqs, slots=2, num_blocks=6,
+                                      swap=True)
+        for r in reqs:
+            assert r.tokens_out == _golden(r.prompt, 12)
+        assert stats.preemptions > 0
+        assert stats.swapped_blocks > 0
+        assert stats.recomputed_tokens == 0      # bit-exact resume
+        assert "swap_out" in m.calls and "swap_in" in m.calls
+        _drained(pool)
+
+    def test_over_commit_admits_beyond_worst_case(self):
+        """The whole point: summed worst-case reservations (2 + 3 blocks)
+        exceed the 4-block pool, so legacy admission serializes — but the
+        instantaneous demand peaks at 4 (the short request frees its
+        blocks before the long one grows), so over-commit runs both lanes
+        concurrently without a single preemption."""
+        specs = [(4, 2), (4, 6)]
+        reqs = _reqs(specs)
+        m, stats, pool, _ = _serve_oc(reqs, slots=2, num_blocks=4)
+        for r in reqs:
+            assert r.tokens_out == _golden(r.prompt, r.max_new_tokens)
+        assert stats.preemptions == 0
+        lat = stats.request_latency
+        assert lat[0].admit_step == 0 and lat[1].admit_step == 0
+        _drained(pool)
+        # the worst-case-reservation baseline on the same pool serializes
+        legacy = _reqs(specs)
+        _, s_legacy, _, _ = _serve_oc(legacy, slots=2, num_blocks=4,
+                                      over_commit=False)
+        assert s_legacy.request_latency[1].admit_step > 0
+
+    def test_preempted_equals_unpreempted(self):
+        specs = [(5, 9), (4, 11), (6, 7), (3, 10), (4, 8)]
+        for swap in (False, True):
+            tight = _reqs(specs)
+            _, s_tight, pool, _ = _serve_oc(tight, slots=2, num_blocks=5,
+                                            swap=swap)
+            roomy = _reqs(specs)
+            _, s_roomy, _, _ = _serve_oc(roomy, slots=2, num_blocks=16)
+            assert s_tight.preemptions > 0, swap
+            assert s_roomy.preemptions == 0
+            for t, r in zip(tight, roomy):
+                assert t.tokens_out == r.tokens_out, (swap, t.rid)
+            _drained(pool)
+
+
+# ---------------------------------------------------------------------------
+# Priority tiers
+# ---------------------------------------------------------------------------
+
+
+class TestPriorityTiers:
+    def test_high_tier_jumps_fifo_queue(self):
+        """One lane: the tier-1 arrival seated FIRST although it queued
+        behind a tier-0 request."""
+        reqs = _reqs([(4, 3), (4, 3)], priorities=[0, 1])
+        _, stats, _, _ = _serve_oc(reqs, slots=1, num_blocks=8)
+        lat = stats.request_latency
+        assert lat[1].admit_step == 0 and lat[1].queue_wait_steps == 0
+        assert lat[0].admit_step > 0 and lat[0].queue_wait_steps > 0
+        for r in reqs:
+            assert r.tokens_out == _golden(r.prompt, 3)
+        assert stats.tier_latency[1].first_token_p50 \
+            < stats.tier_latency[0].first_token_p50
+
+    def test_fifo_ignores_priority_without_over_commit(self):
+        reqs = _reqs([(4, 3), (4, 3)], priorities=[0, 1])
+        _, stats, _, _ = _serve_oc(reqs, slots=1, num_blocks=8,
+                                   over_commit=False)
+        lat = stats.request_latency
+        assert lat[0].admit_step == 0            # arrival order held
+        assert lat[1].admit_step > 0
+
+    def test_growth_preempts_lowest_tier_first(self):
+        """Pool pressure from a long high-tier decode evicts the tier-0
+        lane, never the tier-1 demander: the high tier rides through with
+        zero queue wait while tier 0 pays the preemption."""
+        reqs = _reqs([(4, 16), (4, 8), (4, 8), (4, 8)],
+                     priorities=[1, 0, 0, 0])
+        _, stats, pool, _ = _serve_oc(reqs, slots=2, num_blocks=6)
+        for r in reqs:
+            assert r.tokens_out == _golden(r.prompt, r.max_new_tokens)
+        assert stats.preemptions > 0
+        lat = stats.request_latency
+        assert lat[0].queue_wait_steps == 0      # tier 1: never preempted
+        assert any(lat[i].queue_wait_steps > 0 for i in (1, 2, 3))
+        assert stats.tier_latency[1].requests == 1
+        assert stats.tier_latency[0].requests == 3
+        assert stats.tier_latency[1].first_token_p99 \
+            <= stats.tier_latency[0].first_token_p99
+        _drained(pool)
+
+    def test_same_tier_victim_is_youngest(self):
+        """All one tier: growth preemption picks the youngest lane, so
+        the oldest admission always completes first (no livelock)."""
+        reqs = _reqs(_OC_SPECS)
+        _, stats, _, _ = _serve_oc(reqs, slots=2, num_blocks=6)
+        lat = stats.request_latency
+        assert stats.preemptions > 0
+        assert lat[0].queue_wait_steps == 0      # oldest never evicted
+        for r in reqs:
+            assert r.tokens_out == _golden(r.prompt, 12)
+
+
+# ---------------------------------------------------------------------------
+# decode:chunk pacing
+# ---------------------------------------------------------------------------
+
+
+class TestDecodeRatio:
+    def test_ratio_two_interleaves_two_decodes_per_chunk(self):
+        reqs = [Request(rid=0, prompt=np.asarray([3]), max_new_tokens=8),
+                Request(rid=1, prompt=np.asarray([5] * 12),
+                        max_new_tokens=2)]
+        m = OCStub()
+        serve_continuous(m.admit, m.decode, m.init_cache, reqs,
+                         batch_slots=2, chunk_fn=m.chunk, prefill_chunk=3,
+                         decode_ratio=2)
+        for r in reqs:
+            assert r.tokens_out == _golden(r.prompt, r.max_new_tokens)
+        assert m.calls[:9] == ["chunk", "decode", "decode",
+                               "chunk", "decode", "decode",
+                               "chunk", "decode", "decode"]
+
+    def test_ratio_one_is_legacy_interleave(self):
+        specs = [(1, 8), (12, 2)]
+        a = [Request(rid=i, prompt=np.full(n, 4 + i, np.int32),
+                     max_new_tokens=q) for i, (n, q) in enumerate(specs)]
+        b = [Request(rid=i, prompt=np.full(n, 4 + i, np.int32),
+                     max_new_tokens=q) for i, (n, q) in enumerate(specs)]
+        ma = OCStub()
+        serve_continuous(ma.admit, ma.decode, ma.init_cache, a,
+                         batch_slots=2, chunk_fn=ma.chunk, prefill_chunk=3)
+        mb = OCStub()
+        serve_continuous(mb.admit, mb.decode, mb.init_cache, b,
+                         batch_slots=2, chunk_fn=mb.chunk, prefill_chunk=3,
+                         decode_ratio=1)
+        assert ma.calls == mb.calls
+        for x, y in zip(a, b):
+            assert x.tokens_out == y.tokens_out
+
+    def test_invalid_configs_raise(self):
+        m = OCStub()
+        reqs = _reqs([(4, 1)])
+        with pytest.raises(ValueError, match="decode_ratio"):
+            serve_continuous(m.admit, m.decode, m.init_cache, reqs,
+                             batch_slots=1, chunk_fn=m.chunk,
+                             decode_ratio=0)
+        with pytest.raises(ValueError, match="chunk_fn"):
+            serve_continuous(m.admit, m.decode, m.init_cache, reqs,
+                             batch_slots=1, decode_ratio=2)
+        with pytest.raises(ValueError, match="block_pool"):
+            serve_continuous(m.admit, m.decode, m.init_cache, reqs,
+                             batch_slots=1, chunk_fn=m.chunk,
+                             over_commit=True)
+        with pytest.raises(ValueError, match="chunk_fn"):
+            serve_continuous(m.admit, m.decode, m.init_cache, reqs,
+                             batch_slots=1, block_pool=BlockPool(8, 4, 1, 8),
+                             over_commit=True)
+        with pytest.raises(ValueError, match="pair"):
+            serve_continuous(m.admit, m.decode, m.init_cache, reqs,
+                             batch_slots=1, block_pool=BlockPool(8, 4, 1, 8),
+                             chunk_fn=m.chunk, over_commit=True,
+                             swap_out_fn=m.swap_out)
+        with pytest.raises(ValueError, match="over_commit"):
+            serve_continuous(m.admit, m.decode, m.init_cache, reqs,
+                             batch_slots=1, block_pool=BlockPool(8, 4, 1, 8),
+                             chunk_fn=m.chunk, swap_out_fn=m.swap_out,
+                             swap_in_fn=m.swap_in)
+
+
+# ---------------------------------------------------------------------------
+# Deadlock guard (the formerly "unreachable" degradation path)
+# ---------------------------------------------------------------------------
+
+
+class _StingyPool(BlockPool):
+    """A pool that passes the up-front capacity check but can never
+    actually supply a block — the contract violation the deadlock guard
+    exists to surface."""
+
+    def available_blocks(self):
+        return 0
+
+
+class TestDeadlockGuard:
+    def test_unseatable_queue_raises_instead_of_spinning(self):
+        reqs = _reqs([(4, 2)])
+        with pytest.raises(RuntimeError, match="deadlock"):
+            _serve_oc(reqs, slots=1, num_blocks=8, pool_cls=_StingyPool)
+
+
+# ---------------------------------------------------------------------------
+# Radix eviction racing preemption (satellite: no resurrected blocks)
+# ---------------------------------------------------------------------------
+
+
+class _CheckedPool(BlockPool):
+    """Asserts on every free-list draw that the block really is free:
+    unmapped in every lane, not cached, refcount zero — a resurrected
+    block (freed by preemption while the radix cache still pointed at it)
+    trips this immediately instead of corrupting a later lane."""
+
+    def _pop_free(self, n):
+        blocks = super()._pop_free(n)
+        mapped = {int(b) for b in self.table.ravel() if b >= 0}
+        for b in blocks:
+            assert b not in mapped, f"block {b} drawn while mapped"
+            assert not self.is_cached(b), f"block {b} drawn while cached"
+            assert self.block_ref(b) == 0, f"block {b} drawn with refs"
+        return blocks
+
+
+def _shared_reqs(specs, shared):
+    out = []
+    for i, (n, q) in enumerate(specs):
+        tail = np.full(n - len(shared), 10 + i, np.int32)
+        out.append(Request(rid=i, prompt=np.concatenate([shared, tail]),
+                           max_new_tokens=q))
+    return out
+
+
+def _run_preempt_radix(specs, slots, num_blocks, shared_len):
+    pre = np.arange(1, shared_len + 1, dtype=np.int32)
+    reqs = _shared_reqs([(shared_len + n, q) for n, q in specs], pre)
+    m, stats, pool, rc = _serve_oc(reqs, slots=slots, bs=4, width=8,
+                                   num_blocks=num_blocks, radix=True,
+                                   pool_cls=_CheckedPool)
+    for r in reqs:
+        assert r.done
+        assert r.tokens_out == _golden(r.prompt, r.max_new_tokens)
+    _drained(pool, rc)
+    return stats
+
+
+class TestPreemptionRadixConservation:
+    def test_seeded_sweep(self):
+        """Seeded workloads on pools barely above the single-request
+        worst case: preemption interleaves with LRU eviction and
+        drop-mode donation, yet refcounts conserve and no freed block is
+        ever resurrected."""
+        rng = np.random.RandomState(7)
+        preempted = 0
+        for _ in range(12):
+            shared_len = int(rng.choice([0, 4, 8]))
+            n = rng.randint(2, 6)
+            specs = [(rng.randint(1, 6), rng.randint(1, 10))
+                     for _ in range(n)]
+            worst = max(blocks_for_tokens(shared_len + p + q - 1, 4)
+                        for p, q in specs)
+            slots = rng.randint(1, 4)
+            blocks = worst + rng.randint(0, 3)
+            stats = _run_preempt_radix(specs, slots, blocks, shared_len)
+            preempted += stats.preemptions
+        assert preempted > 0                     # the sweep exercised it
+
+    def test_preemption_with_prefix_hits_recomputes_suffix_only(self):
+        """Drop-mode resume through a warm radix cache: the re-prefill
+        recompute is bounded by the novel suffix, not the full prompt."""
+        pre = np.arange(1, 9, dtype=np.int32)    # two cacheable blocks
+        specs = [(12, 8)] * 3
+        reqs = _shared_reqs(specs, pre)
+        m, stats, pool, rc = _serve_oc(reqs, slots=2, bs=4, width=8,
+                                       num_blocks=7, radix=True)
+        for r in reqs:
+            assert r.tokens_out == _golden(r.prompt, 8)
+        assert stats.preemptions > 0
+        assert stats.prefix_hit_tokens > 0
+        _drained(pool, rc)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                # pragma: no cover - dev-only dependency
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    class TestPreemptionHypothesis:
+        @settings(max_examples=25, deadline=None)
+        @given(st.lists(st.tuples(st.integers(1, 5), st.integers(1, 9)),
+                        min_size=2, max_size=6),
+               st.integers(1, 3), st.integers(0, 2),
+               st.sampled_from([0, 4, 8]))
+        def test_refcounts_conserved_under_preemption(self, specs, slots,
+                                                      extra, shared_len):
+            worst = max(blocks_for_tokens(shared_len + p + q - 1, 4)
+                        for p, q in specs)
+            _run_preempt_radix(specs, slots, worst + extra, shared_len)
+else:                              # keep the skip visible in test reports
+    @pytest.mark.skip(reason="hypothesis not installed "
+                             "(see requirements-dev.txt)")
+    def test_refcounts_conserved_under_preemption():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Real-model invariants (gemma2-2b-reduced)
+# ---------------------------------------------------------------------------
+
+MAX_LEN = 32
+BS = 8
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("gemma2-2b").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0), stacked=True,
+                             dtype=jnp.float32)
+    return cfg, params
+
+
+_STEP_CACHE = {}
+
+
+def _steps(cfg, ctx_factory=None):
+    key = (cfg.name, ctx_factory)
+    if key not in _STEP_CACHE:
+        so, si = make_swap_steps()
+        _STEP_CACHE[key] = (
+            jax.jit(make_admit_step(cfg, ctx_factory=ctx_factory)),
+            jax.jit(make_chunk_prefill_step(cfg, ctx_factory=ctx_factory)),
+            jax.jit(make_decode_step(cfg, ctx_factory=ctx_factory)),
+            jax.jit(make_prefill_step(cfg, ctx_factory=ctx_factory)),
+            jax.jit(so), jax.jit(si, donate_argnums=(0,)))
+    return _STEP_CACHE[key]
+
+
+def _serve_oc_real(cfg, params, reqs, *, kv_bits=16, slots=2,
+                   num_blocks=None, swap=False, over_commit=True,
+                   ctx_factory=None):
+    admit, chunkstep, decode, prefill, so, si = _steps(cfg, ctx_factory)
+    width = tfm.paged_lane_blocks(cfg, MAX_LEN, BS)
+    num_blocks = num_blocks or slots * width
+    pool = BlockPool(num_blocks, BS, slots, width)
+
+    def init(b):
+        return tfm.init_cache(cfg, b, MAX_LEN, dtype=jnp.float32,
+                              kv_bits=kv_bits, paged=True, block_size=BS,
+                              num_blocks=num_blocks, mapped=False)
+
+    stats = serve(prefill, admit, decode, init, params, reqs,
+                  scheduler="continuous", batch_slots=slots,
+                  max_len=MAX_LEN, block_pool=pool, chunk_step=chunkstep,
+                  prefill_chunk=BS, over_commit=over_commit,
+                  swap_out_fn=so if swap else None,
+                  swap_in_fn=si if swap else None,
+                  write_caps=tfm.attn_write_caps(cfg, MAX_LEN, BS),
+                  ring_tokens=tfm.paged_ring_tokens(cfg, MAX_LEN, BS))
+    return stats, pool
+
+
+def _mk_reqs(seed, cfg, specs, priorities=None):
+    rng = np.random.RandomState(seed)
+    pri = priorities or [0] * len(specs)
+    return [Request(rid=i,
+                    prompt=rng.randint(1, cfg.vocab_size,
+                                       size=n).astype(np.int32),
+                    max_new_tokens=q, priority=p)
+            for i, ((n, q), p) in enumerate(zip(specs, pri))]
+
+
+# 4 requests x up to 22 cache cells each: worst case 3 blocks per lane,
+# so a 4-block pool is under two lanes' combined demand (6) and must
+# preempt, while any single request still fits (capacity contract)
+SPEC_OC = [(10, 12), (9, 12), (11, 10), (10, 11)]
+
+
+@pytest.mark.slow
+class TestRealOverCommitParity:
+    @pytest.mark.parametrize("swap", [False, True])
+    def test_preempted_equals_unpreempted_f32(self, tiny, swap):
+        cfg, params = tiny
+        base = _mk_reqs(3, cfg, SPEC_OC)
+        _serve_oc_real(cfg, params, base, over_commit=False)
+        reqs = _mk_reqs(3, cfg, SPEC_OC)
+        stats, pool = _serve_oc_real(cfg, params, reqs, num_blocks=4,
+                                     swap=swap)
+        assert stats.preemptions > 0
+        if swap:
+            assert stats.swapped_blocks > 0
+            assert stats.recomputed_tokens == 0
+        else:
+            assert stats.recomputed_tokens > 0
+        for b, r in zip(base, reqs):
+            assert b.tokens_out == r.tokens_out, (swap, r.rid)
+            assert r.done
+        assert pool.blocks_reserved == 0
+
+    def test_priority_tiers_real_model(self, tiny):
+        cfg, params = tiny
+        reqs = _mk_reqs(5, cfg, SPEC_OC, priorities=[1, 0, 0, 0])
+        base = _mk_reqs(5, cfg, SPEC_OC, priorities=[1, 0, 0, 0])
+        _serve_oc_real(cfg, params, base, over_commit=False)
+        stats, _ = _serve_oc_real(cfg, params, reqs, num_blocks=4)
+        assert stats.preemptions > 0
+        assert stats.request_latency[0].queue_wait_steps == 0
+        assert stats.tier_latency[1].requests == 1
+        for b, r in zip(base, reqs):
+            assert b.tokens_out == r.tokens_out
+
+
+@pytest.mark.slow
+@pytest.mark.deploy
+class TestDeployOverCommitParity:
+    """Over-commit preemption on the integer deployment path: calibrated
+    int8 KV round-trips storage exactly, so drop-mode recompute and
+    swap-mode restore both preserve bit-level greedy parity for both
+    kv-bit widths."""
+
+    @pytest.fixture(scope="class")
+    def deployed(self):
+        from repro.core import Mode, QuantCtx, build_deploy, peg_policy
+        from repro.core.pipeline import ptq
+        cfg = get_config("gemma2-2b").reduced()
+        key = jax.random.PRNGKey(0)
+        params = tfm.init_params(cfg, key, stacked=True, dtype=jnp.float32)
+        pol = peg_policy(4)
+        flat = tfm.init_params(cfg, key, stacked=False, dtype=jnp.float32)
+        calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(10),
+                                               (2, 8), 0, cfg.vocab_size)}]
+
+        def fwd(p, b, ctx):
+            logits, _ = tfm.forward(cfg, p, b["tokens"], ctx=ctx)
+            return logits
+
+        qm = ptq(fwd, flat, calib, pol, collect_inputs=True)
+        shared = {}
+        for site, qp in qm.act_state.items():
+            base = ("layer/" + site.split("/", 1)[1]
+                    if site.startswith("layer") else site)
+            shared.setdefault(base, qp)
+        packed, acts = build_deploy(cfg, params, pol, shared)
+
+        def ctx_factory():
+            return QuantCtx(policy=pol, mode=Mode.DEPLOY, act_state=shared,
+                            deploy_acts=acts)
+        return cfg, packed, ctx_factory
+
+    @pytest.mark.parametrize("kv_bits,swap", [(16, False), (8, False),
+                                              (8, True)])
+    def test_preempted_equals_unpreempted_deploy(self, deployed, kv_bits,
+                                                 swap):
+        cfg, packed, ctx_factory = deployed
+        base = _mk_reqs(9, cfg, SPEC_OC)
+        _serve_oc_real(cfg, packed, base, kv_bits=kv_bits,
+                       over_commit=False, ctx_factory=ctx_factory)
+        reqs = _mk_reqs(9, cfg, SPEC_OC)
+        stats, _ = _serve_oc_real(cfg, packed, reqs, kv_bits=kv_bits,
+                                  num_blocks=4, swap=swap,
+                                  ctx_factory=ctx_factory)
+        assert stats.preemptions > 0
+        for b, r in zip(base, reqs):
+            assert b.tokens_out == r.tokens_out, (kv_bits, swap, r.rid)
