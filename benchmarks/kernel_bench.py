@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops
+from repro.kernels import nibble, ops
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -102,6 +102,18 @@ def bench():
     tpu_us, bytes_moved = _matmul_roofline_us(m, kk, n)
     rows.append(_row("int8_matmul_1kx4kx4k", us, tpu_us, bytes_moved))
 
+    # 4-bit weight payload: two int4 rows per byte, unpacked to int8 in
+    # VMEM — same MXU work, half the HBM weight read
+    w4 = jax.random.randint(key, (kk, n), -7, 8, jnp.int8)
+    w4_pk = nibble.pack_rows(w4)
+    us = _time(lambda a_: ops.int8_matmul(a_, w4_pk, s_a=0.02, s_w=0.01,
+                                          w_bits=4, block_m=256,
+                                          block_n=256, block_k=512), a)
+    bytes4 = m * kk + kk * n // 2 + m * n * 4    # packed weight: K/2 x N
+    roof4 = max(2 * m * kk * n / (2 * PEAK_FLOPS), bytes4 / HBM_BW) * 1e6
+    rows.append(_row("int8_matmul_w4_1kx4kx4k", us, roof4, bytes4,
+                     "w-int4"))
+
     # PEG int8 matmul (K=8 groups fused rescale)
     g = 8
     sg = jax.random.uniform(key, (g,), minval=0.01, maxval=0.05)
@@ -141,6 +153,14 @@ def bench_attention_decode(b=4, s=2048, kv=8, g=2, hd=128):
         return ops.int8_attend_decode(qq, qs, k_q, ks_, v_q, vs_, k_pos,
                                       q_pos, chunk=512)
 
+    # int4 cache: two cells per byte, unpacked in VMEM before the MXU q.k
+    k4_pk = nibble.pack_nibbles(jnp.clip(k_q, -8, 7))
+    v4_pk = nibble.pack_nibbles(jnp.clip(v_q, -8, 7))
+
+    def int4_path(qq):
+        return ops.int8_attend_decode(qq, qs, k4_pk, ks_, v4_pk, vs_,
+                                      k_pos, q_pos, kv_bits=4, chunk=512)
+
     k16 = (k_q.astype(jnp.float32) * ks_[..., None]).astype(jnp.bfloat16)
     v16 = (v_q.astype(jnp.float32) * vs_[..., None]).astype(jnp.bfloat16)
     qf = (q_q.astype(jnp.float32) * qs[..., None])
@@ -154,12 +174,15 @@ def bench_attention_decode(b=4, s=2048, kv=8, g=2, hd=128):
         p = jax.nn.softmax(sc, axis=-1)
         return jnp.einsum("bkgs,bskd->bkgd", p, v16.astype(jnp.float32))
 
-    # cache bytes/step: int8 payloads + f32 per-slot scales vs bf16 k/v
+    # cache bytes/step: packed/int8 payloads + f32 per-slot scales vs
+    # bf16 k/v (int4 packs two cells per byte: hd/2 payload bytes)
+    int4_cache = b * s * kv * (hd // 2 + 4) * 2
     int8_cache = b * s * kv * (hd * 1 + 4) * 2
     bf16_cache = b * s * kv * hd * 2 * 2
     q_out = b * kv * g * hd * (1 + 4)            # q int8 + f32 out (both tiny)
     rows = []
     for name, fn, arg, cache_bytes, variant in [
+            ("attn_decode_int4kv", int4_path, q_q, int4_cache, "kv-int4"),
             ("attn_decode_int8kv", int8_path, q_q, int8_cache, "kv-int8"),
             ("attn_decode_bf16kv", bf16_path, qf, bf16_cache, "kv-bf16")]:
         us = _time(fn, arg)
@@ -229,12 +252,23 @@ def report(rows):
         lines.append(f"# fused FFN chain moves {ratio:.2f}x fewer HBM bytes "
                      "than the unfused sequence")
     kvs = {r["variant"]: r for r in rows if r["variant"] in
-           ("kv-int8", "kv-bf16")}
-    if len(kvs) == 2:
+           ("kv-int4", "kv-int8", "kv-bf16")}
+    if len(kvs) >= 2:
         ratio = kvs["kv-bf16"]["cache_bytes_step"] / \
             kvs["kv-int8"]["cache_bytes_step"]
         lines.append(f"# int8 KV cache reads {ratio:.2f}x fewer cache bytes "
                      "per decode step than bf16")
+    if "kv-int4" in kvs:
+        ratio = kvs["kv-int4"]["cache_bytes_step"] / \
+            kvs["kv-int8"]["cache_bytes_step"]
+        lines.append(f"# int4 KV cache reads {ratio:.2f}x the int8 cache "
+                     "bytes per decode step (target <= 0.55)")
+    mm = {r["name"]: r for r in rows}
+    if "int8_matmul_w4_1kx4kx4k" in mm and "int8_matmul_1kx4kx4k" in mm:
+        ratio = mm["int8_matmul_w4_1kx4kx4k"]["hbm_bytes"] / \
+            mm["int8_matmul_1kx4kx4k"]["hbm_bytes"]
+        lines.append(f"# int4 weight payload moves {ratio:.2f}x the int8 "
+                     "matmul HBM bytes (weight read halved)")
     return "\n".join(lines)
 
 

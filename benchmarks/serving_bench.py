@@ -60,6 +60,15 @@ asserted in-bench for both the f32 cache and the calibrated deploy-int8
 path (kv_bits=8), and the high tier's p99 first-token asserted to beat
 the FIFO baseline's.
 
+A sixth section benches the INT4 KV cache as a capacity feature: the
+nibble-packed arena roughly halves the per-block HBM bytes of the int8
+pool (scales stay f32), so a fixed byte budget holds ~2x the resident
+decode lanes. Both bit-widths serve the same workload through the
+calibrated deploy path on the paged continuous scheduler; the rows
+record per-block bytes, resident lanes per MiB, and the int4 rows
+quantify the drift vs int8 in-bench (greedy-token match rate — int4 is
+lossy by construction, so drift is reported, not asserted away).
+
 ``python -m benchmarks.serving_bench`` (or benchmarks/run.py --sections
 serving) also writes machine-readable ``BENCH_serving.json``.
 """
@@ -144,6 +153,13 @@ OC_DEPLOY_LOW = (8, 16)
 OC_DEPLOY_HIGH = (16, 4)
 OC_DEPLOY_BLOCKS = 4
 
+# int4-KV section: same deploy-path workload at kv-bits 8 and 4 — the
+# capacity claim is per-block bytes, the cost claim is greedy drift
+KV4_SLOTS = 2
+KV4_MAX_LEN = 32
+KV4_BLOCK_SIZE = 8
+KV4_SPEC = [(4, 4), (8, 6), (6, 4), (3, 2)]      # (prompt_len, quota)
+
 
 def _requests(cfg):
     rng = np.random.RandomState(0)
@@ -220,6 +236,7 @@ def bench():
     rows += bench_chunked()
     rows += bench_prefix()
     rows += bench_overcommit()
+    rows += bench_kv4_lanes()
     return rows
 
 
@@ -715,6 +732,110 @@ def bench_overcommit():
     assert deploy_outs["fifo_baseline"] == deploy_outs["drop"], \
         "preempted == unpreempted greedy parity violated (deploy-int8 kv8)"
     assert rows[-1]["preemptions"] > 0
+    return rows
+
+
+def bench_kv4_lanes():
+    """Int4 vs int8 KV cache on the calibrated deploy path: per-block HBM
+    bytes (the capacity lever — lanes per byte budget) and greedy drift
+    (the cost — quantified, not asserted away).
+
+    head_dim is widened to 64 (vs the smoke default 16): the per-slot f32
+    scales are a fixed per-token cost, so at hd=16 they are ~1/3 of the
+    block bytes and the payload halving can't show — at hd=64 the ratio
+    lands at its production-shape value (~0.54, vs 0.52 at hd=128 in
+    BENCH_kernels.json)."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("gemma2-2b").reduced(),
+                              head_dim=64)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0), stacked=True,
+                             dtype=jnp.float32)
+    from repro.core import Mode, QuantCtx, build_deploy, peg_policy
+    from repro.core.pipeline import ptq
+    pol = peg_policy(4)
+    flat = tfm.init_params(cfg, jax.random.PRNGKey(0), stacked=False,
+                           dtype=jnp.float32)
+    calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(10), (2, 8),
+                                           0, cfg.vocab_size)}]
+
+    def fwd(p, b, ctx):
+        logits, _ = tfm.forward(cfg, p, b["tokens"], ctx=ctx)
+        return logits
+
+    qm = ptq(fwd, flat, calib, pol, collect_inputs=True)
+    shared = {}
+    for site, qp in qm.act_state.items():
+        base_site = ("layer/" + site.split("/", 1)[1]
+                     if site.startswith("layer") else site)
+        shared.setdefault(base_site, qp)
+    packed, acts = build_deploy(cfg, params, pol, shared)
+
+    def ctx_factory():
+        return QuantCtx(policy=pol, mode=Mode.DEPLOY, act_state=shared,
+                        deploy_acts=acts)
+
+    nb_lane = tfm.paged_lane_blocks(cfg, KV4_MAX_LEN, KV4_BLOCK_SIZE)
+    rng = np.random.RandomState(6)
+    prompts = [rng.randint(1, cfg.vocab_size, size=p).astype(np.int32)
+               for p, _ in KV4_SPEC]
+
+    def reqs_for():
+        return [Request(rid=i, prompt=prompts[i], max_new_tokens=q)
+                for i, (_, q) in enumerate(KV4_SPEC)]
+
+    rows, outs = [], {}
+    for kv_bits in (8, 4):
+        admit = jax.jit(make_admit_step(cfg, ctx_factory=ctx_factory),
+                        donate_argnums=(4,))
+        decode = jax.jit(make_decode_step(cfg, ctx_factory=ctx_factory),
+                         donate_argnums=(3,))
+        prefill = jax.jit(make_prefill_step(cfg, ctx_factory=ctx_factory))
+
+        def init(b):
+            return tfm.init_cache(cfg, b, KV4_MAX_LEN, dtype=jnp.float32,
+                                  kv_bits=kv_bits, paged=True,
+                                  block_size=KV4_BLOCK_SIZE,
+                                  num_blocks=KV4_SLOTS * nb_lane,
+                                  mapped=False)
+        block_bytes = tfm.paged_block_bytes(init(KV4_SLOTS))
+        pool = BlockPool(KV4_SLOTS * nb_lane, KV4_BLOCK_SIZE, KV4_SLOTS,
+                         nb_lane)
+        reqs = reqs_for()
+        stats = serve(prefill, admit, decode, init, packed, reqs,
+                      scheduler="continuous", batch_slots=KV4_SLOTS,
+                      max_len=KV4_MAX_LEN, block_pool=pool)
+        outs[kv_bits] = [r.tokens_out for r in reqs]
+        lane_bytes = nb_lane * block_bytes
+        rows.append({
+            "name": f"serve_resident_lanes_kv{kv_bits}",
+            "kv_bits": kv_bits,
+            "deploy_int8": True,
+            "batch_slots": KV4_SLOTS,
+            "requests": len(reqs),
+            "max_len": KV4_MAX_LEN,
+            "block_size": KV4_BLOCK_SIZE,
+            "tokens": stats.tokens_generated,
+            "decode_steps": stats.decode_steps,
+            "wall_s": round(stats.wall_s, 3),
+            "tokens_per_s": round(stats.tokens_per_s, 1),
+            "peak_cache_bytes": stats.cache_bytes,
+            "block_bytes": block_bytes,
+            "lane_worst_case_bytes": lane_bytes,
+            "resident_lanes_per_mib": round(2 ** 20 / lane_bytes, 1),
+        })
+    kv8_row, kv4_row = rows[-2], rows[-1]
+    ratio = kv4_row["block_bytes"] / kv8_row["block_bytes"]
+    kv4_row["block_bytes_vs_kv8"] = round(ratio, 3)
+    kv4_row["resident_lanes_vs_kv8"] = round(1 / ratio, 2)
+    assert ratio <= 0.55, \
+        f"int4 arena should be <= 0.55x the int8 block bytes, got {ratio}"
+    # drift, quantified in-bench: int4 is lossy vs int8 by construction
+    matched = sum(1 for a, b in zip(outs[4], outs[8])
+                  for t4, t8 in zip(a, b) if t4 == t8)
+    total = sum(min(len(a), len(b)) for a, b in zip(outs[4], outs[8]))
+    kv4_row["greedy_match_vs_kv8"] = round(matched / max(total, 1), 3)
+    kv4_row["requests_identical_vs_kv8"] = sum(
+        1 for a, b in zip(outs[4], outs[8]) if a == b)
     return rows
 
 

@@ -20,10 +20,16 @@ turns that artifact into a *deployable* fixed-point program (paper eq. 3-5):
     rows and the (tiny) norm affine at pack time, so groups are contiguous
     lane-aligned spans at runtime.
 
+Sub-8-bit weight payloads (paper Tables 5-7): a 4-bit policy packs two int4
+rows per int8 byte (``{"q4": int8 (K/2, N), "s", "colsum"}`` — see
+repro.kernels.nibble) and the matmul kernels unpack to int8 in VMEM, so the
+MXU path is unchanged while HBM weight reads halve.
+
 Models dispatch on ``is_packed(weight)`` / ``isinstance(x, QTensor)``; sites
 whose calibration is missing or whose grouping the kernels cannot express
-(non-uniform groups, non-8-bit, per-channel hidden scales) simply stay on the
-fake-quant path — deployment degrades gracefully site by site.
+(non-uniform groups, non-4/8-bit, odd-K 4-bit, per-channel hidden scales)
+simply stay on the fake-quant path — deployment degrades gracefully site by
+site.
 """
 from __future__ import annotations
 
@@ -38,6 +44,7 @@ from repro.core.quant_config import (Granularity, QuantizationPolicy,
                                      QuantizerConfig)
 from repro.core.quantizer import QuantParams
 from repro.core.range_estimation import estimate_weight_params
+from repro.kernels import nibble
 from repro.kernels import ops
 from repro.kernels import ref as kref
 
@@ -98,14 +105,20 @@ class KVQuant(NamedTuple):
 
 
 def kv_quant_for(act_state, policy: QuantizationPolicy, attn_prefix: str,
-                 num_kv_heads: int) -> Optional[KVQuant]:
+                 num_kv_heads: int, bits: int = 8) -> Optional[KVQuant]:
     """Per-head k/v grids from the calibrated ``{prefix}/k``/``{prefix}/v``
     sites (paper Fig. 1): per-tensor scales broadcast over heads. Returns
     None for anything else — per-channel/PEG scales span (or permute) the
     head_dim axis, not the (KV, hd) head layout, and only the per-tensor
     grid gives the exact round-trip this packing exists for. The cache then
     quantizes purely dynamically per slot (or stays bf16, per the fallback
-    rule)."""
+    rule).
+
+    ``bits=4`` derives the same grids re-estimated on the int4 range: the
+    calibrated site must itself be 4-bit for the exact-round-trip property,
+    so a 4-bit request against an 8-bit calibration returns None and the
+    cache quantizes dynamically on the [-7, 7] grid instead. Asymmetric
+    grids shift by 2^(bits-1) (uint4 -> int4 re-centering, like _SHIFT)."""
     grids = []
     for name in ("k", "v"):
         site = f"{attn_prefix}/{name}"
@@ -113,11 +126,11 @@ def kv_quant_for(act_state, policy: QuantizationPolicy, attn_prefix: str,
         if qp is None:
             return None
         cfg = policy.act_config(site)
-        if not cfg.enabled or cfg.bits != 8 or qp.group_index is not None \
+        if not cfg.enabled or cfg.bits != bits or qp.group_index is not None \
                 or jnp.size(qp.scale) != 1:
             return None
         scale = jnp.asarray(qp.scale, jnp.float32).reshape(())
-        shift = _SHIFT if cfg.qmin == 0 else 0
+        shift = 2 ** (bits - 1) if cfg.qmin == 0 else 0
         zp = jnp.asarray(qp.zero_point, jnp.float32).reshape(()) - shift
         grids.append((jnp.full((num_kv_heads,), scale),
                       jnp.full((num_kv_heads,), zp)))
@@ -126,9 +139,10 @@ def kv_quant_for(act_state, policy: QuantizationPolicy, attn_prefix: str,
 
 
 def is_packed(w) -> bool:
-    """True for a packed int8 deployment weight (vs f32 array / legacy
-    {"q", "s"} storage, which lacks the colsum payload)."""
-    return isinstance(w, dict) and "q" in w and "colsum" in w
+    """True for a packed deployment weight: int8 (``q``) or nibble-packed
+    int4 (``q4``) payload (vs f32 array / legacy {"q", "s"} storage, which
+    lacks the colsum payload)."""
+    return isinstance(w, dict) and ("q" in w or "q4" in w) and "colsum" in w
 
 
 # ---------------------------------------------------------------------------
@@ -161,13 +175,23 @@ def act_quant_for(qp: QuantParams, cfg: QuantizerConfig) -> Optional[ActQuant]:
 def pack_linear(w, wcfg: QuantizerConfig, num_groups: int,
                 perm: Optional[jnp.ndarray] = None) -> Optional[dict]:
     """Quantize one weight matrix (K, N) — or a stacked (L, K, N) — into the
-    packed int8 + scale + per-group-colsum payload. Rows are permuted first
-    when the consuming activation site uses the PEG permutation."""
-    if not wcfg.enabled or wcfg.bits != 8 or not wcfg.symmetric \
+    packed int + scale + per-group-colsum payload. Rows are permuted first
+    when the consuming activation site uses the PEG permutation.
+
+    8-bit configs emit ``{"q": int8 (K, N), ...}``; 4-bit configs emit
+    ``{"q4": int8 (K/2, N), ...}`` with two int4 rows per byte
+    (repro.kernels.nibble.pack_rows) — the colsum is always computed from
+    the UNPACKED values, and the quantization grid is exactly the
+    simulate-path fake-quant grid, so the payload round-trips bit-exactly.
+    4-bit gating: K and the PEG group size must be even (else fall back)."""
+    if not wcfg.enabled or wcfg.bits not in (4, 8) or not wcfg.symmetric \
             or wcfg.granularity != Granularity.PER_TENSOR:
         return None
     from repro.models.common import resolve_weight
     w = resolve_weight(w).astype(jnp.float32)
+    k_dim = w.shape[-2]
+    if wcfg.bits == 4 and (k_dim % 2 or (k_dim // num_groups) % 2):
+        return None
 
     def _pack_one(w2):
         if perm is not None:
@@ -177,8 +201,10 @@ def pack_linear(w, wcfg: QuantizerConfig, num_groups: int,
                         jnp.finfo(jnp.float32).tiny)
         wq = jnp.clip(jnp.round(w2 / s), wcfg.qmin,
                       wcfg.qmax).astype(jnp.int8)
-        return {"q": wq, "s": s,
-                "colsum": kref.w_colsum_groups(wq, num_groups)}
+        colsum = kref.w_colsum_groups(wq, num_groups)
+        if wcfg.bits == 4:
+            return {"q4": nibble.pack_rows(wq), "s": s, "colsum": colsum}
+        return {"q": wq, "s": s, "colsum": colsum}
 
     if w.ndim == 3:                      # stacked scan layout: per-layer pack
         return jax.vmap(_pack_one)(w)
@@ -272,6 +298,12 @@ def build_deploy(cfg, params, policy: QuantizationPolicy, act_state
                               cfg.num_kv_heads)
             if kv is not None:
                 acts[f"{prefix}/attn/kv"] = kv
+            # int4 grids under a separate site key: only present when the
+            # k/v sites were themselves calibrated at 4 bits
+            kv4 = kv_quant_for(act_state, policy, f"{prefix}/attn",
+                               cfg.num_kv_heads, bits=4)
+            if kv4 is not None:
+                acts[f"{prefix}/attn/kv4"] = kv4
         return new
 
     packed = dict(params)
@@ -328,13 +360,18 @@ def matmul(x: QTensor, packed: dict, *, bias=None, mul=None,
     if out_aq is not None:
         kw.update(out_scale=out_aq.scales[0], out_zp=out_aq.zps[0],
                   qmin=out_aq.qmin, qmax=out_aq.qmax)
+    if "q4" in packed:                   # row-packed int4 payload
+        w_q = packed["q4"]
+        kw["w_bits"] = 4
+    else:
+        w_q = packed["q"]
     g = int(x.scales.shape[0])
     if g == 1:
-        out = ops.int8_matmul(x.q, packed["q"], s_a=x.scales[0],
+        out = ops.int8_matmul(x.q, w_q, s_a=x.scales[0],
                               s_w=packed["s"], z_a=x.zps[0],
                               w_colsum=packed["colsum"][0], **kw)
     else:
-        out = ops.int8_matmul_peg(x.q, packed["q"], x.scales, x.zps,
+        out = ops.int8_matmul_peg(x.q, w_q, x.scales, x.zps,
                                   w_scale=packed["s"],
                                   w_colsum=packed["colsum"], **kw)
     if out_aq is not None:

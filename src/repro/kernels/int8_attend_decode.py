@@ -50,13 +50,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.nibble import unpack_nibbles
+
 NEG_INF = -1e30
 
 
 def _attend_decode_kernel(*refs, n_chunks: int, window: Optional[int],
                           logit_softcap: Optional[float], has_smq: bool,
                           has_smo: bool, sm_qmin: int, sm_qmax: int,
-                          smo_qmin: int, smo_qmax: int):
+                          smo_qmin: int, smo_qmax: int, kv_bits: int):
     refs = list(refs)
     smq_ref = refs.pop(0) if has_smq else None
     smo_ref = refs.pop(0) if has_smo else None
@@ -73,8 +75,14 @@ def _attend_decode_kernel(*refs, n_chunks: int, window: Optional[int],
 
     # logits for this chunk (recomputed in the second pass when two-pass)
     q = q_ref[0, 0]                                    # (G, hd) int8
-    k = k_ref[0, :, 0, :]                              # (C, hd) int8
     hd = q.shape[-1]
+    k = k_ref[0, :, 0, :]                              # (C, hd[/2]) int8
+    if kv_bits == 4:
+        # nibble extract in VMEM before the MXU q.k^T: the packed (C, hd/2)
+        # block sign-extends to the full (C, hd) int4 values; the rowsum /
+        # colsum zero-point corrections below are computed from the
+        # UNPACKED values, so they are exact on the 4-bit grid.
+        k = unpack_nibbles(k, hd)
     s32 = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.int32)
     # zero-point corrections (asymmetric q grid / static per-head k grid):
@@ -103,6 +111,12 @@ def _attend_decode_kernel(*refs, n_chunks: int, window: Optional[int],
         valid &= kp > qp - window
     s = jnp.where(valid[None, :], s, NEG_INF)
 
+    def _v():
+        v = v_ref[0, :, 0, :]
+        if kv_bits == 4:
+            v = unpack_nibbles(v, hd)
+        return v.astype(jnp.float32)
+
     @pl.when(c_idx < n_chunks)
     def _stats_pass():
         # online max / denominator (flash accumulation); in single-pass mode
@@ -120,7 +134,7 @@ def _attend_decode_kernel(*refs, n_chunks: int, window: Optional[int],
             pv = p * vs_ref[0, :, 0][None, :]
             zv = vz_ref[0, 0]
             acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
-                pv, v_ref[0, :, 0, :].astype(jnp.float32),
+                pv, _v(),
                 (((1,), (0,)), ((), ()))) - zv * jnp.sum(pv, axis=-1)[:, None]
 
     if has_smo:
@@ -138,7 +152,7 @@ def _attend_decode_kernel(*refs, n_chunks: int, window: Optional[int],
             pv = p * vs_ref[0, :, 0][None, :]
             zv = vz_ref[0, 0]
             acc_ref[...] += jax.lax.dot_general(
-                pv, v_ref[0, :, 0, :].astype(jnp.float32),
+                pv, _v(),
                 (((1,), (0,)), ((), ()))) - zv * jnp.sum(pv, axis=-1)[:, None]
 
         @pl.when(c_idx == 2 * n_chunks - 1)
@@ -163,8 +177,8 @@ def int8_attend_decode(q_q: jnp.ndarray, q_scale: jnp.ndarray,
                        sm_qmin: int = 0, sm_qmax: int = 255,
                        smo_quant: Optional[jnp.ndarray] = None,
                        smo_qmin: int = 0, smo_qmax: int = 255,
-                       chunk: int = 256, interpret: bool = False
-                       ) -> jnp.ndarray:
+                       chunk: int = 256, kv_bits: int = 8,
+                       interpret: bool = False) -> jnp.ndarray:
     """One decode step of attention against an int8 KV cache.
 
     q_q: (B, KV, G, hd) int8 queries, grouped per kv head (GQA);
@@ -180,10 +194,18 @@ def int8_attend_decode(q_q: jnp.ndarray, q_scale: jnp.ndarray,
     slot); q_pos: (B,) query positions. sm_quant / smo_quant: optional (2,) f32 [scale, zero_point]
     for the in-kernel ``softmax_in`` / ``softmax_out`` fake-quant on their
     [qmin, qmax] grids (softmax_out switches to the two-pass schedule).
-    Returns (B, KV, G, hd) f32. S must be a multiple of ``chunk`` (the ops
-    wrapper pads with k_pos = -1 slots).
+    ``kv_bits=4`` reads a nibble-packed cache — k_q/v_q (B, S, KV, hd//2)
+    int8 with two int4 cells per byte (split-half layout) — and unpacks
+    each chunk in VMEM before the MXU q.k^T; scales/zero-points keep their
+    8-bit shapes. Returns (B, KV, G, hd) f32. S must be a multiple of
+    ``chunk`` (the ops wrapper pads with k_pos = -1 slots).
     """
     b, kv, g, hd = q_q.shape
+    hd_kv = hd
+    if kv_bits == 4:
+        assert hd % 2 == 0, f"kv_bits=4 needs an even head_dim, got {hd}"
+        hd_kv = hd // 2
+    assert k_q.shape[-1] == hd_kv, (k_q.shape, hd_kv)
     s_len = k_q.shape[1]
     c = min(chunk, s_len)
     assert s_len % c == 0, f"S={s_len} not a multiple of chunk={c}"
@@ -219,10 +241,10 @@ def int8_attend_decode(q_q: jnp.ndarray, q_scale: jnp.ndarray,
         pl.BlockSpec((1, 1, g), lambda i, j, kk: (i, j, 0)),           # q_z
         pl.BlockSpec((1, 1), lambda i, j, kk: (i, j)),                 # k_z
         pl.BlockSpec((1, 1), lambda i, j, kk: (i, j)),                 # v_z
-        pl.BlockSpec((1, c, 1, hd),
+        pl.BlockSpec((1, c, 1, hd_kv),
                      lambda i, j, kk: (i, ck(kk), j, 0)),              # k_q
         pl.BlockSpec((1, c, 1), lambda i, j, kk: (i, ck(kk), j)),      # k_s
-        pl.BlockSpec((1, c, 1, hd),
+        pl.BlockSpec((1, c, 1, hd_kv),
                      lambda i, j, kk: (i, cv(kk), j, 0)),              # v_q
         pl.BlockSpec((1, c, 1), lambda i, j, kk: (i, cv(kk), j)),      # v_s
         pl.BlockSpec((1, c), lambda i, j, kk: (i, ck(kk))),            # k_pos
@@ -233,7 +255,7 @@ def int8_attend_decode(q_q: jnp.ndarray, q_scale: jnp.ndarray,
         _attend_decode_kernel, n_chunks=n_chunks, window=window,
         logit_softcap=logit_softcap, has_smq=has_smq, has_smo=has_smo,
         sm_qmin=sm_qmin, sm_qmax=sm_qmax, smo_qmin=smo_qmin,
-        smo_qmax=smo_qmax)
+        smo_qmax=smo_qmax, kv_bits=kv_bits)
     return pl.pallas_call(
         kernel,
         out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), jnp.float32),

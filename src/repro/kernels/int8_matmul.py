@@ -42,6 +42,7 @@ from jax.experimental.pallas import tpu as pltpu
 # Epilogue activations: the model-side table plus identity, shared so the
 # DEPLOY epilogue can never diverge from the simulate-path activations.
 from repro.models.common import ACTIVATIONS as _MODEL_ACTS
+from repro.kernels.nibble import unpack_rows as _unpack_rows
 
 EPILOGUE_ACTS = {"none": lambda x: x, **_MODEL_ACTS}
 
@@ -75,7 +76,8 @@ def _epilogue(f, refs, *, activation: str, has_bias: bool, has_mul: bool,
 
 def _int8_matmul_kernel(s_ref, za_ref, *rest, n_k: int, activation: str,
                         has_zp: bool, has_bias: bool, has_mul: bool,
-                        requant: bool, qmin: int, qmax: int):
+                        requant: bool, qmin: int, qmax: int,
+                        w_bits: int = 8):
     refs = {}
     rest = list(rest)
     if has_zp:
@@ -94,8 +96,14 @@ def _int8_matmul_kernel(s_ref, za_ref, *rest, n_k: int, activation: str,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    w = w_ref[...]
+    if w_bits == 4:
+        # unpack-to-int8 prologue: (bk/2, bn) row-packed nibbles -> (bk, bn)
+        # in VMEM, so the MXU path below is byte-identical to the 8-bit one
+        # while the HBM weight read halves.
+        w = _unpack_rows(w)
     acc_ref[...] += jax.lax.dot_general(
-        a_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        a_ref[...], w, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32)
 
     @pl.when(k_idx == n_k - 1)
@@ -118,18 +126,26 @@ def int8_matmul(a_q: jnp.ndarray, w_q: jnp.ndarray, s_a, s_w, *,
                 qmin: int = -128, qmax: int = 127,
                 out_dtype=jnp.float32, block_m: int = 256,
                 block_n: int = 256, block_k: int = 512,
-                interpret: bool = False) -> jnp.ndarray:
+                w_bits: int = 8, interpret: bool = False) -> jnp.ndarray:
     """Per-tensor path (paper eq. 3) with fused epilogue.
 
     a_q: (M, K) int8, w_q: (K, N) int8; s_a/s_w traced scalars.
-    z_a + w_colsum (N,): asymmetric-activation zero-point correction.
+    z_a + w_colsum (N,): asymmetric-activation zero-point correction
+    (for w_bits=4 the colsum must come from the UNPACKED int4 values).
     bias (N,), mul (M, N) f32, activation, out_scale/out_zp: the epilogue.
     When out_scale is given the output is int8 on the [qmin, qmax] grid.
+    ``w_bits=4``: w_q is (K/2, N) pairwise-row-packed nibbles
+    (repro.kernels.nibble.pack_rows); a packed k-block [a, b) is exactly
+    original rows [2a, 2b), so the K grid walks packed rows directly.
     """
     m, k = a_q.shape
     _, n = w_q.shape
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    if w_bits == 4:
+        assert bk % 2 == 0, f"w_bits=4 needs even block_k, got {bk}"
+        assert w_q.shape[0] == k // 2, (
+            f"packed w rows {w_q.shape[0]} != K/2 = {k // 2}")
 
     has_zp = w_colsum is not None
     has_bias = bias is not None
@@ -160,14 +176,15 @@ def int8_matmul(a_q: jnp.ndarray, w_q: jnp.ndarray, s_a, s_w, *,
                                       jnp.float32).reshape(())])
         operands.append(outq)
         in_specs.append(pl.BlockSpec((2,), lambda i, j, kk: (0,)))
+    bkw = bk // 2 if w_bits == 4 else bk
     operands += [a_q, w_q]
     in_specs += [pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-                 pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))]
+                 pl.BlockSpec((bkw, bn), lambda i, j, kk: (kk, j))]
 
     kernel = functools.partial(
         _int8_matmul_kernel, n_k=k // bk, activation=activation,
         has_zp=has_zp, has_bias=has_bias, has_mul=has_mul, requant=requant,
-        qmin=qmin, qmax=qmax)
+        qmin=qmin, qmax=qmax, w_bits=w_bits)
     return pl.pallas_call(
         kernel,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
@@ -186,7 +203,7 @@ def int8_matmul(a_q: jnp.ndarray, w_q: jnp.ndarray, s_a, s_w, *,
 def _int8_matmul_peg_kernel(sw_ref, sa_ref, za_ref, wcs_ref, *rest,
                             n_k: int, activation: str, has_bias: bool,
                             has_mul: bool, requant: bool, qmin: int,
-                            qmax: int):
+                            qmax: int, w_bits: int = 8):
     refs = {}
     rest = list(rest)
     if has_bias:
@@ -203,7 +220,12 @@ def _int8_matmul_peg_kernel(sw_ref, sa_ref, za_ref, wcs_ref, *rest,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    part = jax.lax.dot_general(a_ref[...], w_ref[...],
+    w = w_ref[...]
+    if w_bits == 4:
+        # unpack-to-int8 prologue (see _int8_matmul_kernel); PEG group
+        # boundaries stay row-aligned because the group size is even.
+        w = _unpack_rows(w)
+    part = jax.lax.dot_general(a_ref[...], w,
                                (((1,), (0,)), ((), ())),
                                preferred_element_type=jnp.int32)
     s_g = sa_ref[0]
@@ -228,18 +250,22 @@ def int8_matmul_peg(a_q: jnp.ndarray, w_q: jnp.ndarray,
                     out_scale=None, out_zp=None,
                     qmin: int = -128, qmax: int = 127,
                     out_dtype=jnp.float32, block_m: int = 256,
-                    block_n: int = 256, interpret: bool = False
-                    ) -> jnp.ndarray:
+                    block_n: int = 256, w_bits: int = 8,
+                    interpret: bool = False) -> jnp.ndarray:
     """a_q: (M, K) int8 group-sorted; w_q: (K, N) int8; act_scales/zps: (G,);
-    w_colsum_g: (G, N) int32 = per-group column sums of w_q; w_scale traced
-    scalar. K % G == 0 and group_size = K // G (the k-block). Epilogue args
-    as in :func:`int8_matmul`."""
+    w_colsum_g: (G, N) int32 = per-group column sums of w_q (always from the
+    UNPACKED values); w_scale traced scalar. K % G == 0 and group_size =
+    K // G (the k-block). ``w_bits=4``: w_q is (K/2, N) row-packed nibbles;
+    needs an even group size so group boundaries stay byte-aligned.
+    Epilogue args as in :func:`int8_matmul`."""
     m, k = a_q.shape
     k2, n = w_q.shape
-    assert k == k2
+    assert k == (2 * k2 if w_bits == 4 else k2)
     g = act_scales.shape[0]
     assert k % g == 0
     bk = k // g
+    if w_bits == 4:
+        assert bk % 2 == 0, f"w_bits=4 needs even PEG group size, got {bk}"
     bm, bn = min(block_m, m), min(block_n, n)
     assert m % bm == 0 and n % bn == 0
 
@@ -269,14 +295,15 @@ def int8_matmul_peg(a_q: jnp.ndarray, w_q: jnp.ndarray,
                                       jnp.float32).reshape(())])
         operands.append(outq)
         in_specs.append(pl.BlockSpec((2,), lambda i, j, kk: (0,)))
+    bkw = bk // 2 if w_bits == 4 else bk
     operands += [a_q, w_q]
     in_specs += [pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-                 pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))]
+                 pl.BlockSpec((bkw, bn), lambda i, j, kk: (kk, j))]
 
     kernel = functools.partial(
         _int8_matmul_peg_kernel, n_k=g, activation=activation,
         has_bias=has_bias, has_mul=has_mul, requant=requant,
-        qmin=qmin, qmax=qmax)
+        qmin=qmin, qmax=qmax, w_bits=w_bits)
     return pl.pallas_call(
         kernel,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),

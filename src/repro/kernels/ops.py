@@ -87,18 +87,24 @@ def peg_quantize(x, scales, zps, *, qmin: int = 0, qmax: int = 255,
 
 @functools.partial(jax.jit, static_argnames=("activation", "qmin", "qmax",
                                              "block_m", "block_n", "block_k",
-                                             "interpret"))
+                                             "w_bits", "interpret"))
 def int8_matmul(a_q, w_q, *, s_a, s_w, z_a=None, w_colsum=None, bias=None,
                 mul=None, activation: str = "none", out_scale=None,
                 out_zp=None, qmin: int = -128, qmax: int = 127,
                 block_m: int = 256, block_n: int = 256, block_k: int = 512,
-                interpret: Optional[bool] = None):
+                w_bits: int = 8, interpret: Optional[bool] = None):
     """Per-tensor int8 matmul (+ fused epilogue) over (..., K) activations.
 
     s_a/s_w (and the optional z_a/out_scale/out_zp) are traced scalars.
     z_a requires w_colsum (N,) = colsum(w_q) for the zero-point correction.
+    ``w_bits=4``: w_q is (K/2, N) pairwise-row-packed nibbles (see
+    repro.kernels.nibble) and w_colsum must be supplied pre-computed from
+    the unpacked int4 values — summing the packed bytes would be wrong.
     """
     if z_a is not None and w_colsum is None:
+        if w_bits == 4:
+            raise ValueError("w_bits=4 with z_a requires explicit w_colsum "
+                             "(colsum over packed bytes is meaningless)")
         w_colsum = jnp.sum(w_q.astype(jnp.int32), axis=0)
     a2, lead, m = _flatten_rows(a_q, block_m)
     mul2 = None
@@ -108,23 +114,28 @@ def int8_matmul(a_q, w_q, *, s_a, s_w, z_a=None, w_colsum=None, bias=None,
                            bias=bias, mul=mul2, activation=activation,
                            out_scale=out_scale, out_zp=out_zp, qmin=qmin,
                            qmax=qmax, block_m=block_m, block_n=block_n,
-                           block_k=block_k, interpret=_interp(interpret))
+                           block_k=block_k, w_bits=w_bits,
+                           interpret=_interp(interpret))
     return _unflatten_rows(out, lead, m)
 
 
 @functools.partial(jax.jit, static_argnames=("activation", "qmin", "qmax",
-                                             "block_m", "block_n",
+                                             "block_m", "block_n", "w_bits",
                                              "interpret"))
 def int8_matmul_peg(a_q, w_q, act_scales, act_zps, *, w_scale,
                     w_colsum=None, bias=None, mul=None,
                     activation: str = "none", out_scale=None, out_zp=None,
                     qmin: int = -128, qmax: int = 127, block_m: int = 256,
-                    block_n: int = 256, interpret: Optional[bool] = None):
+                    block_n: int = 256, w_bits: int = 8,
+                    interpret: Optional[bool] = None):
     """PEG fixed-point matmul: K re-scalings fused into the MXU k-loop.
     Computes the zero-point correction internally unless ``w_colsum`` (G, N)
-    is supplied (deployment pre-packs it next to the int8 weights)."""
+    is supplied (deployment pre-packs it next to the int8 weights).
+    ``w_bits=4``: w_q is (K/2, N) row-packed nibbles; w_colsum required."""
     g = act_scales.shape[0]
     if w_colsum is None:
+        if w_bits == 4:
+            raise ValueError("w_bits=4 requires explicit w_colsum")
         w_colsum = _ref.w_colsum_groups(w_q, g)
     a2, lead, m = _flatten_rows(a_q, block_m)
     mul2 = None
@@ -135,7 +146,7 @@ def int8_matmul_peg(a_q, w_q, act_scales, act_zps, *, w_scale,
                                activation=activation, out_scale=out_scale,
                                out_zp=out_zp, qmin=qmin, qmax=qmax,
                                block_m=block_m, block_n=block_n,
-                               interpret=_interp(interpret))
+                               w_bits=w_bits, interpret=_interp(interpret))
     return _unflatten_rows(out, lead, m)
 
 
@@ -146,14 +157,15 @@ def int8_matmul_peg(a_q, w_q, act_scales, act_zps, *, w_scale,
 @functools.partial(jax.jit, static_argnames=("window", "logit_softcap",
                                              "sm_qmin", "sm_qmax",
                                              "smo_qmin", "smo_qmax", "chunk",
-                                             "interpret"))
+                                             "kv_bits", "interpret"))
 def int8_attend_decode(q_q, q_scale, k_q, k_scale, v_q, v_scale, k_pos,
                        q_pos, *, q_zp=None, k_zp=None, v_zp=None,
                        window: Optional[int] = None,
                        logit_softcap: Optional[float] = None,
                        sm_quant=None, sm_qmin: int = 0, sm_qmax: int = 255,
                        smo_quant=None, smo_qmin: int = 0, smo_qmax: int = 255,
-                       chunk: int = 256, interpret: Optional[bool] = None):
+                       chunk: int = 256, kv_bits: int = 8,
+                       interpret: Optional[bool] = None):
     """Decode attention over an int8 KV cache (see int8_attend_decode.py).
 
     q_q (B, KV, G, hd) int8; q_scale (B, KV, G) f32 (attention scale folded
@@ -163,6 +175,8 @@ def int8_attend_decode(q_q, q_scale, k_q, k_scale, v_q, v_scale, k_pos,
     ``sm_quant``/``smo_quant``: optional (2,) [scale, zp] — the traced
     softmax_in / softmax_out fake-quants (the latter selects the two-pass
     schedule). Ragged S is padded to the chunk size with empty slots.
+    ``kv_bits=4``: k_q/v_q are split-half nibble-packed (B, S, KV, hd/2)
+    payloads, unpacked in VMEM inside the kernel.
     Returns (B, KV, G, hd) f32.
     """
     if q_zp is None:
@@ -186,7 +200,7 @@ def int8_attend_decode(q_q, q_scale, k_q, k_scale, v_q, v_scale, k_pos,
         q_pos,
         window=window, logit_softcap=logit_softcap, sm_quant=sm_quant,
         sm_qmin=sm_qmin, sm_qmax=sm_qmax, smo_quant=smo_quant,
-        smo_qmin=smo_qmin, smo_qmax=smo_qmax, chunk=c,
+        smo_qmin=smo_qmin, smo_qmax=smo_qmax, chunk=c, kv_bits=kv_bits,
         interpret=_interp(interpret))
 
 
@@ -232,7 +246,8 @@ def paged_attend_decode(q, k_arena, v_arena, block_table, q_pos, *,
 @functools.partial(jax.jit, static_argnames=("s_cap", "window",
                                              "logit_softcap", "sm_qmin",
                                              "sm_qmax", "smo_qmin",
-                                             "smo_qmax", "interpret"))
+                                             "smo_qmax", "kv_bits",
+                                             "interpret"))
 def paged_int8_attend_decode(q_q, q_scale, k_arena, k_scale, v_arena,
                              v_scale, block_table, q_pos, *, s_cap: int,
                              q_zp=None, k_zp=None, v_zp=None,
@@ -241,10 +256,12 @@ def paged_int8_attend_decode(q_q, q_scale, k_arena, k_scale, v_arena,
                              sm_quant=None, sm_qmin: int = 0,
                              sm_qmax: int = 255, smo_quant=None,
                              smo_qmin: int = 0, smo_qmax: int = 255,
+                             kv_bits: int = 8,
                              interpret: Optional[bool] = None):
     """Decode attention over a paged int8 KV cache — the paged twin of
     :func:`int8_attend_decode` (same zero-point handling; scales traced).
     k_arena/v_arena (N, bs, KV, hd) int8; k_scale/v_scale (N, bs, KV) f32.
+    ``kv_bits=4``: arenas are split-half nibble-packed (N, bs, KV, hd/2).
     Returns (B, KV, G, hd) f32.
     """
     if q_zp is None:
@@ -259,7 +276,7 @@ def paged_int8_attend_decode(q_q, q_scale, k_arena, k_scale, v_arena,
         s_cap=s_cap, window=window, logit_softcap=logit_softcap,
         sm_quant=sm_quant, sm_qmin=sm_qmin, sm_qmax=sm_qmax,
         smo_quant=smo_quant, smo_qmin=smo_qmin, smo_qmax=smo_qmax,
-        interpret=_interp(interpret))
+        kv_bits=kv_bits, interpret=_interp(interpret))
 
 
 # ---------------------------------------------------------------------------

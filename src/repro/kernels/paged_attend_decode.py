@@ -40,13 +40,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.nibble import unpack_nibbles
+
 NEG_INF = -1e30
 
 
 def _paged_kernel(*refs, nb: int, bs: int, s_cap: int,
                   window: Optional[int], logit_softcap: Optional[float],
                   quantized: bool, has_smq: bool, has_smo: bool,
-                  sm_qmin: int, sm_qmax: int, smo_qmin: int, smo_qmax: int):
+                  sm_qmin: int, sm_qmax: int, smo_qmin: int, smo_qmax: int,
+                  kv_bits: int = 8):
     refs = list(refs)
     tbl_ref = refs.pop(0)                   # (B, nb) scalar-prefetch
     qp_ref = refs.pop(0)                    # (B,)   scalar-prefetch
@@ -69,10 +72,14 @@ def _paged_kernel(*refs, nb: int, bs: int, s_cap: int,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # logits for this block (recomputed in the second pass when two-pass)
-    k = k_ref[0, :, 0, :]                              # (bs, hd)
+    k = k_ref[0, :, 0, :]                              # (bs, hd[/2])
     if quantized:
         q = q_ref[0, 0]                                # (G, hd) int8
         hd = q.shape[-1]
+        if kv_bits == 4:
+            # nibble extract in VMEM before the MXU q.k^T; the rowsum /
+            # colsum corrections below see the unpacked int4 values
+            k = unpack_nibbles(k, hd)
         s32 = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                   preferred_element_type=jnp.int32)
         # zero-point corrections, identical to int8_attend_decode:
@@ -114,7 +121,10 @@ def _paged_kernel(*refs, nb: int, bs: int, s_cap: int,
     def _pv(pmat):
         """p @ V with the variant's dequant: per-slot v scales + static
         zero-point row correction for int8, plain f32 for bf16."""
-        vblk = v_ref[0, :, 0, :].astype(jnp.float32)
+        vblk = v_ref[0, :, 0, :]
+        if quantized and kv_bits == 4:
+            vblk = unpack_nibbles(vblk, q_ref.shape[-1])
+        vblk = vblk.astype(jnp.float32)
         if quantized:
             pv = pmat * vs_ref[0, :, 0][None, :]
             zv = vz_ref[0, 0]
@@ -160,7 +170,7 @@ def _paged_kernel(*refs, nb: int, bs: int, s_cap: int,
 def _paged_call(kernel_operands, in_specs, *, b, kv, g, hd, nb, bs, s_cap,
                 window, logit_softcap, quantized, sm_quant, smo_quant,
                 sm_qmin, sm_qmax, smo_qmin, smo_qmax, block_table, q_pos,
-                interpret):
+                kv_bits=8, interpret=False):
     has_smq = sm_quant is not None
     has_smo = smo_quant is not None
     n_steps = 2 * nb if has_smo else nb
@@ -178,7 +188,7 @@ def _paged_call(kernel_operands, in_specs, *, b, kv, g, hd, nb, bs, s_cap,
         _paged_kernel, nb=nb, bs=bs, s_cap=s_cap, window=window,
         logit_softcap=logit_softcap, quantized=quantized, has_smq=has_smq,
         has_smo=has_smo, sm_qmin=sm_qmin, sm_qmax=sm_qmax,
-        smo_qmin=smo_qmin, smo_qmax=smo_qmax)
+        smo_qmin=smo_qmin, smo_qmax=smo_qmax, kv_bits=kv_bits)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, kv, n_steps),
@@ -270,6 +280,7 @@ def paged_int8_attend_decode(q_q: jnp.ndarray, q_scale: jnp.ndarray,
                              sm_qmin: int = 0, sm_qmax: int = 255,
                              smo_quant: Optional[jnp.ndarray] = None,
                              smo_qmin: int = 0, smo_qmax: int = 255,
+                             kv_bits: int = 8,
                              interpret: bool = False) -> jnp.ndarray:
     """One decode step over a paged int8 KV cache (the paged twin of
     :func:`repro.kernels.int8_attend_decode.int8_attend_decode`).
@@ -279,9 +290,17 @@ def paged_int8_attend_decode(q_q: jnp.ndarray, q_scale: jnp.ndarray,
     scalars); k_zp/v_zp: (B, KV) f32 static per-head cache-grid zero-points;
     k_arena/v_arena: (N, bs, KV, hd) int8 arenas; k_scale/v_scale:
     (N, bs, KV) f32 per-head per-cell scales; block_table/q_pos as in
-    :func:`paged_attend_decode`. Returns (B, KV, G, hd) f32.
+    :func:`paged_attend_decode`. With ``kv_bits=4`` the arenas hold
+    split-half nibble-packed payloads (N, bs, KV, hd/2), unpacked in VMEM
+    per block. Returns (B, KV, G, hd) f32.
     """
     b, kv, g, hd = q_q.shape
+    hd_kv = hd
+    if kv_bits == 4:
+        assert hd % 2 == 0, f"kv_bits=4 needs even head_dim, got {hd}"
+        hd_kv = hd // 2
+        assert k_arena.shape[-1] == hd_kv, (
+            f"packed arena last dim {k_arena.shape[-1]} != hd/2 = {hd_kv}")
     bs = k_arena.shape[1]
     nb = block_table.shape[1]
     assert nb * bs >= s_cap, f"table covers {nb * bs} < s_cap={s_cap}"
@@ -297,9 +316,9 @@ def paged_int8_attend_decode(q_q: jnp.ndarray, q_scale: jnp.ndarray,
         pl.BlockSpec((1, 1, g), lambda i, j, kk, tbl, qp: (i, j, 0)),  # q_z
         pl.BlockSpec((1, 1), lambda i, j, kk, tbl, qp: (i, j)),        # k_z
         pl.BlockSpec((1, 1), lambda i, j, kk, tbl, qp: (i, j)),        # v_z
-        pl.BlockSpec((1, bs, 1, hd), k_map),                       # k arena
+        pl.BlockSpec((1, bs, 1, hd_kv), k_map),                    # k arena
         pl.BlockSpec((1, bs, 1), ks_map),                          # k scales
-        pl.BlockSpec((1, bs, 1, hd), v_map),                       # v arena
+        pl.BlockSpec((1, bs, 1, hd_kv), v_map),                    # v arena
         pl.BlockSpec((1, bs, 1), vs_map),                          # v scales
     ]
     return _paged_call(
@@ -308,4 +327,4 @@ def paged_int8_attend_decode(q_q: jnp.ndarray, q_scale: jnp.ndarray,
         quantized=True, sm_quant=sm_quant, smo_quant=smo_quant,
         sm_qmin=sm_qmin, sm_qmax=sm_qmax, smo_qmin=smo_qmin,
         smo_qmax=smo_qmax, block_table=block_table, q_pos=q_pos,
-        interpret=interpret)
+        kv_bits=kv_bits, interpret=interpret)

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.int8_matmul import EPILOGUE_ACTS as _ACTS
+from repro.kernels.nibble import unpack_nibbles as _unpack_nibbles
 
 
 def _expand_groups(v, d):
@@ -99,14 +100,21 @@ def int8_attend_decode_ref(q_q, q_scale, k_q, k_scale, v_q, v_scale, k_pos,
                            q_pos, *, q_zp=None, k_zp=None, v_zp=None,
                            window=None, logit_softcap=None,
                            sm_quant=None, sm_qmin=0, sm_qmax=255,
-                           smo_quant=None, smo_qmin=0, smo_qmax=255):
+                           smo_quant=None, smo_qmin=0, smo_qmax=255,
+                           kv_bits=8):
     """Dequantize-then-attend oracle for the int8 KV decode kernel.
 
     Shapes as in :func:`repro.kernels.int8_attend_decode.int8_attend_decode`:
     q_q (B, KV, G, hd), k_q/v_q (B, S, KV, hd), scales per head(-slot),
     q_zp optional (B, KV, G), k_zp/v_zp optional (B, KV), k_pos (B, S),
-    q_pos (B,). Returns (B, KV, G, hd) f32.
+    q_pos (B,). ``kv_bits=4``: k_q/v_q are split-half nibble-packed
+    (B, S, KV, hd/2) payloads, unpacked here before the math.
+    Returns (B, KV, G, hd) f32.
     """
+    if kv_bits == 4:
+        hd = q_q.shape[-1]
+        k_q = _unpack_nibbles(k_q, hd)
+        v_q = _unpack_nibbles(v_q, hd)
     qh = q_q.astype(jnp.float32)
     if q_zp is not None:
         qh = qh - q_zp.astype(jnp.float32)[..., None]
@@ -208,10 +216,13 @@ def paged_int8_attend_decode_ref(q_q, q_scale, k_arena, k_scale, v_arena,
                                  q_zp=None, k_zp=None, v_zp=None,
                                  window=None, logit_softcap=None,
                                  sm_quant=None, sm_qmin=0, sm_qmax=255,
-                                 smo_quant=None, smo_qmin=0, smo_qmax=255):
+                                 smo_quant=None, smo_qmin=0, smo_qmax=255,
+                                 kv_bits=8):
     """Gather-then-dequantize oracle for the paged int8 decode kernel:
     delegates the attention math to :func:`int8_attend_decode_ref` over the
-    dense per-lane view + derived positions."""
+    dense per-lane view + derived positions (the block gather is
+    layout-agnostic, so packed nibble arenas gather unchanged and the dense
+    oracle unpacks them)."""
     bs = k_arena.shape[1]
     kp = paged_positions_ref(block_table, q_pos, s_cap=s_cap,
                              block_size=bs)
@@ -224,7 +235,7 @@ def paged_int8_attend_decode_ref(q_q, q_scale, k_arena, k_scale, v_arena,
         kp, q_pos, q_zp=q_zp, k_zp=k_zp, v_zp=v_zp, window=window,
         logit_softcap=logit_softcap, sm_quant=sm_quant, sm_qmin=sm_qmin,
         sm_qmax=sm_qmax, smo_quant=smo_quant, smo_qmin=smo_qmin,
-        smo_qmax=smo_qmax)
+        smo_qmax=smo_qmax, kv_bits=kv_bits)
 
 
 def ln_fake_quant_ref(x, gamma, beta, scale, zp, *, qmin, qmax, eps=1e-6):

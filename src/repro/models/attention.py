@@ -99,6 +99,24 @@ class PagedQuantKVCache(NamedTuple):
     pos: jnp.ndarray
 
 
+class Quant4KVCache(QuantKVCache):
+    """Packed int4 KV cache: same fields and scale layout as
+    :class:`QuantKVCache` but k_q/v_q hold two int4 cells per byte —
+    (B, S, KV, hd/2) split-half nibble payloads (repro.kernels.nibble).
+    The TYPE is the bit-width marker: every isinstance check on the int8
+    base class still applies (write/reset/reads), and the decode paths
+    select ``kv_bits=4`` kernels plus the int4 quantizer by this subclass.
+    JAX tree ops rebuild namedtuples as ``type(x)(*children)``, so the
+    marker survives jit/scan/donation."""
+
+
+class PagedQuant4KVCache(PagedQuantKVCache):
+    """Paged packed int4 KV cache: :class:`Quant4KVCache` payloads over the
+    shared block arena — k_q/v_q (N, bs, KV, hd/2) nibble-packed int8,
+    k_s/v_s (N, bs, KV) f32, pos (N, bs). Halves arena HBM per block, so a
+    pool of the same byte budget holds ~2x the resident decode lanes."""
+
+
 def init_kv_cache(batch: int, max_len: int, cfg: AttnConfig,
                   dtype=jnp.bfloat16) -> KVCache:
     size = min(max_len, cfg.window) if cfg.window else max_len
@@ -135,6 +153,31 @@ def init_paged_quant_kv_cache(num_blocks: int, block_size: int,
     return PagedQuantKVCache(
         k_q=jnp.zeros((num_blocks, block_size, kv, hd), jnp.int8),
         v_q=jnp.zeros((num_blocks, block_size, kv, hd), jnp.int8),
+        k_s=jnp.zeros((num_blocks, block_size, kv), jnp.float32),
+        v_s=jnp.zeros((num_blocks, block_size, kv), jnp.float32),
+        pos=jnp.full((num_blocks, block_size), -1, jnp.int32))
+
+
+def init_quant4_kv_cache(batch: int, max_len: int,
+                         cfg: AttnConfig) -> Quant4KVCache:
+    size = min(max_len, cfg.window) if cfg.window else max_len
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    assert hd % 2 == 0, f"int4 KV cache needs even head_dim, got {hd}"
+    return Quant4KVCache(
+        k_q=jnp.zeros((batch, size, kv, hd // 2), jnp.int8),
+        v_q=jnp.zeros((batch, size, kv, hd // 2), jnp.int8),
+        k_s=jnp.zeros((batch, size, kv), jnp.float32),
+        v_s=jnp.zeros((batch, size, kv), jnp.float32),
+        pos=jnp.full((batch, size), -1, jnp.int32))
+
+
+def init_paged_quant4_kv_cache(num_blocks: int, block_size: int,
+                               cfg: AttnConfig) -> PagedQuant4KVCache:
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    assert hd % 2 == 0, f"int4 KV cache needs even head_dim, got {hd}"
+    return PagedQuant4KVCache(
+        k_q=jnp.zeros((num_blocks, block_size, kv, hd // 2), jnp.int8),
+        v_q=jnp.zeros((num_blocks, block_size, kv, hd // 2), jnp.int8),
         k_s=jnp.zeros((num_blocks, block_size, kv), jnp.float32),
         v_s=jnp.zeros((num_blocks, block_size, kv), jnp.float32),
         pos=jnp.full((num_blocks, block_size), -1, jnp.int32))
@@ -178,12 +221,43 @@ def quantize_kv(x, grid_scale=None, zero_point=None):
     return q, s
 
 
+def quantize_kv4(x, grid_scale=None, zero_point=None):
+    """Per-head int4 quantization + split-half nibble pack: the 4-bit twin
+    of :func:`quantize_kv`. Calibrated grids (from deploy.kv_quant_for with
+    bits=4, zero-point already shifted onto the int4 grid) clip to [-8, 7];
+    dynamic symmetric uses amax/7 on [-7, 7]. Returns
+    (packed int8 (..., hd/2), scale f32 x.shape[:-1])."""
+    from repro.kernels.nibble import pack_nibbles
+    xf = x.astype(jnp.float32)
+    if zero_point is not None:
+        s = jnp.broadcast_to(jnp.asarray(grid_scale, jnp.float32),
+                             xf.shape[:-1])
+        z = jnp.asarray(zero_point, jnp.float32)
+        q = jnp.clip(jnp.round(xf / s[..., None]) + z[..., None],
+                     -8, 7).astype(jnp.int8)
+        return pack_nibbles(q), s
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    s = amax / 7.0
+    if grid_scale is not None:
+        s = jnp.maximum(s, jnp.asarray(grid_scale, jnp.float32))
+    s = jnp.maximum(s, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(xf / s[..., None]), -7, 7).astype(jnp.int8)
+    return pack_nibbles(q), s
+
+
 def dequantize_kv(cache: QuantKVCache, kvq=None):
     """(k, v) f32 views of a quantized cache (the fallback read path).
     ``kvq``: the deploy.KVQuant whose static zero-points the cache was
-    written with (None = symmetric dynamic writes)."""
-    kq = cache.k_q.astype(jnp.float32)
-    vq = cache.v_q.astype(jnp.float32)
+    written with (None = symmetric dynamic writes). Packed int4 caches
+    unpack their nibbles first (hd = 2 * stored payload width)."""
+    kq, vq = cache.k_q, cache.v_q
+    if isinstance(cache, Quant4KVCache):
+        from repro.kernels.nibble import unpack_nibbles
+        hd = 2 * kq.shape[-1]
+        kq = unpack_nibbles(kq, hd)
+        vq = unpack_nibbles(vq, hd)
+    kq = kq.astype(jnp.float32)
+    vq = vq.astype(jnp.float32)
     if kvq is not None:
         kq = kq - jnp.asarray(kvq.k_zp, jnp.float32)[..., None]
         vq = vq - jnp.asarray(kvq.v_zp, jnp.float32)[..., None]
@@ -349,19 +423,31 @@ def _write_slots(pw, S, window):
     return jnp.where(pw >= 0, base, S)
 
 
+def _quantize_kv_writes(cache, k_new, v_new, kvq):
+    """(kq, ks, vq, vs) on the cache's own grid: packed int4 for the
+    Quant4 subclasses, int8 otherwise (``kvq``: calibrated clip ranges)."""
+    qfn = quantize_kv4 \
+        if isinstance(cache, (Quant4KVCache, PagedQuant4KVCache)) \
+        else quantize_kv
+    if kvq is None:
+        kq, ks = qfn(k_new)
+        vq, vs = qfn(v_new)
+    else:
+        kq, ks = qfn(k_new, kvq.k_grid, kvq.k_zp)
+        vq, vs = qfn(v_new, kvq.v_grid, kvq.v_zp)
+    return kq, ks, vq, vs
+
+
 def _write_kv(cache, k_new, v_new, pw, slots, bidx, kvq):
-    """Scatter new K/V tokens into the cache slots. QuantKVCache writes
-    quantize in place (per-head per-slot scales, ring-buffer slots included);
-    ``kvq`` optionally carries the calibrated per-head clip ranges.
+    """Scatter new K/V tokens into the cache slots. Quantized caches write
+    quantize in place (per-head per-slot scales, ring-buffer slots included;
+    int4 subclasses nibble-pack); ``kvq`` optionally carries the calibrated
+    per-head clip ranges. The result is rebuilt as ``type(cache)`` so the
+    bit-width-marker subclass survives the write.
     Out-of-bounds slots (dead cells, see _write_slots) are dropped."""
     if isinstance(cache, QuantKVCache):
-        if kvq is None:
-            kq, ks = quantize_kv(k_new)
-            vq, vs = quantize_kv(v_new)
-        else:
-            kq, ks = quantize_kv(k_new, kvq.k_grid, kvq.k_zp)
-            vq, vs = quantize_kv(v_new, kvq.v_grid, kvq.v_zp)
-        return QuantKVCache(
+        kq, ks, vq, vs = _quantize_kv_writes(cache, k_new, v_new, kvq)
+        return type(cache)(
             k_q=cache.k_q.at[bidx, slots].set(kq, mode="drop"),
             v_q=cache.v_q.at[bidx, slots].set(vq, mode="drop"),
             k_s=cache.k_s.at[bidx, slots].set(ks, mode="drop"),
@@ -391,13 +477,8 @@ def _write_paged_kv(cache, k_new, v_new, pw, block_table, window, kvq):
     phys = jnp.where(dead, num_blocks, phys)
     cell = L % bs
     if isinstance(cache, PagedQuantKVCache):
-        if kvq is None:
-            kq, ks = quantize_kv(k_new)
-            vq, vs = quantize_kv(v_new)
-        else:
-            kq, ks = quantize_kv(k_new, kvq.k_grid, kvq.k_zp)
-            vq, vs = quantize_kv(v_new, kvq.v_grid, kvq.v_zp)
-        return PagedQuantKVCache(
+        kq, ks, vq, vs = _quantize_kv_writes(cache, k_new, v_new, kvq)
+        return type(cache)(
             k_q=cache.k_q.at[phys, cell].set(kq, mode="drop"),
             v_q=cache.v_q.at[phys, cell].set(vq, mode="drop"),
             k_s=cache.k_s.at[phys, cell].set(ks, mode="drop"),
@@ -444,8 +525,14 @@ def paged_gather_kv(cache, block_table, window, kvq=None):
         return x.reshape(x.shape[0], nb * bs, *arena.shape[2:])
 
     if isinstance(cache, PagedQuantKVCache):
-        kq = g(cache.k_q).astype(jnp.float32)
-        vq = g(cache.v_q).astype(jnp.float32)
+        kq, vq = g(cache.k_q), g(cache.v_q)
+        if isinstance(cache, PagedQuant4KVCache):
+            from repro.kernels.nibble import unpack_nibbles
+            hd = 2 * kq.shape[-1]
+            kq = unpack_nibbles(kq, hd)
+            vq = unpack_nibbles(vq, hd)
+        kq = kq.astype(jnp.float32)
+        vq = vq.astype(jnp.float32)
         if kvq is not None:
             kq = kq - jnp.asarray(kvq.k_zp, jnp.float32)[..., None]
             vq = vq - jnp.asarray(kvq.v_zp, jnp.float32)[..., None]
@@ -597,7 +684,8 @@ def _quant_decode_attend(q, cache: QuantKVCache, q_pos, cfg: AttnConfig,
         q_q, qs * cfg.scale, cache.k_q, cache.k_s, cache.v_q, cache.v_s,
         cache.pos, q_pos[:, 0], q_zp=qz, k_zp=kz, v_zp=vz,
         window=cfg.window,
-        logit_softcap=cfg.logit_softcap, **sm_kwargs)
+        logit_softcap=cfg.logit_softcap,
+        kv_bits=4 if isinstance(cache, Quant4KVCache) else 8, **sm_kwargs)
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
@@ -626,7 +714,9 @@ def _paged_quant_decode_attend(q, cache: PagedQuantKVCache, block_table,
         block_table, q_pos[:, 0],
         s_cap=paged_capacity(block_table, bs, cfg.window),
         q_zp=qz, k_zp=kz, v_zp=vz, window=cfg.window,
-        logit_softcap=cfg.logit_softcap, **sm_kwargs)
+        logit_softcap=cfg.logit_softcap,
+        kv_bits=4 if isinstance(cache, PagedQuant4KVCache) else 8,
+        **sm_kwargs)
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
@@ -732,7 +822,13 @@ def attention_block(p, x, positions, cfg: AttnConfig, *, ctx=None,
     if cache is not None:
         paged = isinstance(cache, (PagedKVCache, PagedQuantKVCache))
         quantized = isinstance(cache, (QuantKVCache, PagedQuantKVCache))
-        kvq = ctx.deploy_act(f"{prefix}/kv") \
+        # int4 caches read their clip ranges from the separate kv4 site
+        # (present only when k/v were calibrated at 4 bits) — falling back
+        # to dynamic per-slot int4 grids when it is absent.
+        kv_site = f"{prefix}/kv4" \
+            if isinstance(cache, (Quant4KVCache, PagedQuant4KVCache)) \
+            else f"{prefix}/kv"
+        kvq = ctx.deploy_act(kv_site) \
             if (quantized and ctx is not None) else None
         if paged:
             if block_table is None:

@@ -32,10 +32,13 @@ from repro.models import moe as moe_lib
 from repro.models import rglru as rglru_lib
 from repro.models import rwkv6 as rwkv_lib
 from repro.models.attention import (AttnConfig, KVCache, PagedKVCache,
-                                    PagedQuantKVCache, QuantKVCache,
+                                    PagedQuant4KVCache, PagedQuantKVCache,
+                                    Quant4KVCache, QuantKVCache,
                                     attention_block, init_attention_params,
                                     init_kv_cache, init_paged_kv_cache,
+                                    init_paged_quant4_kv_cache,
                                     init_paged_quant_kv_cache,
+                                    init_quant4_kv_cache,
                                     init_quant_kv_cache, reset_kv_lanes,
                                     reset_paged_lanes)
 from repro.models.common import (cross_entropy, embed_init, layer_norm,
@@ -326,10 +329,15 @@ def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
         acfg = attn_cfg_for(cfg, kind)
         if paged_blocks is not None:
             num_blocks, block_size = paged_blocks
+            if kv_bits == 4:
+                return init_paged_quant4_kv_cache(num_blocks, block_size,
+                                                  acfg)
             if kv_bits == 8:
                 return init_paged_quant_kv_cache(num_blocks, block_size,
                                                  acfg)
             return init_paged_kv_cache(num_blocks, block_size, acfg, dtype)
+        if kv_bits == 4:
+            return init_quant4_kv_cache(batch, max_len, acfg)
         if kv_bits == 8:
             return init_quant_kv_cache(batch, max_len, acfg)
         return init_kv_cache(batch, max_len, acfg, dtype)
@@ -460,7 +468,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
                num_blocks: Optional[int] = None,
                mapped: Optional[bool] = None):
     """kv_bits=8 stores attention caches as int8 QuantKVCache (deployment
-    serving path); 16 keeps the bf16/f32 KVCache.
+    serving path); kv_bits=4 as nibble-packed Quant4KVCache (two int4 cells
+    per byte — half the cache HBM of int8); 16 keeps the bf16/f32 KVCache.
 
     ``paged=True`` switches every attention layer to the block-paged
     layout: one shared arena of ``num_blocks`` blocks of ``block_size``
