@@ -39,7 +39,7 @@ import jax.numpy as jnp
 from repro.core import peg as peg_lib
 from repro.core.quant_config import (Granularity, QuantizationPolicy,
                                      QuantizerConfig, RangeEstimator)
-from repro.core.quantizer import QuantParams, fake_quant
+from repro.core.quantizer import QuantParams, fake_quant, telemetry_stats
 from repro.core.range_estimation import (RangeState, estimate_weight_params,
                                          finalize, init_range_state, observe)
 
@@ -73,8 +73,27 @@ class QuantCtx:
     deploy_acts: Optional[dict] = None
     # COLLECT: also observe the matmul-input sites (deploy calibration).
     collect_inputs: bool = False
+    # Quant-health telemetry (runtime/telemetry.py): when a dict, every
+    # APPLY/DEPLOY fake-quant site accumulates a fixed-shape
+    # [n_clipped, n_total, amax, cal_range] vector keyed by site — the step
+    # builders return it as an extra jit output. None (the default) is the
+    # byte-identical disabled path.
+    telemetry: Optional[Dict[str, jnp.ndarray]] = None
 
     # -- model-facing API ---------------------------------------------------
+
+    def telem_site(self, site: str, vec: jnp.ndarray) -> None:
+        """Accumulate one site's [clipped, total, amax, range] vector
+        (counts add; amax/range take the max — a site hit repeatedly in one
+        trace, e.g. per superblock, folds correctly)."""
+        if self.telemetry is None:
+            return
+        prev = self.telemetry.get(site)
+        if prev is not None:
+            vec = jnp.stack([prev[0] + vec[0], prev[1] + vec[1],
+                             jnp.maximum(prev[2], vec[2]),
+                             jnp.maximum(prev[3], vec[3])])
+        self.telemetry[site] = vec
 
     def act(self, site: str, x: jnp.ndarray) -> jnp.ndarray:
         cfg = self.policy.act_config(site)
@@ -90,6 +109,8 @@ class QuantCtx:
             qp = self.act_state.get(site) if self.act_state else None
             if qp is None:
                 return x
+            if self.telemetry is not None:
+                self.telem_site(site, telemetry_stats(x, qp, cfg))
             return fake_quant(x, qp, cfg)
         if self.mode == Mode.QAT:
             from repro.core import qat as qat_lib
@@ -114,6 +135,8 @@ class QuantCtx:
             qp = self.act_state.get(site) if self.act_state else None
             if qp is None:
                 return x
+            if self.telemetry is not None:
+                self.telem_site(site, telemetry_stats(x, qp, cfg))
             return fake_quant(x, qp, cfg)
         return x                                   # OFF / QAT
 

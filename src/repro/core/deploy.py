@@ -348,6 +348,52 @@ def quantize_act(x, aq: ActQuant) -> QTensor:
     return QTensor(q=q, scales=aq.scales, zps=aq.zps)
 
 
+def site_stats(x, aq: ActQuant) -> jnp.ndarray:
+    """Quant-health vector ``[n_clipped, n_total, amax, cal_range]`` for a
+    deploy-fused quantize site, computed from the f32 input the kernel is
+    about to consume (mirrors quantizer.telemetry_stats on the shifted int8
+    grid). Used only under ``--quant-telemetry``; the fused kernels
+    themselves stay untouched."""
+    xf = x.astype(jnp.float32)
+    if aq.perm is not None:
+        xf = jnp.take(xf, aq.perm, axis=-1)
+    g = int(aq.scales.shape[0])
+    if g > 1:                            # PEG: fold dims into (…, G, d/G)
+        d = xf.shape[-1]
+        xf = xf.reshape(xf.shape[:-1] + (g, d // g))
+        s = aq.scales.reshape(g, 1)
+        z = aq.zps.reshape(g, 1)
+    else:
+        s, z = aq.scales[0], aq.zps[0]
+    s = jnp.maximum(s, jnp.finfo(jnp.float32).tiny)
+    t = jnp.round(xf / s) + z
+    clipped = jnp.sum((t < aq.qmin) | (t > aq.qmax))
+    cal_range = jnp.max(jnp.maximum(jnp.abs(s * (aq.qmin - z)),
+                                    jnp.abs(s * (aq.qmax - z))))
+    return jnp.stack([clipped.astype(jnp.float32), jnp.float32(xf.size),
+                      jnp.max(jnp.abs(xf)), cal_range.astype(jnp.float32)])
+
+
+def qtensor_stats(qt: QTensor, aq: ActQuant) -> jnp.ndarray:
+    """Saturation-only quant-health vector for a kernel-internal requant
+    site (e.g. the FFN hidden emitted by the fused epilogue): the f32
+    pre-quant values never leave VMEM, so ``n_clipped`` counts payload
+    values sitting ON the grid edges and ``amax`` is the dequantized
+    magnitude — capped at the grid edge, so ``amax_ratio`` tops out at ~1
+    (docs/observability.md spells out the caveat)."""
+    q = qt.q.astype(jnp.int32)
+    sat = jnp.sum((q <= aq.qmin) | (q >= aq.qmax))
+    # requant epilogues are per-tensor (enforced at pack time), so a scalar
+    # grid suffices for the dequantized magnitude
+    s = jnp.maximum(aq.scales[0], jnp.finfo(jnp.float32).tiny)
+    z = aq.zps[0]
+    deq_amax = jnp.max(jnp.abs((q.astype(jnp.float32) - z) * s))
+    cal_range = jnp.maximum(jnp.abs(s * (aq.qmin - z)),
+                            jnp.abs(s * (aq.qmax - z)))
+    return jnp.stack([sat.astype(jnp.float32), jnp.float32(q.size),
+                      deq_amax, cal_range.astype(jnp.float32)])
+
+
 def matmul(x: QTensor, packed: dict, *, bias=None, mul=None,
            activation: str = "none", out_aq: Optional[ActQuant] = None):
     """Integer matmul against a packed weight, with the fused epilogue.

@@ -1,0 +1,23 @@
+"""Version-compat shims for jax API drift (paired with
+parallel.sharding.make_abstract_mesh).
+
+``shard_map`` moved to the top-level namespace (with ``check_vma``) in
+newer jax; older installs expose it under ``jax.experimental`` (with
+``check_rep``). ``shard_map(...)`` here accepts the new-style call and
+rewrites the kwarg for old installs.
+"""
+from __future__ import annotations
+
+import jax
+
+try:                                              # new API (jax >= 0.6)
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:                            # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_CHECK_KW: check_vma})

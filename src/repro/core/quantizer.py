@@ -119,3 +119,27 @@ def reduce_range(x: jnp.ndarray, cfg: QuantizerConfig):
 def quant_error(x: jnp.ndarray, qp: QuantParams, cfg: QuantizerConfig) -> jnp.ndarray:
     """Mean squared quantization error — the MSE-estimator objective."""
     return jnp.mean(jnp.square(x - fake_quant(x, qp, cfg)))
+
+
+def telemetry_stats(x: jnp.ndarray, qp: QuantParams,
+                    cfg: QuantizerConfig) -> jnp.ndarray:
+    """Quant-health vector ``[n_clipped, n_total, amax, cal_range]`` (4,) f32.
+
+    Mirrors :func:`fake_quant`'s grid exactly: a value counts as clipped when
+    its pre-clip integer image lands outside [qmin, qmax]. ``cal_range`` is
+    the largest real magnitude the calibrated grid can represent (max over
+    channels/groups of ``max(|s*(qmin-z)|, |s*(qmax-z)|)``) so
+    ``amax / cal_range > 1`` means traffic exceeded calibration.
+    """
+    s, z = _expand(qp, x.ndim, cfg.channel_axis)
+    s = jnp.maximum(s, jnp.finfo(jnp.float32).tiny).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    t = jnp.round(xf / s) + z
+    clipped = jnp.sum((t < cfg.qmin) | (t > cfg.qmax))
+    lo = jnp.abs(s * (cfg.qmin - z))
+    hi = jnp.abs(s * (cfg.qmax - z))
+    cal_range = jnp.max(jnp.maximum(lo, hi))
+    return jnp.stack([clipped.astype(jnp.float32),
+                      jnp.float32(x.size),
+                      jnp.max(jnp.abs(xf)),
+                      cal_range.astype(jnp.float32)])

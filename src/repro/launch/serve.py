@@ -175,6 +175,27 @@ def build_parser() -> argparse.ArgumentParser:
                          "are decodable (>1 holds decode cadence under "
                          "prefill pressure; needs a chunked path: "
                          "--prefill-chunk or --over-commit)")
+    ap.add_argument("--trace", metavar="FILE", default="",
+                    help="record request-lifecycle events and write a "
+                         "Chrome-trace-event JSON (load in "
+                         "https://ui.perfetto.dev) to FILE; also prints "
+                         "per-phase step-latency p50/p95/p99 (continuous "
+                         "scheduler only)")
+    ap.add_argument("--metrics-every", type=int, default=0, metavar="N",
+                    help="snapshot scheduler gauges (queue depth, resident "
+                         "lanes, pool blocks, prefix hit rate, preemptions) "
+                         "every N steps; written as JSON-lines next to "
+                         "--trace (FILE.metrics.jsonl) and printed as "
+                         "Prometheus text at exit (continuous only)")
+    ap.add_argument("--quant-telemetry", action="store_true",
+                    help="thread fixed-shape clip/saturation reductions out "
+                         "of the jitted steps and report per-site clip "
+                         "fractions + observed-amax/calibrated-range ratios "
+                         "(and kv-cache scale stats at --kv-bits 8/4); "
+                         "requires --quantize, continuous scheduler only")
+    ap.add_argument("--stats-json", metavar="FILE", default="",
+                    help="write the primary run's ServeStats as JSON to "
+                         "FILE (ServeStats.to_json)")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
@@ -219,6 +240,16 @@ def main(argv=None):
                                       or args.over_commit):
         ap.error("--decode-ratio > 1 requires a chunked path "
                  "(--prefill-chunk or --over-commit)")
+    if args.metrics_every < 0:
+        ap.error("--metrics-every must be >= 0")
+    if (args.trace or args.metrics_every or args.quant_telemetry) \
+            and args.scheduler != "continuous":
+        ap.error("--trace/--metrics-every/--quant-telemetry require "
+                 "--scheduler continuous (telemetry instruments the "
+                 "continuous scheduler's request lifecycle)")
+    if args.quant_telemetry and not args.quantize:
+        ap.error("--quant-telemetry requires --quantize (clip fractions "
+                 "are measured against the calibrated quantization grids)")
 
     cfg = get_config(args.arch)
     dist = None
@@ -396,6 +427,30 @@ def main(argv=None):
                                                  ctx_factory=ctx_factory),
                          donate_argnums=(4,))
 
+    telemetry = None
+    if args.trace or args.metrics_every or args.quant_telemetry:
+        from repro.runtime import ServeTelemetry
+        telemetry = ServeTelemetry.create(trace=bool(args.trace),
+                                          metrics_every=args.metrics_every,
+                                          quant=args.quant_telemetry)
+    # quant telemetry uses SEPARATE jitted closures (the plain steps keep
+    # their 2-output signature — parity runs reuse them untraced and the
+    # tracer-off path never recompiles)
+    admit_t = decode_t = chunk_t = None
+    if args.quant_telemetry:
+        admit_t = jax.jit(make_admit_step(cfg, dist=dist,
+                                          ctx_factory=ctx_factory,
+                                          quant_telemetry=True),
+                          donate_argnums=(4,))
+        decode_t = jax.jit(make_decode_step(cfg, dist=dist,
+                                            ctx_factory=ctx_factory,
+                                            quant_telemetry=True),
+                           donate_argnums=(3,))
+        chunk_t = jax.jit(make_chunk_prefill_step(cfg, dist=dist,
+                                                  ctx_factory=ctx_factory,
+                                                  quant_telemetry=True),
+                          donate_argnums=(4,))
+
     def make_requests():
         rng = np.random.RandomState(args.seed)
         shared = (rng.randint(10, cfg.vocab_size, size=args.prompt_len // 2)
@@ -440,7 +495,7 @@ def main(argv=None):
         swap_out = swap_in = None
 
     def run(scheduler, requests, paged=None, chunk=0, prefix=None,
-            over_commit=None, kv_bits=None):
+            over_commit=None, kv_bits=None, tel=None):
         paged = args.paged_kv if paged is None else paged
         prefix = ((args.prefix_cache if prefix is None else prefix)
                   and paged and scheduler == "continuous")
@@ -450,13 +505,16 @@ def main(argv=None):
         if paged and scheduler == "continuous":
             pool = BlockPool(num_blocks, args.block_size, args.batch_slots,
                              nb_lane)
-        return serve(prefill, admit, decode,
+        armed = tel is not None and tel.quant is not None
+        a_step, d_step = (admit_t, decode_t) if armed else (admit, decode)
+        c_step = chunk_t if armed else chunk_step
+        return serve(prefill, a_step, d_step,
                      lambda b: init_cache(b, paged, scheduler,
                                           kv_bits=kv_bits), params,
                      requests, scheduler=scheduler,
                      batch_slots=args.batch_slots,
                      max_len=args.max_len, block_pool=pool,
-                     chunk_step=chunk_step if (chunk or prefix or oc)
+                     chunk_step=c_step if (chunk or prefix or oc)
                      else None,
                      prefill_chunk=chunk or None,
                      radix_cache=RadixCache(args.block_size) if prefix
@@ -470,10 +528,12 @@ def main(argv=None):
                      swap_out_fn=swap_out if oc else None,
                      swap_in_fn=swap_in if oc else None,
                      decode_ratio=args.decode_ratio
-                     if (chunk or prefix or oc) else 1)
+                     if (chunk or prefix or oc) else 1,
+                     telemetry=tel)
 
     requests = make_requests()
-    stats = run(args.scheduler, requests, chunk=args.prefill_chunk)
+    stats = run(args.scheduler, requests, chunk=args.prefill_chunk,
+                tel=telemetry)
     if args.paged_kv and args.scheduler == "continuous":
         paged_note = (f", blocks {stats.blocks_in_use}/{num_blocks} "
                       f"(frag {stats.block_fragmentation:.0%}, "
@@ -510,6 +570,48 @@ def main(argv=None):
                   f"p50/p99 {t.first_token_p50:.0f}/{t.first_token_p99:.0f} "
                   f"steps, inter-token p50/p99 {t.inter_token_p50:.1f}/"
                   f"{t.inter_token_p99:.1f} steps")
+
+    if telemetry is not None:
+        if telemetry.tracer is not None:
+            telemetry.tracer.dump(args.trace)
+            spans = telemetry.tracer.request_spans()
+            retired = sum(1 for s in spans.values() if s["retired"])
+            print(f"[trace] {len(telemetry.tracer.events)} events, "
+                  f"{retired}/{len(spans)} requests retired -> {args.trace}")
+            for ph, h in sorted(
+                    telemetry.tracer.latency_histograms().items()):
+                print(f"[trace] {ph}: n={h['n']} p50 {h['p50']:.2f}ms "
+                      f"p95 {h['p95']:.2f}ms p99 {h['p99']:.2f}ms")
+        if telemetry.metrics is not None:
+            if args.trace:
+                mpath = args.trace + ".metrics.jsonl"
+                with open(mpath, "w") as f:
+                    f.write(telemetry.metrics.jsonl())
+                print(f"[metrics] {len(telemetry.metrics.snapshots)} "
+                      f"snapshots -> {mpath}")
+            print(telemetry.metrics.prometheus_text(), end="")
+        if telemetry.quant is not None:
+            rep = telemetry.quant.report()
+            sites = rep["sites"]
+            print(f"[quant-health] {len(sites)} sites over "
+                  f"{rep['steps_observed']} telemetry steps")
+            ranked = sorted(sites.items(),
+                            key=lambda kv: -kv[1]["clip_fraction"])
+            for s, d in ranked[:10]:
+                print(f"[quant-health] {s}: clip {d['clip_fraction']:.4%} "
+                      f"({d['clipped']}/{d['total']}), amax "
+                      f"{d['observed_amax']:.4f} / range "
+                      f"{d['calibrated_range']:.4f} "
+                      f"(ratio {d['amax_ratio']:.2f})")
+            for name, st in sorted(rep["kv_scales"].items()):
+                print(f"[quant-health] {name}: n={st['n']} "
+                      f"min {st['min']:.3e} p50 {st['p50']:.3e} "
+                      f"p99 {st['p99']:.3e} max {st['max']:.3e}")
+    if args.stats_json:
+        import json
+        with open(args.stats_json, "w") as f:
+            json.dump(stats.to_json(), f, indent=2, default=str)
+        print(f"[stats] ServeStats -> {args.stats_json}")
 
     if args.parity:
         def compare(tag, b_reqs, ok_msg):

@@ -914,6 +914,9 @@ def attention_block(p, x, positions, cfg: AttnConfig, *, ctx=None,
     out2d = out.reshape(B, T, H * hd)
     if x_int8:
         wo_aq = ctx.deploy_act(f"{prefix}/wo_in")
+        if ctx.telemetry is not None:
+            ctx.telem_site(f"{prefix}/wo_in",
+                           deploy_lib.site_stats(out2d, wo_aq))
         out = deploy_lib.matmul(deploy_lib.quantize_act(out2d, wo_aq),
                                 p["wo"])
     else:

@@ -27,6 +27,8 @@ def _mlp_int8(p, x, *, activation: str, ctx, prefix: str):
     hid = ctx.deploy_act(f"{prefix}/hidden")
     h_q = deploy.matmul(x, p["w_in"], bias=p.get("b_in"),
                         activation=activation, out_aq=hid)
+    if ctx.telemetry is not None:
+        ctx.telem_site(f"{prefix}/hidden", deploy.qtensor_stats(h_q, hid))
     return deploy.matmul(h_q, p["w_out"], bias=p.get("b_out"))
 
 
@@ -38,6 +40,8 @@ def _glu_mlp_int8(p, x, *, activation: str, ctx, prefix: str):
     up = deploy.matmul(x, p["w_up"])
     h_q = deploy.matmul(x, p["w_gate"], activation=activation, mul=up,
                         out_aq=hid)
+    if ctx.telemetry is not None:
+        ctx.telem_site(f"{prefix}/hidden", deploy.qtensor_stats(h_q, hid))
     return deploy.matmul(h_q, p["w_out"])
 
 

@@ -163,7 +163,8 @@ def _moe_sharded(cfg: ModelConfig, p, x, dist: DistContext):
     else:
         w_specs = (P(None, fsdp, tp), P(None, fsdp, tp), P(None, tp, fsdp))
 
-    out = jax.shard_map(
+    from repro.core.jax_compat import shard_map
+    out = shard_map(
         body, mesh=mesh,
         in_specs=(P(fsdp, None),) + w_specs + (tok_spec,),
         out_specs=tok_spec,
@@ -196,6 +197,9 @@ def _ffn_input(cfg: ModelConfig, p, x, ctx, prefix):
         aq = ctx.deploy_act(f"{prefix}/ffn_in")
         if aq is not None and _ffn_packed(p):
             from repro.core import deploy
+            if ctx.telemetry is not None:
+                ctx.telem_site(f"{prefix}/ffn_in",
+                               deploy.site_stats(_norm(cfg, p["ln2"], x), aq))
             return deploy.norm_quantize(cfg.norm, p["ln2"], x, aq)
     h = _norm(cfg, p["ln2"], x)
     if ctx is not None:
@@ -209,6 +213,9 @@ def _attn_input(cfg: ModelConfig, p, x, ctx, prefix):
         aq = ctx.deploy_act(f"{prefix}/attn_in")
         if aq is not None and _attn_packed(p):
             from repro.core import deploy
+            if ctx.telemetry is not None:
+                ctx.telem_site(f"{prefix}/attn_in",
+                               deploy.site_stats(_norm(cfg, p["ln1"], x), aq))
             return deploy.norm_quantize(cfg.norm, p["ln1"], x, aq)
     h = _norm(cfg, p["ln1"], x)
     if ctx is not None:
@@ -826,24 +833,33 @@ def forward(cfg: ModelConfig, params, tokens, *, embeds=None, ctx=None,
             policy=jax.checkpoint_policies.nothing_saveable)
 
     scan_caches = cache["scan"] if cache is not None else None
+    # Quant-health telemetry entries created INSIDE the scan body (prefix
+    # "layer") would leak tracers through the ctx dict; pop them in the body
+    # and return them as scan ys instead — they come back stacked (L, 4)
+    # per site, which is exactly the per-layer resolution we want.
+    telem = ctx.telemetry if ctx is not None else None
 
     def scan_fn(x, xs):
         p_slices = xs[0]
         c_slices = xs[1] if cache is not None else None
+        before = set(telem) if telem is not None else None
         x, new_c = body(x, (p_slices, c_slices))
-        return x, new_c
+        tel_ys = {}
+        if telem is not None:
+            tel_ys = {k: telem.pop(k) for k in sorted(set(telem) - before)}
+        return x, (new_c, tel_ys)
 
-    xs = (params["scan"], scan_caches) if cache is not None \
-        else (params["scan"], None)
     # lax.scan needs xs leaves with a leading axis; pack params (+caches).
     if cache is not None:
-        x, new_scan_caches = jax.lax.scan(
+        x, (new_scan_caches, tel_stacked) = jax.lax.scan(
             lambda carry, xs_: scan_fn(carry, xs_),
             x, (params["scan"], scan_caches))
     else:
-        x, _ = jax.lax.scan(lambda carry, p: scan_fn(carry, (p,)),
-                            x, params["scan"])
+        x, (_, tel_stacked) = jax.lax.scan(
+            lambda carry, p: scan_fn(carry, (p,)), x, params["scan"])
         new_scan_caches = None
+    if telem is not None:
+        telem.update(tel_stacked)
 
     new_tail_caches = []
     for i, kind in enumerate(cfg.tail_pattern):

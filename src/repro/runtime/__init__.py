@@ -8,4 +8,6 @@ from repro.runtime.serve_loop import (DecodeState, Request, RequestLatency,
 from repro.runtime.steps import (make_admit_step, make_chunk_prefill_step,
                                  make_decode_step, make_encoder_forward,
                                  make_prefill_step, make_train_step)
+from repro.runtime.telemetry import (MetricsLogger, QuantHealth,
+                                     ServeTelemetry, Tracer)
 from repro.runtime.train_loop import TrainLoopConfig, run_train_loop

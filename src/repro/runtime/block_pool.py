@@ -98,6 +98,10 @@ class BlockPool:
         self.batch_slots = batch_slots
         self.max_blocks_per_lane = max_blocks_per_lane
         self._cache = None          # attached RadixCache (eviction source)
+        # observability hook: called with the list of evicted block ids
+        # whenever radix LRU eviction reclaims cached blocks (set by the
+        # scheduler when a Tracer is attached; None costs nothing)
+        self.on_evict = None
         self.reset()
 
     def reset(self) -> None:
@@ -184,6 +188,16 @@ class BlockPool:
 
     def lane_blocks(self, lane: int) -> np.ndarray:
         return self.table[lane, :int(self._n_mapped[lane])].copy()
+
+    def lane_mapped(self, lane: int) -> int:
+        """Number of blocks currently mapped into ``lane``'s table row."""
+        return int(self._n_mapped[lane])
+
+    @property
+    def refcount_total(self) -> int:
+        """Sum of block refcounts (block sharing gauge for metrics
+        snapshots: equals blocks_in_use when nothing is shared)."""
+        return int(self._ref.sum())
 
     def lane_shared(self, lane: int) -> int:
         """Number of ``lane``'s mapped blocks still shared (not yet COWed)."""
@@ -347,6 +361,8 @@ class BlockPool:
             evicted = self._cache.evict_lru(self.block_ref)
             if not evicted:
                 break
+            if self.on_evict is not None:
+                self.on_evict(evicted)
             for b in evicted:
                 self._cached[b] = False
                 if self._ref[b] == 0:

@@ -62,6 +62,7 @@ import numpy as np
 
 from repro.runtime.block_pool import BlockPool, blocks_for_tokens
 from repro.runtime.radix_cache import RadixCache
+from repro.runtime.telemetry import ServeTelemetry
 
 
 @dataclasses.dataclass
@@ -156,6 +157,12 @@ class ServeStats:
     # request produced a token)
     tier_latency: Dict[int, TierLatency] = \
         dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> Dict[str, Any]:
+        """JSON-serializable dict of every field (nested RequestLatency /
+        TierLatency dataclasses included) — the machine-readable form
+        behind ``serve.py --stats-json`` and the serving bench rows."""
+        return dataclasses.asdict(self)
 
 
 def _tree_bytes(tree) -> int:
@@ -563,7 +570,8 @@ class Scheduler:
                  over_commit: bool = False,
                  swap_out_fn: Optional[Callable] = None,
                  swap_in_fn: Optional[Callable] = None,
-                 decode_ratio: int = 1):
+                 decode_ratio: int = 1,
+                 telemetry: Optional[ServeTelemetry] = None):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         if block_pool is not None and block_pool.batch_slots != batch_slots:
@@ -630,6 +638,11 @@ class Scheduler:
         self.swap_out_fn = swap_out_fn
         self.swap_in_fn = swap_in_fn
         self.decode_ratio = decode_ratio
+        # observability (runtime/telemetry.py): None = fully disabled — the
+        # hot loop then never touches a tracer, timer or metrics object
+        self.tel = telemetry
+        self._tracer = telemetry.tracer if telemetry is not None else None
+        self._book: Optional[_Book] = None
         if block_pool is not None:
             lane_cap = block_pool.max_blocks_per_lane * block_pool.block_size
             caps = sorted(set(write_caps)) if write_caps else [lane_cap]
@@ -681,7 +694,10 @@ class Scheduler:
     def run(self, requests: List[Request]) -> ServeStats:
         _check_capacity(requests, self.max_len, self.pool, self._ring_tokens)
         stats = ServeStats()
-        book = _Book(stats, self.batch_slots)
+        book = self._book = _Book(stats, self.batch_slots)
+        if self.pool is not None and self._tracer is not None:
+            self.pool.on_evict = lambda blocks: self._ev(
+                "radix_evict", blocks=len(blocks))
         t_start = time.perf_counter()
         queue = self._queue = collections.deque()
         for seq, r in enumerate(requests):
@@ -690,6 +706,8 @@ class Scheduler:
             else:
                 book.enqueue(r)
                 queue.append(_QEntry(r, seq))
+                self._ev("enqueue", rid=r.rid, prompt_len=len(r.prompt),
+                         max_new=r.max_new_tokens)
         pad = self.prompt_pad_len or max(
             (len(e.req.prompt) for e in queue), default=1)
         # radix mode prefills every admission (hit or miss) through _chunk;
@@ -750,6 +768,9 @@ class Scheduler:
                 raise RuntimeError(
                     "scheduler deadlock: no queued request fits an empty "
                     f"pool (queue head rid {queue[0].req.rid})")
+            self._snapshot(queue, lanes, book)
+        if self.tel is not None and self.tel.quant is not None:
+            self.tel.quant.update_kv_scales(state.cache)
         return book.finalize(t_start)
 
     # -- paged-pool plumbing (no-ops in dense mode) -------------------------
@@ -838,6 +859,9 @@ class Scheduler:
         return k_tok
 
     def _release(self, lane: int, r: Optional[Request] = None) -> None:
+        if r is not None:
+            self._ev("retire", rid=r.rid, lane=lane,
+                     tokens=len(r.tokens_out))
         if self.pool is not None:
             if self.radix is not None and r is not None:
                 self._donate(lane, r)
@@ -901,6 +925,8 @@ class Scheduler:
                 cache = self.copy_block_fn(
                     cache, jnp.asarray(pair[0], jnp.int32),
                     jnp.asarray(pair[1], jnp.int32))
+                self._ev("cow", lane=lane, src=int(pair[0]),
+                         dst=int(pair[1]))
         return cache
 
     def _sync_table(self, cache) -> None:
@@ -931,6 +957,77 @@ class Scheduler:
             live += self.pool.blocks_cached * self.pool.block_size
             book.track_pool(self.pool, live, self._block_bytes)
 
+    # -- observability hooks (all no-ops when telemetry is None) ------------
+
+    def _ev(self, name: str, rid: Optional[int] = None,
+            lane: Optional[int] = None, **args) -> None:
+        if self._tracer is not None:
+            self._tracer.event(name, self._book.step, rid=rid, lane=lane,
+                               **args)
+
+    def _unwrap(self, out):
+        """Steps built with quant_telemetry=True return (logits, cache,
+        telemetry_dict); fold the extra output into the QuantHealth
+        aggregator and hand back the plain pair."""
+        if len(out) == 3:
+            logits, cache, tel = out
+            if self.tel is not None and self.tel.quant is not None:
+                self.tel.quant.update(tel)
+            return logits, cache
+        return out
+
+    def _step_call(self, phase: str, fn: Callable, args,
+                   n_lanes: Optional[int] = None):
+        """One jitted model call. Under tracing it becomes a phase duration
+        event (block_until_ready inside the timer, so the duration covers
+        device execution, not just dispatch)."""
+        if self._tracer is None:
+            return self._unwrap(fn(*args))
+        with self._tracer.phase(phase, self._book.step) as ph:
+            logits, cache = self._unwrap(fn(*args))
+            jax.block_until_ready(logits)
+            if n_lanes is not None:
+                ph.args["lanes"] = n_lanes
+        return logits, cache
+
+    def _timed(self, phase: str, thunk: Callable, **args):
+        """Time a host-side phase (block swap in/out) as a duration event."""
+        if self._tracer is None:
+            return thunk()
+        with self._tracer.phase(phase, self._book.step) as ph:
+            out = thunk()
+            ph.args.update(args)
+        return out
+
+    def _snapshot(self, queue, lanes, book: _Book) -> None:
+        """Periodic metrics snapshot (queue/lane/pool gauges), emitted at
+        most once per global step when a MetricsLogger is attached."""
+        m = self.tel.metrics if self.tel is not None else None
+        if m is None or not m.due(book.step):
+            return
+        s = book.stats
+        gauges: Dict[str, Any] = {
+            "queue_depth": len(queue),
+            "resident_lanes": sum(r is not None for r in lanes),
+            "prefilling_lanes": sum(o is not None for o in self._pref),
+            "tokens_generated": s.tokens_generated,
+            "decode_steps": s.decode_steps,
+            "prefill_calls": s.prefill_calls,
+            "preemptions": s.preemptions,
+            "swapped_blocks": s.swapped_blocks,
+            "prefix_hit_rate": (s.prefix_hit_tokens / book.prompt_tokens
+                                if book.prompt_tokens else 0.0),
+        }
+        if self.pool is not None:
+            gauges.update(
+                blocks_in_use=self.pool.blocks_in_use,
+                blocks_free=self.pool.blocks_free,
+                blocks_evictable=self.pool.blocks_evictable,
+                blocks_cached=self.pool.blocks_cached,
+                shared_blocks=self.pool.shared_blocks,
+                refcount_total=self.pool.refcount_total)
+        m.emit(book.step, gauges)
+
     # -----------------------------------------------------------------------
 
     def _admit(self, free, queue, pad, lanes, state: DecodeState,
@@ -955,9 +1052,13 @@ class Scheduler:
             admit_mask[i] = True
             lanes[i] = group[j]
             self._register_lane(i, entries[j], group[j].prompt, book)
+            self._ev("admit", rid=group[j].rid, lane=i)
         self._sync_table(state.cache)
-        logits, cache = self.admit_fn(jnp.asarray(toks), jnp.asarray(posm),
-                                      jnp.asarray(admit_mask), state.cache)
+        logits, cache = self._step_call(
+            "admit", self.admit_fn,
+            (jnp.asarray(toks), jnp.asarray(posm),
+             jnp.asarray(admit_mask), state.cache),
+            n_lanes=len(slots))
         book.stats.prefill_calls += 1
         book.step += 1
         first = np.asarray(jnp.argmax(logits[:, -1:], axis=-1), np.int32)
@@ -1004,6 +1105,9 @@ class Scheduler:
             self._pref[i] = off
             self._register_lane(i, entry, r.prompt, book)
             book.prompt_tokens += len(r.prompt)
+            self._ev("admit", rid=r.rid, lane=i)
+            if off:
+                self._ev("prefix_hit", rid=r.rid, lane=i, tokens=off)
 
     # -- over-commit: preemption + priority admission -----------------------
 
@@ -1061,8 +1165,11 @@ class Scheduler:
         stats = book.stats
         if self.swap_out_fn is not None:
             ids = self.pool.lane_blocks(lane)
-            payload = jax.device_get(self.swap_out_fn(
-                state.cache, jnp.asarray(self._pad_block_ids(ids))))
+            payload = self._timed(
+                "swap_out",
+                lambda: jax.device_get(self.swap_out_fn(
+                    state.cache, jnp.asarray(self._pad_block_ids(ids)))),
+                blocks=len(ids))
             entry.resume = _Swapped(
                 payload=payload, n_blocks=len(ids),
                 prompt=self._lane_prompt[lane], pref_off=off,
@@ -1080,6 +1187,8 @@ class Scheduler:
         self._pref[lane] = None
         state.pos[lane, 0] = -1        # idle: decode treats it as dead
         stats.preemptions += 1
+        self._ev("preempt", rid=r.rid, lane=lane, written=written,
+                 mode="swap" if self.swap_out_fn is not None else "drop")
         book.requeue(r)
         self._queue.append(entry)
 
@@ -1168,9 +1277,12 @@ class Scheduler:
                     or not pool.reserve_and_alloc(lane, n, n):
                 return False, state
             ids = pool.lane_blocks(lane)
-            cache = self.swap_in_fn(
-                state.cache, jnp.asarray(self._pad_block_ids(ids)),
-                jax.device_put(res.payload))
+            cache = self._timed(
+                "swap_in",
+                lambda: self.swap_in_fn(
+                    state.cache, jnp.asarray(self._pad_block_ids(ids)),
+                    jax.device_put(res.payload)),
+                blocks=len(ids))
             tokens, pos = state.tokens.copy(), state.pos.copy()
             self._pref[lane] = res.pref_off
             if res.pref_off is None:    # decodable: restore pending token
@@ -1179,6 +1291,7 @@ class Scheduler:
             self._register_lane(lane, entry, res.prompt, book)
             self._shared_tok[lane] = 0  # every re-uploaded block is private
             entry.resume = None
+            self._ev("resume", rid=r.rid, lane=lane, mode="swap")
             return True, DecodeState(tokens, pos, cache)
         if isinstance(res, _Dropped):
             prompt = np.concatenate([np.asarray(r.prompt, np.int32),
@@ -1191,6 +1304,11 @@ class Scheduler:
         if isinstance(res, _Dropped):
             book.stats.recomputed_tokens += max(res.written - off, 0)
             entry.resume = None
+            self._ev("resume", rid=r.rid, lane=lane, mode="drop")
+        else:
+            self._ev("admit", rid=r.rid, lane=lane)
+        if off:
+            self._ev("prefix_hit", rid=r.rid, lane=lane, tokens=off)
         self._pref[lane] = off
         self._register_lane(lane, entry, prompt, book)
         book.prompt_tokens += len(prompt)
@@ -1272,10 +1390,16 @@ class Scheduler:
                 n_total = (off + c - 1) // bs + 1
                 if self._ring_blocks is not None:
                     n_total = min(n_total, self._ring_blocks)
+                n_before = (self.pool.lane_mapped(i)
+                            if self._tracer is not None else 0)
                 if self.over_commit:
                     self._ensure_blocks(i, n_total, lanes, state, book)
                 else:
                     self.pool.grow(i, n_total)
+                if self._tracer is not None and lanes[i] is not None \
+                        and self.pool.lane_mapped(i) > n_before:
+                    self._ev("block_grow", rid=lanes[i].rid, lane=i,
+                             blocks=self.pool.lane_mapped(i) - n_before)
         prefilling = [i for i in range(B) if self._pref[i] is not None]
         if not prefilling:          # every prefilling lane was preempted
             return DecodeState(state.tokens, state.pos, cache)
@@ -1293,8 +1417,10 @@ class Scheduler:
             reset[i] = off == 0
             ends[i] = off + c
         self._sync_table(cache)
-        logits, cache = self.chunk_fn(jnp.asarray(toks), jnp.asarray(posm),
-                                      jnp.asarray(reset), cache)
+        logits, cache = self._step_call(
+            "chunk", self.chunk_fn,
+            (jnp.asarray(toks), jnp.asarray(posm), jnp.asarray(reset), cache),
+            n_lanes=len(prefilling))
         book.stats.prefill_calls += 1
         book.stats.chunk_steps += 1
         book.step += 1
@@ -1342,17 +1468,25 @@ class Scheduler:
                 n_total = p // bs + 1
                 if self._ring_blocks is not None:
                     n_total = min(n_total, self._ring_blocks)
+                n_before = (self.pool.lane_mapped(i)
+                            if self._tracer is not None else 0)
                 if self.over_commit:
                     self._ensure_blocks(i, n_total, lanes, state, book)
                 else:
                     self.pool.grow(i, n_total)
+                if self._tracer is not None and lanes[i] is not None \
+                        and self.pool.lane_mapped(i) > n_before:
+                    self._ev("block_grow", rid=lanes[i].rid, lane=i,
+                             blocks=self.pool.lane_mapped(i) - n_before)
             self._sync_table(cache)
         active = [i for i, r in enumerate(lanes)
                   if r is not None and self._pref[i] is None]
         if not active:              # every decodable lane was preempted
             return DecodeState(state.tokens, state.pos, cache)
-        logits, cache = self.decode_fn(jnp.asarray(state.tokens),
-                                       jnp.asarray(state.pos), cache)
+        logits, cache = self._step_call(
+            "decode_batch", self.decode_fn,
+            (jnp.asarray(state.tokens), jnp.asarray(state.pos), cache),
+            n_lanes=len(active))
         book.count_decode(len(active))
         book.step += 1
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
@@ -1389,7 +1523,8 @@ def serve_continuous(admit_fn: Callable, decode_fn: Callable, init_cache_fn,
                      over_commit: bool = False,
                      swap_out_fn: Optional[Callable] = None,
                      swap_in_fn: Optional[Callable] = None,
-                     decode_ratio: int = 1) -> ServeStats:
+                     decode_ratio: int = 1,
+                     telemetry: Optional[ServeTelemetry] = None) -> ServeStats:
     """Continuous-batching counterpart of :func:`serve_batch` (see
     :class:`Scheduler` for the step-function contracts)."""
     return Scheduler(admit_fn, decode_fn, init_cache_fn,
@@ -1400,7 +1535,8 @@ def serve_continuous(admit_fn: Callable, decode_fn: Callable, init_cache_fn,
                      ring_tokens=ring_tokens,
                      copy_block_fn=copy_block_fn, over_commit=over_commit,
                      swap_out_fn=swap_out_fn, swap_in_fn=swap_in_fn,
-                     decode_ratio=decode_ratio).run(requests)
+                     decode_ratio=decode_ratio,
+                     telemetry=telemetry).run(requests)
 
 
 def serve(prefill_step: Callable, admit_step: Callable,
@@ -1418,7 +1554,8 @@ def serve(prefill_step: Callable, admit_step: Callable,
           over_commit: bool = False,
           swap_out_fn: Optional[Callable] = None,
           swap_in_fn: Optional[Callable] = None,
-          decode_ratio: int = 1) -> ServeStats:
+          decode_ratio: int = 1,
+          telemetry: Optional[ServeTelemetry] = None) -> ServeStats:
     """Dispatch to a scheduler, binding ``params`` into step functions with
     the ``runtime.steps.make_*_step`` signatures (params first):
 
@@ -1456,9 +1593,12 @@ def serve(prefill_step: Callable, admit_step: Callable,
             write_caps=write_caps, ring_tokens=ring_tokens,
             copy_block_fn=copy_block_fn, over_commit=over_commit,
             swap_out_fn=swap_out_fn, swap_in_fn=swap_in_fn,
-            decode_ratio=decode_ratio)
+            decode_ratio=decode_ratio, telemetry=telemetry)
     if scheduler != "static":
         raise ValueError(f"unknown scheduler {scheduler!r}")
+    if telemetry is not None:
+        raise ValueError("telemetry is a continuous-scheduler feature; "
+                         "the static scheduler has no request lifecycle")
     if block_pool is not None:
         raise ValueError("block_pool is a continuous-scheduler feature; "
                          "static paged serving uses a fully mapped table")

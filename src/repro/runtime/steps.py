@@ -89,24 +89,54 @@ def make_train_step(cfg: ModelConfig, *, lr_schedule, microbatches: int = 1,
     return step
 
 
+def _telem_ctx(ctx_factory):
+    """Fresh ctx with quant-telemetry armed: every fake-quant / deploy site
+    it hits appends a fixed-shape [clipped, total, amax, range] vector to
+    ``ctx.telemetry`` — a dict of arrays, i.e. a pytree the step returns as
+    an EXTRA jit output. Same traced computation otherwise, so enabling it
+    builds a separate (3-output) jit entry while the plain 2-output step's
+    signature — and its compiled executable — is untouched."""
+    ctx = ctx_factory() if ctx_factory is not None else None
+    if ctx is not None:
+        ctx.telemetry = {}
+        return ctx, ctx.telemetry
+    return None, {}
+
+
 def make_prefill_step(cfg: ModelConfig, *, dist=None,
-                      ctx_factory: Optional[Callable] = None, chunked=None):
+                      ctx_factory: Optional[Callable] = None, chunked=None,
+                      quant_telemetry: bool = False):
     """prefill(params, tokens, cache[, positions]) -> (last_logits, cache).
 
     ``positions`` (B, T) carries the dead-cell sentinel: pads in a
     left-packed ragged prompt are position -1 (masked from attention, cache
     write dropped) so packing never perturbs a request's own lane. None
     keeps the legacy arange positions (no pads).
+
+    ``quant_telemetry=True`` returns (last_logits, cache, telemetry) — the
+    extra output is the per-site quant-health dict (see _telem_ctx); the
+    default path is byte-identical to before the flag existed.
     """
     def prefill(params, tokens, cache, positions=None, embeds=None):
         ctx = ctx_factory() if ctx_factory is not None else None
         return tfm.prefill(cfg, params, tokens, cache, positions=positions,
                            embeds=embeds, ctx=ctx, dist=dist, chunked=chunked)
-    return prefill
+
+    if not quant_telemetry:
+        return prefill
+
+    def prefill_t(params, tokens, cache, positions=None, embeds=None):
+        ctx, tel = _telem_ctx(ctx_factory)
+        logits, cache = tfm.prefill(cfg, params, tokens, cache,
+                                    positions=positions, embeds=embeds,
+                                    ctx=ctx, dist=dist, chunked=chunked)
+        return logits, cache, tel
+    return prefill_t
 
 
 def make_admit_step(cfg: ModelConfig, *, dist=None,
-                    ctx_factory: Optional[Callable] = None, chunked=None):
+                    ctx_factory: Optional[Callable] = None, chunked=None,
+                    quant_telemetry: bool = False):
     """Slot-insert prefill for continuous batching (one jitted step, fixed
     shapes — admissions never recompile).
 
@@ -131,12 +161,23 @@ def make_admit_step(cfg: ModelConfig, *, dist=None,
         cache = tfm.cache_reset_slots(cache, admit_mask)
         return tfm.prefill(cfg, params, tokens, cache, positions=positions,
                            ctx=ctx, dist=dist, chunked=chunked)
-    return admit
+
+    if not quant_telemetry:
+        return admit
+
+    def admit_t(params, tokens, positions, admit_mask, cache):
+        ctx, tel = _telem_ctx(ctx_factory)
+        cache = tfm.cache_reset_slots(cache, admit_mask)
+        logits, cache = tfm.prefill(cfg, params, tokens, cache,
+                                    positions=positions, ctx=ctx, dist=dist,
+                                    chunked=chunked)
+        return logits, cache, tel
+    return admit_t
 
 
 def make_chunk_prefill_step(cfg: ModelConfig, *, dist=None,
                             ctx_factory: Optional[Callable] = None,
-                            chunked=None):
+                            chunked=None, quant_telemetry: bool = False):
     """Chunked-prefill step for continuous batching: append ONE fixed-width
     chunk of prompt tokens at each participating lane's current cache
     position (one jitted step, fixed (B, C) shapes — traced exactly once
@@ -165,11 +206,23 @@ def make_chunk_prefill_step(cfg: ModelConfig, *, dist=None,
         cache = tfm.cache_reset_slots(cache, reset_mask)
         return tfm.prefill(cfg, params, tokens, cache, positions=positions,
                            ctx=ctx, dist=dist, chunked=chunked, append=True)
-    return chunk
+
+    if not quant_telemetry:
+        return chunk
+
+    def chunk_t(params, tokens, positions, reset_mask, cache):
+        ctx, tel = _telem_ctx(ctx_factory)
+        cache = tfm.cache_reset_slots(cache, reset_mask)
+        logits, cache = tfm.prefill(cfg, params, tokens, cache,
+                                    positions=positions, ctx=ctx, dist=dist,
+                                    chunked=chunked, append=True)
+        return logits, cache, tel
+    return chunk_t
 
 
 def make_decode_step(cfg: ModelConfig, *, dist=None,
-                     ctx_factory: Optional[Callable] = None):
+                     ctx_factory: Optional[Callable] = None,
+                     quant_telemetry: bool = False):
     """serve_step: one new token against the KV cache/state."""
     if cfg.encoder_layers:
         def decode(params, tokens, pos, cache):
@@ -182,7 +235,16 @@ def make_decode_step(cfg: ModelConfig, *, dist=None,
         ctx = ctx_factory() if ctx_factory is not None else None
         return tfm.decode_step(cfg, params, tokens, pos, cache, ctx=ctx,
                                dist=dist)
-    return decode
+
+    if not quant_telemetry:
+        return decode
+
+    def decode_t(params, tokens, pos, cache):
+        ctx, tel = _telem_ctx(ctx_factory)
+        logits, cache = tfm.decode_step(cfg, params, tokens, pos, cache,
+                                        ctx=ctx, dist=dist)
+        return logits, cache, tel
+    return decode_t
 
 
 def make_swap_steps():

@@ -9,14 +9,15 @@ import textwrap
 import jax
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.models.transformer import DistContext
-from repro.parallel.sharding import cache_spec_for, param_spec_for
+from repro.parallel.sharding import (cache_spec_for, make_abstract_mesh,
+                                     param_spec_for)
 
 
 def _dist(shape=(16, 16), axes=("data", "model")):
-    mesh = AbstractMesh(shape, axes)
+    mesh = make_abstract_mesh(shape, axes)
     dp = tuple(a for a in ("pod", "data") if a in axes)
     fsdp = dp if len(dp) > 1 else "data"
     return DistContext(mesh=mesh, tp_axis="model", fsdp_axis=fsdp,
@@ -102,8 +103,7 @@ MULTI_DEV_SCRIPT = textwrap.dedent("""
     import numpy as np
     from jax.sharding import PartitionSpec as P, NamedSharding
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
     # 1) compressed cross-pod all-reduce ~= plain mean
     from repro.core.grad_compression import (make_crosspod_allreduce,

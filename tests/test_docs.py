@@ -23,7 +23,8 @@ from repro.launch.serve import build_parser
 pytestmark = pytest.mark.docs
 
 REPO = Path(__file__).resolve().parent.parent
-DOCS = ["README.md", "docs/serving.md", "docs/kernels.md"]
+DOCS = ["README.md", "docs/serving.md", "docs/kernels.md",
+        "docs/observability.md"]
 
 # flags mentioned in the docs that belong to other CLIs, not serve.py
 FOREIGN_FLAGS = {

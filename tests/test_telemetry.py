@@ -1,0 +1,330 @@
+"""Serving observability tests (runtime/telemetry.py + scheduler wiring).
+
+Coverage:
+
+* Lifecycle conservation on a preempting over-commit stub run: every
+  admitted request either retires or is preempted-and-resumed (admissions
+  == resumes + 1 per request), span preemption counts reconcile exactly
+  with ServeStats.preemptions, and per-phase event counts reconcile with
+  decode_steps / prefill_calls.
+* Chrome-trace export schema: the JSON is Perfetto-loadable trace-event
+  format (M/X/i phases, µs timestamps, lane thread naming, per-residency
+  request spans that never dangle).
+* MetricsLogger cadence (due/emit dedup per step), JSONL round-trip, and
+  Prometheus text rendering.
+* Quant-health: quantizer.telemetry_stats against an independent numpy
+  oracle of the calibrated grid (exact clip counts, amax, cal_range),
+  QuantCtx.act emitting the same counters from inside jit, and
+  QuantHealth's stacked-scan fan-out + max/sum merge semantics.
+* Recompile guard: serving with the tracer + metrics enabled reuses the
+  exact jitted admit/decode executables traced by an untraced run (the
+  traced step signatures are unchanged — tracing is host-side only).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Mode, QuantCtx, w8a8_policy
+from repro.core.quantizer import (fake_quant, params_from_range,
+                                  telemetry_stats)
+from repro.runtime import (BlockPool, MetricsLogger, QuantHealth, Request,
+                           ServeTelemetry, Tracer, serve_continuous)
+from serve_testlib import golden as _golden
+from serve_testlib import next_arr as _next_arr
+from serve_testlib import onehot as _onehot
+
+pytestmark = [pytest.mark.serve, pytest.mark.obs]
+
+
+class Stub:
+    """Deterministic next_token = (2 * tok + 1) % VOCAB (see
+    serve_testlib), with the over-commit swap hooks so preemption paths
+    are reachable."""
+
+    def init_cache(self, batch):
+        return {"kv": jnp.zeros((batch, 4), jnp.float32)}
+
+    def admit(self, tokens, positions, admit_mask, cache):
+        return _onehot(_next_arr(tokens)), cache
+
+    def chunk(self, tokens, positions, reset_mask, cache):
+        return _onehot(_next_arr(tokens)), cache
+
+    def decode(self, tokens, pos, cache):
+        return _onehot(_next_arr(tokens)), cache
+
+    def swap_out(self, cache, ids):
+        return {"blocks": jnp.zeros((int(ids.shape[0]), 1), jnp.float32)}
+
+    def swap_in(self, cache, ids, payload):
+        return cache
+
+
+def _serve_oc(reqs, tel, *, swap=False, num_blocks=6):
+    """Over-commit stub serve sized so the pool is below worst-case demand
+    (preemptions happen); mirrors tests/test_preemption.py."""
+    m = Stub()
+    pool = BlockPool(num_blocks, 4, 2, 8)
+    stats = serve_continuous(
+        m.admit, m.decode, m.init_cache, reqs, batch_slots=2,
+        block_pool=pool, chunk_fn=m.chunk, prefill_chunk=4,
+        over_commit=True,
+        swap_out_fn=m.swap_out if swap else None,
+        swap_in_fn=m.swap_in if swap else None,
+        telemetry=tel)
+    return stats
+
+
+def _oc_reqs():
+    return [Request(rid=i, prompt=np.full(4, 3 + i, np.int32),
+                    max_new_tokens=12) for i in range(4)]
+
+
+class TestLifecycleConservation:
+    @pytest.mark.parametrize("swap", [False, True])
+    def test_spans_reconcile_with_serve_stats(self, swap):
+        tel = ServeTelemetry.create(trace=True)
+        reqs = _oc_reqs()
+        stats = _serve_oc(reqs, tel, swap=swap)
+        for r in reqs:
+            assert r.tokens_out == _golden(r.prompt, 12)
+        assert stats.preemptions > 0
+        spans = tel.tracer.request_spans()
+        assert sorted(spans) == [r.rid for r in reqs]
+        for rid, s in spans.items():
+            # conservation: every admission either retires or is
+            # preempted-and-resumed; the final residency retires
+            assert s["retired"], f"rid {rid} never retired"
+            assert len(s["admits"]) == s["resumes"] + 1
+            assert s["preempts"] == s["resumes"]
+            assert s["enqueue_ts"] is not None
+            assert s["enqueue_ts"] <= s["admits"][0][0] <= s["retire_ts"]
+            assert [t for t, _ in s["admits"]] == sorted(
+                t for t, _ in s["admits"])
+        assert sum(s["preempts"] for s in spans.values()) \
+            == stats.preemptions
+        # phase/event counts reconcile with the scheduler's own counters
+        names = [e.name for e in tel.tracer.events]
+        assert names.count("decode_batch") == stats.decode_steps
+        assert names.count("admit") + names.count("chunk") \
+            - sum(len(s["admits"]) - s["resumes"]
+                  for s in spans.values()) == stats.prefill_calls
+        assert names.count("enqueue") == len(reqs)
+        assert names.count("retire") == len(reqs)
+        mode = "swap" if swap else "drop"
+        preempts = [e for e in tel.tracer.events if e.name == "preempt"]
+        assert preempts and all(e.args["mode"] == mode for e in preempts)
+        if swap:
+            assert any(e.name == "swap_out" for e in tel.tracer.events)
+            assert any(e.name == "swap_in" for e in tel.tracer.events)
+        hist = tel.tracer.latency_histograms()
+        assert hist["decode_batch"]["n"] == stats.decode_steps
+        assert all(h["p50"] <= h["p95"] <= h["p99"] for h in hist.values())
+
+    def test_tokens_identical_with_and_without_tracing(self):
+        traced = _oc_reqs()
+        plain = _oc_reqs()
+        _serve_oc(traced, ServeTelemetry.create(trace=True,
+                                                metrics_every=2))
+        _serve_oc(plain, None)
+        for a, b in zip(traced, plain):
+            assert a.tokens_out == b.tokens_out
+
+
+class TestChromeTraceSchema:
+    def test_trace_is_valid_chrome_trace_json(self, tmp_path):
+        tel = ServeTelemetry.create(trace=True)
+        _serve_oc(_oc_reqs(), tel, swap=True)
+        path = tmp_path / "trace.json"
+        tel.tracer.dump(str(path))
+        doc = json.loads(path.read_text())
+        assert set(doc) == {"traceEvents", "displayTimeUnit"}
+        evs = doc["traceEvents"]
+        assert evs
+        for e in evs:
+            assert {"name", "ph", "pid"} <= set(e)
+            assert e["ph"] in ("M", "X", "i")
+            if e["ph"] == "X":
+                assert e["ts"] >= 0 and e["dur"] > 0
+            if e["ph"] == "i":
+                assert e["s"] == "t" and "ts" in e
+        # lane tracks are named and every request span sits on one
+        named = {e["tid"] for e in evs
+                 if e["ph"] == "M" and e["name"] == "thread_name"}
+        spans = [e for e in evs
+                 if e["ph"] == "X" and e["name"].startswith("req")]
+        assert spans
+        assert all(e["tid"] in named and e["tid"] >= 1 for e in spans)
+        # phase durations live on the steps track (tid 0)
+        assert any(e["ph"] == "X" and e["tid"] == 0 for e in evs)
+
+
+class TestMetrics:
+    def test_due_fires_once_per_step(self):
+        m = MetricsLogger(every=4)
+        assert not m.due(3)
+        assert m.due(4)
+        m.emit(4, {"queue_depth": 1})
+        assert not m.due(4)                      # same step: no re-emit
+        assert m.due(8)
+        assert not MetricsLogger(every=0).due(0)
+
+    def test_snapshots_jsonl_and_prometheus(self):
+        tel = ServeTelemetry.create(metrics_every=2)
+        stats = _serve_oc(_oc_reqs(), tel)
+        snaps = tel.metrics.snapshots
+        assert snaps
+        steps = [s["step"] for s in snaps]
+        assert steps == sorted(set(steps))
+        assert all(s % 2 == 0 for s in steps)
+        assert {"queue_depth", "resident_lanes", "blocks_free",
+                "refcount_total", "preemptions",
+                "prefix_hit_rate"} <= set(snaps[0])
+        lines = tel.metrics.jsonl().splitlines()
+        assert len(lines) == len(snaps)
+        last = json.loads(lines[-1])
+        # the final snapshot lands on the last step divisible by `every`,
+        # so its counters are a prefix of the final totals
+        assert 0 < last["tokens_generated"] <= stats.tokens_generated
+        assert last["preemptions"] <= stats.preemptions
+        prom = tel.metrics.prometheus_text()
+        assert "# TYPE serve_queue_depth gauge" in prom
+        assert f"serve_tokens_generated {last['tokens_generated']:g}" in prom
+
+
+class TestQuantHealthOracle:
+    def _grid(self):
+        pol = w8a8_policy()
+        cfg = pol.act_config("x")
+        qp = params_from_range(jnp.float32(-1.0), jnp.float32(1.0), cfg)
+        return pol, cfg, qp
+
+    def _oracle(self, x, qp, cfg):
+        """Independent numpy recomputation of the calibrated grid."""
+        s = max(float(qp.scale), np.finfo(np.float32).tiny)
+        z = float(qp.zero_point)
+        t = np.round(np.asarray(x, np.float64) / s) + z
+        clipped = int(np.sum((t < cfg.qmin) | (t > cfg.qmax)))
+        rng = max(abs(s * (cfg.qmin - z)), abs(s * (cfg.qmax - z)))
+        return clipped, float(np.max(np.abs(x))), rng
+
+    def test_telemetry_stats_matches_numpy_oracle(self):
+        pol, cfg, qp = self._grid()
+        x = np.asarray(
+            jax.random.normal(jax.random.PRNGKey(0), (512,))) * 2.0
+        vec = np.asarray(telemetry_stats(jnp.asarray(x), qp, cfg))
+        clipped, amax, rng = self._oracle(x, qp, cfg)
+        assert clipped > 0                       # range [-1,1] vs 2-sigma
+        assert int(vec[0]) == clipped
+        assert int(vec[1]) == x.size
+        assert vec[2] == pytest.approx(amax, rel=1e-6)
+        assert vec[3] == pytest.approx(rng, rel=1e-6)
+
+    def test_ctx_act_emits_counters_from_inside_jit(self):
+        pol, cfg, qp = self._grid()
+
+        def f(x):
+            ctx = QuantCtx(policy=pol, mode=Mode.APPLY,
+                           act_state={"x": qp})
+            ctx.telemetry = {}
+            y = ctx.act("x", x)
+            return y, ctx.telemetry
+
+        x = jax.random.normal(jax.random.PRNGKey(1), (256,)) * 2.0
+        y, tel = jax.jit(f)(x)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(fake_quant(x, qp, cfg)))
+        vec = np.asarray(tel["x"])
+        clipped, amax, rng = self._oracle(np.asarray(x), qp, cfg)
+        assert int(vec[0]) == clipped and clipped > 0
+        assert int(vec[1]) == x.size
+
+    def test_quant_health_fanout_and_merge(self):
+        q = QuantHealth()
+        stacked = np.asarray([[1, 10, 0.5, 1.0], [3, 10, 2.0, 1.0]],
+                             np.float32)
+        q.update({"layer/site": stacked, "head": np.asarray(
+            [2, 20, 4.0, 2.0], np.float32)})
+        q.update({"layer/site": stacked})        # counts sum, amax maxes
+        rep = q.report()
+        assert set(rep["sites"]) == {"layer0/site", "layer1/site", "head"}
+        s1 = rep["sites"]["layer1/site"]
+        assert s1["clipped"] == 6 and s1["total"] == 20
+        assert s1["clip_fraction"] == pytest.approx(0.3)
+        assert s1["observed_amax"] == 2.0
+        assert s1["amax_ratio"] == pytest.approx(2.0)
+        assert rep["sites"]["head"]["clip_fraction"] == pytest.approx(0.1)
+        assert rep["steps_observed"] == 2
+
+
+class TestRecompileGuard:
+    def test_tracing_reuses_untraced_executables(self):
+        """Tracing is host-side only: serving with the tracer + metrics on
+        must not retrace or change the jitted step signatures — the traced
+        run reuses the executables the untraced run compiled."""
+        traces = {"admit": 0, "decode": 0}
+        stub = Stub()
+
+        def admit_fn(t, pm, m, c):              # jit-traceable stub LM
+            traces["admit"] += 1
+            return _onehot((2 * t + 1) % 32), c
+
+        def decode_fn(t, p, c):
+            traces["decode"] += 1
+            return _onehot((2 * t + 1) % 32), c
+
+        admit_j = jax.jit(admit_fn)
+        decode_j = jax.jit(decode_fn)
+
+        def run(tel):
+            reqs = [Request(rid=i, prompt=np.asarray([3 + i, 5 + i]),
+                            max_new_tokens=4) for i in range(3)]
+            serve_continuous(admit_j, decode_j, stub.init_cache, reqs,
+                             batch_slots=2, prompt_pad_len=2,
+                             telemetry=tel)
+            return reqs
+
+        plain = run(None)
+        assert traces == {"admit": 1, "decode": 1}
+        traced = run(ServeTelemetry.create(trace=True, metrics_every=2))
+        assert traces == {"admit": 1, "decode": 1}   # zero new traces
+        for a, b in zip(plain, traced):
+            assert a.tokens_out == b.tokens_out
+
+    def test_disabled_telemetry_returns_plain_step(self):
+        """quant_telemetry=False hands back the ORIGINAL 2-output closure
+        (not a wrapper), so existing jit caches keyed on it stay warm."""
+        from repro.configs import get_config
+        from repro.runtime.steps import make_admit_step, make_decode_step
+        cfg = get_config("gemma2-2b").reduced()
+        assert make_admit_step(cfg).__name__ == "admit"
+        assert make_decode_step(cfg).__name__ == "decode"
+        assert make_admit_step(cfg, quant_telemetry=True).__name__ \
+            == "admit_t"
+        assert make_decode_step(cfg, quant_telemetry=True).__name__ \
+            == "decode_t"
+
+
+class TestTracerUnit:
+    def test_phase_timer_records_duration_and_args(self):
+        tr = Tracer()
+        with tr.phase("decode_batch", 3) as ph:
+            ph.args["lanes"] = 2
+        (e,) = tr.events
+        assert e.name == "decode_batch" and e.step == 3
+        assert e.dur >= 0.0 and e.args == {"lanes": 2}
+        assert tr.latency_histograms()["decode_batch"]["n"] == 1
+
+    def test_event_args_survive_export(self):
+        tr = Tracer()
+        tr.event("prefix_hit", 1, rid=7, lane=0, tokens=16)
+        doc = tr.to_chrome_trace()
+        (hit,) = [e for e in doc["traceEvents"]
+                  if e["name"] == "prefix_hit"]
+        assert hit["args"]["tokens"] == 16
+        assert hit["args"]["rid"] == 7
+        assert hit["tid"] == 1                   # lane 0 -> tid 1
+        json.dumps(doc)                          # serializable end-to-end
