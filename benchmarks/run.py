@@ -14,7 +14,7 @@ import sys
 import time
 
 SECTIONS = ["t1", "t2", "t4", "t5", "t6", "t7", "kernels", "serving",
-            "roofline"]
+            "engine", "roofline"]
 
 
 def main(argv=None):
@@ -71,6 +71,15 @@ def main(argv=None):
 
     section("serving", "Serving schedulers — static vs continuous "
             "batching on a skewed-quota workload", _serving)
+
+    def _engine():
+        from benchmarks import engine_bench
+        rows = engine_bench.bench()
+        path = engine_bench.write_json(rows)
+        return engine_bench.report(rows) + f"\n# wrote {path}"
+
+    section("engine", "Engine API — prefill/insert/generate per-call "
+            "timings with parity asserted (incl. sharded decode)", _engine)
     section("roofline", "Roofline terms per dry-run cell "
             "(EXPERIMENTS.md §Roofline)", roofline.report)
 

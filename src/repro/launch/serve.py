@@ -196,6 +196,24 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--stats-json", metavar="FILE", default="",
                     help="write the primary run's ServeStats as JSON to "
                          "FILE (ServeStats.to_json)")
+    ap.add_argument("--async", dest="async_serve", action="store_true",
+                    help="serve through the async front-end: requests "
+                         "submit into a thread-safe queue and stream "
+                         "tokens back per request while ONE scheduler "
+                         "thread drives the engine's decomposed "
+                         "prefill/insert/generate triad "
+                         "(runtime.async_serve; dense cache only — "
+                         "incompatible with --paged-kv/--prefill-chunk/"
+                         "--prefix-cache/--over-commit and the telemetry "
+                         "flags)")
+    ap.add_argument("--tp", type=int, default=1, metavar="N",
+                    help="shard the engine tensor-parallel over N devices "
+                         "(jax.sharding mesh (1, N) over (data, model); "
+                         "admission stays host-local, the admit mask "
+                         "broadcasts replicated). On CPU, simulate "
+                         "devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N "
+                         "(requires --reduced; 1 = unsharded)")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
@@ -250,12 +268,36 @@ def main(argv=None):
     if args.quant_telemetry and not args.quantize:
         ap.error("--quant-telemetry requires --quantize (clip fractions "
                  "are measured against the calibrated quantization grids)")
+    if args.async_serve and (args.paged_kv or args.prefill_chunk
+                             or args.prefix_cache or args.over_commit
+                             or args.trace or args.metrics_every
+                             or args.quant_telemetry or args.stats_json):
+        ap.error("--async serves through the bare engine triad (dense "
+                 "cache, FIFO admission) — incompatible with --paged-kv/"
+                 "--prefill-chunk/--prefix-cache/--over-commit and the "
+                 "telemetry/--stats-json flags")
+    if args.tp < 1:
+        ap.error("--tp must be >= 1")
+    if args.tp > 1 and not args.reduced:
+        ap.error("--tp is the host-simulated tensor-parallel mode "
+                 "(--reduced); the full-size path builds its own "
+                 "production mesh")
 
     cfg = get_config(args.arch)
     dist = None
     if args.reduced:
         cfg = cfg.reduced()
         dtype = jnp.float32
+        if args.tp > 1:
+            ndev = len(jax.devices())
+            if ndev < args.tp:
+                ap.error(
+                    f"--tp {args.tp}: only {ndev} device(s) visible; "
+                    "simulate CPU devices with XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={args.tp} "
+                    "(set BEFORE the process imports jax)")
+            mesh = jax.make_mesh((1, args.tp), ("data", "model"))
+            dist = make_dist(mesh)
     else:
         mesh = make_production_mesh(multi_pod=args.multi_pod)
         dist = make_dist(mesh)
@@ -532,6 +574,55 @@ def main(argv=None):
                      telemetry=tel)
 
     requests = make_requests()
+    if args.async_serve:
+        import time
+        from repro.runtime import AsyncServer
+        from repro.runtime.engine import make_engine
+        eng = make_engine(cfg, params, batch_slots=args.batch_slots,
+                          prompt_pad_len=args.prompt_len,
+                          max_len=args.max_len, dtype=dtype,
+                          kv_bits=args.kv_bits, ctx_factory=ctx_factory,
+                          dist=dist)
+        t0 = time.perf_counter()
+        with AsyncServer(eng) as srv:
+            streams = [srv.submit(r.prompt, r.max_new_tokens, rid=r.rid)
+                       for r in requests]
+            for r, s in zip(requests, streams):
+                r.tokens_out = s.result(timeout=600)
+                r.done = True
+        wall = time.perf_counter() - t0
+        total = sum(len(r.tokens_out) for r in requests)
+        tp_note = (f", tp={args.tp} over {len(jax.devices())} devices"
+                   if args.tp > 1 else "")
+        print(f"[serve:async] {total} tokens from {len(requests)} streamed "
+              f"requests, {wall:.2f}s ({total / max(wall, 1e-9):.1f} tok/s), "
+              f"engine traces {eng.trace_counts}{tp_note}")
+        if args.parity:
+            for sched in ("static", "continuous"):
+                sync_reqs = make_requests()
+                run(sched, sync_reqs)
+                pairs = list(zip(requests, sync_reqs))
+                if args.kv_bits == 4:
+                    matched = sum(1 for r, b in pairs
+                                  for x, y in zip(r.tokens_out, b.tokens_out)
+                                  if x == y)
+                    tot = sum(min(len(r.tokens_out), len(b.tokens_out))
+                              for r, b in pairs)
+                    print(f"[parity] async engine vs {sched} scheduler: "
+                          f"{matched}/{tot} greedy tokens match "
+                          f"({matched / max(tot, 1):.1%}) — int4 drift "
+                          f"reported, not asserted")
+                    continue
+                bad = [r.rid for r, b in pairs
+                       if list(r.tokens_out) != list(b.tokens_out)]
+                if bad:
+                    raise SystemExit(
+                        f"[parity] FAIL: request ids {bad} diverge between "
+                        f"the async engine and the {sched} scheduler")
+                print(f"[parity] OK: async engine and {sched} scheduler "
+                      f"emit identical greedy tokens for all "
+                      f"{len(requests)} requests")
+        return None
     stats = run(args.scheduler, requests, chunk=args.prefill_chunk,
                 tel=telemetry)
     if args.paged_kv and args.scheduler == "continuous":

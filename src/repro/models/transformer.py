@@ -693,6 +693,67 @@ def cache_scatter_blocks(cache, ids, payload):
     return out
 
 
+def cache_extract_lane(cache, lane):
+    """Slice one batch lane out of a DENSE whole-model cache pytree — the
+    device half of the engine's decomposed ``prefill``: a request is
+    prefilled into a scratch cache and its lane (batch axis kept, size 1)
+    becomes the transferable ``lane_payload`` that :func:`cache_insert_lane`
+    lands in any decode slot. ``lane`` is a traced int32 scalar, so one
+    jitted trace serves every prefill. Paged caches have no per-lane
+    batch axis — extract their lane payloads with
+    :func:`cache_gather_blocks` over the lane's mapped block ids instead."""
+    lane = jnp.asarray(lane, jnp.int32)
+
+    def _extract(c, axis):
+        if not isinstance(c, (KVCache, QuantKVCache)):
+            raise ValueError(
+                "cache_extract_lane: dense attention caches only, got "
+                f"{type(c).__name__}")
+        return jax.tree.map(
+            lambda x: jax.lax.dynamic_slice_in_dim(x, lane, 1, axis=axis), c)
+
+    if "block_table" in cache:
+        raise ValueError("cache_extract_lane: paged caches carry no batch "
+                         "axis — use cache_gather_blocks on the lane's "
+                         "mapped block ids")
+    if "layers" in cache:
+        return {"layers": [_extract(c, 0) for c in cache["layers"]]}
+    return {"scan": [_extract(c, 1) for c in cache["scan"]],
+            "tail": [_extract(c, 0) for c in cache["tail"]]}
+
+
+def cache_insert_lane(cache, lane, payload):
+    """Write a :func:`cache_extract_lane` payload into batch lane ``lane``
+    of a DENSE whole-model cache pytree — the device half of the engine's
+    ``insert``. The payload covers the lane's every cell (prompt KV plus
+    the -1 dead-cell padding), so the write is a full lane overwrite: the
+    slot's previous occupant needs no separate reset, and every other
+    lane's bytes pass through bit-identical (the lane bit-isolation
+    contract the engine conformance suite asserts)."""
+    lane = jnp.asarray(lane, jnp.int32)
+
+    def _insert(c, p, axis):
+        if not isinstance(c, (KVCache, QuantKVCache)):
+            raise ValueError(
+                "cache_insert_lane: dense attention caches only, got "
+                f"{type(c).__name__}")
+        return jax.tree.map(
+            lambda x, v: jax.lax.dynamic_update_slice_in_dim(
+                x, v, lane, axis=axis), c, p)
+
+    if "block_table" in cache:
+        raise ValueError("cache_insert_lane: paged caches carry no batch "
+                         "axis — use cache_scatter_blocks on the lane's "
+                         "mapped block ids")
+    if "layers" in cache:
+        return {"layers": [_insert(c, p, 0) for c, p in
+                           zip(cache["layers"], payload["layers"])]}
+    return {"scan": [_insert(c, p, 1) for c, p in
+                     zip(cache["scan"], payload["scan"])],
+            "tail": [_insert(c, p, 0) for c, p in
+                     zip(cache["tail"], payload["tail"])]}
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------

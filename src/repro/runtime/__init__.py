@@ -1,10 +1,13 @@
+from repro.runtime.async_serve import AsyncServer, TokenStream
 from repro.runtime.block_pool import BlockPool, blocks_for_tokens
+from repro.runtime.engine import (DecodeState, Engine, LanePayload,
+                                  make_engine, serve_engine)
 from repro.runtime.fault_tolerance import (PreemptionGuard, RestartPolicy,
                                            StragglerWatchdog)
 from repro.runtime.radix_cache import RadixCache, RadixNode
-from repro.runtime.serve_loop import (DecodeState, Request, RequestLatency,
-                                      Scheduler, ServeStats, serve,
-                                      serve_batch, serve_continuous)
+from repro.runtime.serve_loop import (Request, RequestLatency, Scheduler,
+                                      ServeStats, serve, serve_batch,
+                                      serve_continuous)
 from repro.runtime.steps import (make_admit_step, make_chunk_prefill_step,
                                  make_decode_step, make_encoder_forward,
                                  make_prefill_step, make_train_step)

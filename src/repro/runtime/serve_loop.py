@@ -1,5 +1,15 @@
 """Batched serving loops over jitted prefill / decode / admit steps.
 
+Policy / mechanism split: every jitted model call the continuous
+``Scheduler`` makes — fused admit, chunk prefill, batched decode, block
+swap in/out, copy-on-write block copy — goes through a
+:class:`repro.runtime.engine.Engine` it builds internally. The Scheduler
+is a pure POLICY layer: it decides which requests to admit, preempt or
+retire and bookkeeps lanes, block tables and stats; the Engine owns the
+MECHANISM (device dispatch, greedy readback, telemetry unwrapping,
+mesh-aware input placement). The Engine is also usable standalone through
+its decomposed prefill/insert/generate triad — see runtime/engine.py.
+
 Two schedulers share the Request / ServeStats bookkeeping:
 
 * ``serve_batch`` — STATIC group batching. Requests are packed into groups
@@ -61,6 +71,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime.block_pool import BlockPool, blocks_for_tokens
+from repro.runtime.engine import DecodeState, Engine
 from repro.runtime.radix_cache import RadixCache
 from repro.runtime.telemetry import ServeTelemetry
 
@@ -430,15 +441,6 @@ def serve_batch(prefill_fn: Callable, decode_fn: Callable, init_cache_fn,
 # Continuous batching
 # ---------------------------------------------------------------------------
 
-class DecodeState(NamedTuple):
-    """Fixed-shape per-slot decode state threaded through the jitted steps:
-    one row per lane. ``pos`` == -1 marks an idle lane (its decode output is
-    discarded and its cache writes are position-dropped)."""
-    tokens: np.ndarray          # (B, 1) int32 current token per lane
-    pos: np.ndarray             # (B, 1) int32 its absolute position (-1 idle)
-    cache: Any                  # model cache pytree with B lanes
-
-
 @dataclasses.dataclass
 class _Swapped:
     """Swap-mode preemption residue: the lane's block payload lives in a
@@ -690,6 +692,18 @@ class Scheduler:
         # back to decode_ratio after each chunk step; a chunk runs only
         # when the credit is spent (or nothing is decodable)
         self._decode_credit = 0
+        # mechanism layer: every jitted model call (fused admit, chunk,
+        # decode, swap in/out, block copy) goes through the Engine — the
+        # Scheduler only decides WHICH lanes take part and bookkeeps the
+        # results (runtime.engine for the interface contract)
+        self.engine = Engine(
+            admit_fn, decode_fn, init_cache_fn, batch_slots=batch_slots,
+            prompt_pad_len=prompt_pad_len, max_len=max_len,
+            chunk_fn=chunk_fn, swap_out_fn=swap_out_fn,
+            swap_in_fn=swap_in_fn, copy_block_fn=copy_block_fn,
+            telemetry_sink=(telemetry.quant.update
+                            if telemetry is not None
+                            and telemetry.quant is not None else None))
 
     def run(self, requests: List[Request]) -> ServeStats:
         _check_capacity(requests, self.max_len, self.pool, self._ring_tokens)
@@ -723,9 +737,7 @@ class Scheduler:
         self._lane_age = [0] * B
         self._age = 0
         self._decode_credit = 0
-        state = DecodeState(tokens=np.zeros((B, 1), np.int32),
-                            pos=np.full((B, 1), -1, np.int32),
-                            cache=self.init_cache_fn(B))
+        state = self.engine.init_state()
         if self.pool is not None:
             self.pool.reset()
             self._block_bytes = _paged_block_bytes(state.cache)
@@ -922,9 +934,7 @@ class Scheduler:
             pair = (self.pool.cow(lane, col, extend=True)
                     if self.over_commit else self.pool.cow(lane, col))
             if pair is not None:
-                cache = self.copy_block_fn(
-                    cache, jnp.asarray(pair[0], jnp.int32),
-                    jnp.asarray(pair[1], jnp.int32))
+                cache = self.engine.copy_block(cache, pair[0], pair[1])
                 self._ev("cow", lane=lane, src=int(pair[0]),
                          dst=int(pair[1]))
         return cache
@@ -965,30 +975,20 @@ class Scheduler:
             self._tracer.event(name, self._book.step, rid=rid, lane=lane,
                                **args)
 
-    def _unwrap(self, out):
-        """Steps built with quant_telemetry=True return (logits, cache,
-        telemetry_dict); fold the extra output into the QuantHealth
-        aggregator and hand back the plain pair."""
-        if len(out) == 3:
-            logits, cache, tel = out
-            if self.tel is not None and self.tel.quant is not None:
-                self.tel.quant.update(tel)
-            return logits, cache
-        return out
-
-    def _step_call(self, phase: str, fn: Callable, args,
+    def _step_call(self, phase: str, op: Callable, args,
                    n_lanes: Optional[int] = None):
-        """One jitted model call. Under tracing it becomes a phase duration
-        event (block_until_ready inside the timer, so the duration covers
-        device execution, not just dispatch)."""
+        """One engine op (a jitted model call plus greedy readback). Under
+        tracing it becomes a phase duration event — the op's host-side
+        token conversion already blocks on device execution, so the
+        duration covers the computation, not just dispatch. Telemetry
+        unwrapping happens inside the engine (telemetry_sink)."""
         if self._tracer is None:
-            return self._unwrap(fn(*args))
+            return op(*args)
         with self._tracer.phase(phase, self._book.step) as ph:
-            logits, cache = self._unwrap(fn(*args))
-            jax.block_until_ready(logits)
+            toks, cache = op(*args)
             if n_lanes is not None:
                 ph.args["lanes"] = n_lanes
-        return logits, cache
+        return toks, cache
 
     def _timed(self, phase: str, thunk: Callable, **args):
         """Time a host-side phase (block swap in/out) as a duration event."""
@@ -1054,14 +1054,11 @@ class Scheduler:
             self._register_lane(i, entries[j], group[j].prompt, book)
             self._ev("admit", rid=group[j].rid, lane=i)
         self._sync_table(state.cache)
-        logits, cache = self._step_call(
-            "admit", self.admit_fn,
-            (jnp.asarray(toks), jnp.asarray(posm),
-             jnp.asarray(admit_mask), state.cache),
-            n_lanes=len(slots))
+        first, cache = self._step_call(
+            "admit", self.engine.admit,
+            (toks, posm, admit_mask, state.cache), n_lanes=len(slots))
         book.stats.prefill_calls += 1
         book.step += 1
-        first = np.asarray(jnp.argmax(logits[:, -1:], axis=-1), np.int32)
         tokens, pos = state.tokens.copy(), state.pos.copy()
         for i in slots:
             r = lanes[i]
@@ -1167,8 +1164,8 @@ class Scheduler:
             ids = self.pool.lane_blocks(lane)
             payload = self._timed(
                 "swap_out",
-                lambda: jax.device_get(self.swap_out_fn(
-                    state.cache, jnp.asarray(self._pad_block_ids(ids)))),
+                lambda: self.engine.swap_out(state.cache,
+                                             self._pad_block_ids(ids)),
                 blocks=len(ids))
             entry.resume = _Swapped(
                 payload=payload, n_blocks=len(ids),
@@ -1279,9 +1276,9 @@ class Scheduler:
             ids = pool.lane_blocks(lane)
             cache = self._timed(
                 "swap_in",
-                lambda: self.swap_in_fn(
-                    state.cache, jnp.asarray(self._pad_block_ids(ids)),
-                    jax.device_put(res.payload)),
+                lambda: self.engine.swap_in(state.cache,
+                                            self._pad_block_ids(ids),
+                                            res.payload),
                 blocks=len(ids))
             tokens, pos = state.tokens.copy(), state.pos.copy()
             self._pref[lane] = res.pref_off
@@ -1417,14 +1414,12 @@ class Scheduler:
             reset[i] = off == 0
             ends[i] = off + c
         self._sync_table(cache)
-        logits, cache = self._step_call(
-            "chunk", self.chunk_fn,
-            (jnp.asarray(toks), jnp.asarray(posm), jnp.asarray(reset), cache),
-            n_lanes=len(prefilling))
+        last, cache = self._step_call(
+            "chunk", self.engine.chunk,
+            (toks, posm, reset, cache), n_lanes=len(prefilling))
         book.stats.prefill_calls += 1
         book.stats.chunk_steps += 1
         book.step += 1
-        last = np.asarray(jnp.argmax(logits[:, -1:], axis=-1), np.int32)
         tokens, pos = state.tokens.copy(), state.pos.copy()
         for i in prefilling:
             r = lanes[i]
@@ -1483,13 +1478,12 @@ class Scheduler:
                   if r is not None and self._pref[i] is None]
         if not active:              # every decodable lane was preempted
             return DecodeState(state.tokens, state.pos, cache)
-        logits, cache = self._step_call(
-            "decode_batch", self.decode_fn,
-            (jnp.asarray(state.tokens), jnp.asarray(state.pos), cache),
+        nxt, cache = self._step_call(
+            "decode_batch", self.engine.generate,
+            (DecodeState(state.tokens, state.pos, cache),),
             n_lanes=len(active))
         book.count_decode(len(active))
         book.step += 1
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         tokens, pos = state.tokens.copy(), state.pos.copy()
         for i in active:
             r = lanes[i]

@@ -1,0 +1,215 @@
+"""Async front-end stress tests (runtime/async_serve.py).
+
+A deterministic stub LM (tests/serve_testlib.py: next = (2*tok+1) % 32)
+makes every greedy continuation predictable, so the suite can hammer the
+AsyncServer with concurrent producers, interleaved consumption and
+mid-generation cancellation and still assert exact token streams:
+
+* concurrent producers enqueueing out of order -> every stream still gets
+  ITS OWN golden continuation (admission order is whatever the queue saw;
+  lanes are computationally independent);
+* per-request token-stream ordering: tokens arrive strictly in generation
+  order, observable incrementally while decoding is still running;
+* cancellation mid-generation frees the lane (host-side release) and the
+  stream closes with the golden PREFIX emitted so far;
+* a seeded sweep (hypothesis when installed, fixed seeds otherwise)
+  asserting async streams == the synchronous continuous Scheduler's
+  emissions for identical request sets.
+"""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from serve_testlib import VOCAB, golden, next_arr, onehot
+from repro.models.attention import KVCache
+from repro.runtime import AsyncServer, Request, serve_continuous
+from repro.runtime.engine import Engine
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:            # optional, like tests/test_properties.py
+    HAS_HYPOTHESIS = False
+
+pytestmark = [pytest.mark.engine, pytest.mark.serve]
+
+PAD = 12
+
+
+def _stub_cache(b):
+    """Minimal whole-model-shaped dense cache (one KVCache layer) so the
+    engine's lane extract/insert jits have a real structure to slice."""
+    return {"layers": [KVCache(k=jnp.zeros((b, 2, 1, 1)),
+                               v=jnp.zeros((b, 2, 1, 1)),
+                               pos=jnp.full((b, 2), -1, jnp.int32))]}
+
+
+def _stub_admit(tokens, positions, admit_mask, cache):
+    return onehot(next_arr(tokens)), cache
+
+
+def _stub_decode(tokens, pos, cache):
+    return onehot(next_arr(tokens)), cache
+
+
+def _stub_engine(batch_slots=3):
+    return Engine(_stub_admit, _stub_decode, _stub_cache,
+                  batch_slots=batch_slots, prompt_pad_len=PAD)
+
+
+def _prompt(rng, n):
+    return rng.randint(1, VOCAB, size=n).astype(np.int32)
+
+
+class TestConcurrentProducers:
+    def test_out_of_order_enqueue(self):
+        """8 producer threads submit with jittered delays — arrival order
+        is scrambled, every stream still gets its own golden tokens."""
+        results = {}
+        lock = threading.Lock()
+
+        def producer(i, srv, rng):
+            time.sleep(rng.uniform(0, 0.02))
+            prompt = _prompt(rng, 3 + i % 5)
+            s = srv.submit(prompt, 2 + i % 4, rid=i)
+            got = s.result(timeout=30)
+            with lock:
+                results[i] = (prompt, 2 + i % 4, got)
+
+        with AsyncServer(_stub_engine(batch_slots=2)) as srv:
+            threads = [threading.Thread(
+                target=producer, args=(i, srv, np.random.RandomState(100 + i)))
+                for i in range(8)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        assert len(results) == 8
+        for i, (prompt, quota, got) in results.items():
+            assert got == golden(prompt, quota), f"producer {i}"
+
+    def test_zero_quota_closes_without_admission(self):
+        with AsyncServer(_stub_engine()) as srv:
+            s = srv.submit(_prompt(np.random.RandomState(0), 4), 0)
+            assert s.result(timeout=5) == []
+            assert s.done and not s.cancelled
+
+
+class TestStreamOrdering:
+    def test_tokens_arrive_in_generation_order(self):
+        """Consume a stream INCREMENTALLY while the scheduler thread is
+        still decoding: every observed prefix is the golden prefix."""
+        prompt = _prompt(np.random.RandomState(1), 5)
+        exp = golden(prompt, 24)
+        with AsyncServer(_stub_engine(batch_slots=1)) as srv:
+            s = srv.submit(prompt, 24)
+            seen = []
+            for tok in s:                 # blocks per token, ends at close
+                seen.append(tok)
+                assert seen == exp[:len(seen)]
+        assert seen == exp
+
+    def test_interleaved_streams_stay_ordered(self):
+        """Two lanes decode in lockstep; each stream's own ordering is
+        untouched by the other lane's emissions."""
+        rng = np.random.RandomState(2)
+        prompts = [_prompt(rng, 4), _prompt(rng, 6)]
+        with AsyncServer(_stub_engine(batch_slots=2)) as srv:
+            streams = [srv.submit(p, 16, rid=i)
+                       for i, p in enumerate(prompts)]
+            outs = [s.result(timeout=30) for s in streams]
+        for p, got in zip(prompts, outs):
+            assert got == golden(p, 16)
+
+
+class TestCancellation:
+    def test_cancel_mid_generation(self):
+        """Cancel a huge-quota request once a few tokens have streamed:
+        the stream closes cancelled with a golden PREFIX, and the freed
+        lane immediately serves the next request to completion."""
+        prompt = _prompt(np.random.RandomState(3), 4)
+        with AsyncServer(_stub_engine(batch_slots=1)) as srv:
+            s = srv.submit(prompt, 10_000_000, rid="doomed")
+            it = iter(s)
+            first = [next(it) for _ in range(3)]   # wait for real progress
+            srv.cancel(s)
+            got = s.result(timeout=30)
+            assert s.cancelled
+            assert got[:3] == first
+            assert got == golden(prompt, len(got))
+            # the lane is actually free again — a follow-up request runs
+            p2 = _prompt(np.random.RandomState(4), 5)
+            s2 = srv.submit(p2, 6, rid="after")
+            assert s2.result(timeout=30) == golden(p2, 6)
+            assert not s2.cancelled
+
+    def test_cancel_queued_request_never_admits(self):
+        """A request cancelled while still queued behind a busy lane
+        closes cancelled with ZERO tokens."""
+        rng = np.random.RandomState(5)
+        with AsyncServer(_stub_engine(batch_slots=1)) as srv:
+            busy = srv.submit(_prompt(rng, 4), 10_000_000, rid="busy")
+            queued = srv.submit(_prompt(rng, 4), 8, rid="queued")
+            iter_busy = iter(busy)
+            next(iter_busy)               # busy lane is really decoding
+            srv.cancel(queued)
+            assert queued.result(timeout=30) == []
+            assert queued.cancelled
+            srv.cancel(busy)
+        assert busy.cancelled
+
+    def test_close_without_drain_cancels_everything(self):
+        rng = np.random.RandomState(6)
+        srv = AsyncServer(_stub_engine(batch_slots=1))
+        a = srv.submit(_prompt(rng, 3), 10_000_000)
+        b = srv.submit(_prompt(rng, 3), 10_000_000)
+        next(iter(a))                     # a is resident, b queued
+        srv.close(drain=False)
+        assert a.done and a.cancelled
+        assert b.done and b.cancelled
+        with pytest.raises(RuntimeError):
+            srv.submit(_prompt(rng, 3), 4)
+
+
+def _sync_scheduler_tokens(reqs, batch_slots):
+    serve_continuous(_stub_admit, _stub_decode, _stub_cache, reqs,
+                     batch_slots=batch_slots, prompt_pad_len=PAD)
+    return {r.rid: r.tokens_out for r in reqs}
+
+
+def _async_vs_sync_sweep(seed, n_requests, batch_slots):
+    """One sweep case: identical request sets through the AsyncServer and
+    the synchronous continuous Scheduler must emit identical streams."""
+    rng = np.random.RandomState(seed)
+    spec = [(int(rng.randint(1, PAD + 1)), int(rng.randint(1, 9)))
+            for _ in range(n_requests)]
+    reqs = [Request(rid=i, prompt=_prompt(rng, n), max_new_tokens=q)
+            for i, (n, q) in enumerate(spec)]
+    sync = _sync_scheduler_tokens(
+        [Request(rid=r.rid, prompt=r.prompt,
+                 max_new_tokens=r.max_new_tokens) for r in reqs],
+        batch_slots)
+    with AsyncServer(_stub_engine(batch_slots=batch_slots)) as srv:
+        streams = [srv.submit(r.prompt, r.max_new_tokens, rid=r.rid)
+                   for r in reqs]
+        outs = {s.rid: s.result(timeout=60) for s in streams}
+    assert outs == sync, f"seed {seed}: async != sync scheduler"
+
+
+class TestAsyncMatchesSyncScheduler:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5, 6, 7])
+    def test_seeded_sweep(self, seed):
+        _async_vs_sync_sweep(seed, n_requests=1 + seed % 7,
+                             batch_slots=1 + seed % 3)
+
+    if HAS_HYPOTHESIS:
+        @hypothesis.given(seed=st.integers(0, 2**16),
+                          n_requests=st.integers(1, 8),
+                          batch_slots=st.integers(1, 4))
+        @hypothesis.settings(max_examples=20, deadline=None)
+        def test_hypothesis_sweep(self, seed, n_requests, batch_slots):
+            _async_vs_sync_sweep(seed, n_requests, batch_slots)
